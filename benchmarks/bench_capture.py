@@ -1,0 +1,63 @@
+"""Fig 3 + Table X: provenance-capture overhead — TensProv vs Chapman.
+
+Per use case: pipeline wall time without capture, with TensProv capture,
+with Chapman-style capture; overheads and the Table-X speedup column.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.chapman import ChapmanIndex
+from repro.core.pipeline import ProvenanceIndex
+from repro.dataprep import ops as P
+from repro.dataprep.usecases import USECASES
+
+
+def _time(fn, reps=3):
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(quick: bool = False):
+    reps = 1 if quick else 3
+    rows = []
+    for name in USECASES:
+        mk, runner = USECASES[name]
+
+        def tens():
+            runner(ProvenanceIndex(name), mk(0))
+
+        def chap():
+            idx = ProvenanceIndex(name)
+            ch = ChapmanIndex()
+            orig = idx.record
+
+            def record(input_ids, output_id, out_table, info,
+                       keep_output=False, input_tables=None):
+                ch.capture(input_ids, input_tables, output_id, out_table, info)
+                return orig(input_ids, output_id, out_table, info,
+                            keep_output=keep_output, input_tables=input_tables)
+
+            idx.record = record
+            runner(idx, mk(0))
+
+        t_tens = _time(tens, reps)
+        t_chap = _time(chap, reps)
+        rows.append((name, t_tens, t_chap, t_chap / t_tens))
+    print("\n== Fig 3 / Table X: capture time (s) and speedup ==")
+    print(f"{'usecase':10s} {'TensProv':>10s} {'Chapman':>10s} {'speedup':>8s}")
+    for name, t, c, s in rows:
+        print(f"{name:10s} {t:10.3f} {c:10.3f} {s:8.1f}x")
+    return {"table": "Fig3/X", "rows": [
+        {"usecase": n, "tensprov_s": t, "chapman_s": c, "speedup": s}
+        for n, t, c, s in rows]}
+
+
+if __name__ == "__main__":
+    run()

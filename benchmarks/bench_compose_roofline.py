@@ -1,0 +1,130 @@
+"""Roofline of the PAPER'S TECHNIQUE at pod scale (hillclimb cell #3).
+
+The dataset-level audit of §IV — 'which source records reach the training
+set' — at production size: a packed lineage relation between 4.2M corpus
+documents and 131k packed sequences, sharded row-wise over the data axes of
+the 16x16 mesh.  Three lowered programs are analyzed (hloanal terms):
+
+  audit      AND + popcount + psum        (the backward_frontier/audit path)
+  compose32  (OR,AND)-matmul, f32 unpack  (naive composition step)
+  composebf  (OR,AND)-matmul, bf16 unpack (halved traffic, same result)
+
+plus the ANALYTIC terms for the Pallas bitplane kernel (repro.kernels), which
+executes 32 boolean MACs per uint32 VPU lane-op — the TPU-native path this
+container can only validate in interpret mode.
+
+    PYTHONPATH=src python -m benchmarks.bench_compose_roofline
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.hloanal import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+# VPU: 8 cores x (8,128) lanes x ~940 MHz ~= 1e12 lane-ops/s; each uint32
+# lane-op retires 32 boolean MACs in the bitplane kernel.
+VPU_WORD_OPS = 0.96e12
+
+N_DOCS = 4_194_304        # 4M corpus documents
+N_SEQ = 131_072           # packed sequences (the training set's row space)
+DW = N_SEQ // 32          # packed words per doc row
+
+
+def _spec(mesh, *axes):
+    return NamedSharding(mesh, P(*axes))
+
+
+def lower_audit(mesh):
+    rel = jax.ShapeDtypeStruct((N_DOCS, DW), jnp.uint32)
+    mask = jax.ShapeDtypeStruct((DW,), jnp.uint32)
+    group = jax.ShapeDtypeStruct((N_DOCS,), jnp.int32)
+
+    def audit(rel, group, mask):
+        hit_words = rel & mask[None, :]
+        hits = jax.lax.population_count(hit_words).astype(jnp.int32).sum(axis=1) > 0
+        onehot = jax.nn.one_hot(group, 8, dtype=jnp.int32)
+        return (hits.astype(jnp.int32)[:, None] * onehot).sum(axis=0)
+
+    with jax.set_mesh(mesh):
+        return jax.jit(
+            audit,
+            in_shardings=(_spec(mesh, "data", None), _spec(mesh, "data"),
+                          _spec(mesh, None)),
+            out_shardings=_spec(mesh, None),
+        ).lower(rel, group, mask).compile()
+
+
+def lower_compose(mesh, unpack_dtype):
+    # one composition hop: sequences->batches relation applied to the
+    # doc->sequence relation: (N_DOCS, N_SEQ) x (N_SEQ, N_BATCH)
+    n_batch_w = 1024 // 32
+    a = jax.ShapeDtypeStruct((N_DOCS, DW), jnp.uint32)
+    b = jax.ShapeDtypeStruct((N_SEQ, n_batch_w), jnp.uint32)
+
+    def compose(a_bits, b_bits):
+        shifts = jnp.arange(32, dtype=jnp.uint32)
+        au = ((a_bits[:, :, None] >> shifts) & 1).reshape(N_DOCS, DW * 32)
+        bu = ((b_bits[:, :, None] >> shifts) & 1).reshape(N_SEQ, n_batch_w * 32)
+        c = (au.astype(unpack_dtype) @ bu.astype(unpack_dtype)) > 0
+        cw = (c.reshape(N_DOCS, n_batch_w, 32).astype(jnp.uint32)
+              << shifts[None, None, :]).sum(axis=-1, dtype=jnp.uint32)
+        return cw
+
+    with jax.set_mesh(mesh):
+        return jax.jit(
+            compose,
+            in_shardings=(_spec(mesh, "data", None), _spec(mesh, None, None)),
+            out_shardings=_spec(mesh, "data", None),
+        ).lower(a, b).compile()
+
+
+def run(quick: bool = False):
+    mesh = make_production_mesh()
+    n_chips = 256
+    rows = []
+    for name, builder in [
+        ("audit", lambda: lower_audit(mesh)),
+        ("compose_f32", lambda: lower_compose(mesh, jnp.float32)),
+        ("compose_bf16", lambda: lower_compose(mesh, jnp.bfloat16)),
+    ]:
+        compiled = builder()
+        h = analyze_hlo(compiled.as_text())
+        t_c = h.dot_flops / PEAK_FLOPS
+        t_m = h.traffic_bytes / HBM_BW
+        t_x = h.collective_bytes / LINK_BW
+        rows.append({"variant": name, "t_compute_s": t_c, "t_memory_s": t_m,
+                     "t_collective_s": t_x,
+                     "dominant": max([("compute", t_c), ("memory", t_m),
+                                      ("collective", t_x)], key=lambda kv: kv[1])[0]})
+
+    # analytic Pallas bitplane kernel terms for the same compose hop
+    word_ops = (N_DOCS / n_chips) * N_SEQ * (1024 // 32)   # m*k*nw per device
+    t_vpu = word_ops / VPU_WORD_OPS
+    bytes_hbm = ((N_DOCS / n_chips) * DW * 4               # A shard read
+                 + N_SEQ * (1024 // 32) * 4                # B read (fits VMEM? no: streamed)
+                 + (N_DOCS / n_chips) * (1024 // 32) * 4)  # C write
+    rows.append({"variant": "compose_pallas(analytic)",
+                 "t_compute_s": t_vpu, "t_memory_s": bytes_hbm / HBM_BW,
+                 "t_collective_s": 0.0,
+                 "dominant": "compute" if t_vpu > bytes_hbm / HBM_BW else "memory"})
+
+    print("\n== Paper-technique roofline: 4.2M docs x 131k sequences, 16x16 mesh ==")
+    print(f"{'variant':26s} {'compute':>10s} {'memory':>10s} {'collective':>11s} {'dominant':>9s}")
+    for r in rows:
+        print(f"{r['variant']:26s} {r['t_compute_s']:10.4f} {r['t_memory_s']:10.4f} "
+              f"{r['t_collective_s']:11.4f} {r['dominant']:>9s}")
+    return {"table": "compose_roofline", "rows": rows}
+
+
+if __name__ == "__main__":
+    run()

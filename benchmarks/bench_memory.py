@@ -1,0 +1,58 @@
+"""Table IX: memory required for storing provenance — TensProv vs Chapman.
+
+Prints one row per use case:  usecase, tensprov_mb, chapman_mb, ratio.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.chapman import ChapmanIndex
+from repro.core.pipeline import ProvenanceIndex
+from repro.dataprep.usecases import USECASES
+
+
+class _DualRecorder:
+    """ProvenanceIndex that mirrors every record() into a ChapmanIndex."""
+
+    def __init__(self):
+        self.tens = ProvenanceIndex("dual")
+        self.chap = ChapmanIndex()
+        self._tables = {}
+
+    def run(self, name: str):
+        mk, run = USECASES[name]
+        t = mk(0)
+        orig_record = self.tens.record
+        tables = self._tables
+
+        def record(input_ids, output_id, out_table, info, keep_output=False,
+                   input_tables=None):
+            self.chap.capture(input_ids, input_tables, output_id, out_table, info)
+            tables[output_id] = out_table
+            return orig_record(input_ids, output_id, out_table, info,
+                               keep_output=keep_output, input_tables=input_tables)
+
+        self.tens.record = record
+        out = run(self.tens, t)
+        return out
+
+
+def run(quick: bool = False):
+    rows = []
+    for name in USECASES:
+        d = _DualRecorder()
+        d.run(name)
+        tens_mb = d.tens.prov_nbytes() / 1e6
+        chap_mb = d.chap.total_nbytes() / 1e6
+        rows.append((name, tens_mb, chap_mb, chap_mb / tens_mb))
+    print("\n== Table IX: provenance memory (MB) ==")
+    print(f"{'usecase':10s} {'TensProv':>10s} {'Chapman':>10s} {'ratio':>8s}")
+    for name, t, c, r in rows:
+        print(f"{name:10s} {t:10.2f} {c:10.2f} {r:8.1f}x")
+    return {"table": "IX", "rows": [
+        {"usecase": n, "tensprov_mb": t, "chapman_mb": c, "ratio": r}
+        for n, t, c, r in rows]}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,112 @@
+"""Fig 4 + Fig 5: query latency Q1-Q11 on the Census pipeline.
+
+Fig 4: all queries against MATERIALIZED endpoints (the default policy keeps
+source + sink).  Fig 5: the same queries when the answer must RETURN values
+from a NON-materialized intermediate -> per-record recomputation (§III-E).
+
+Census is extended with a join (as the paper does) so Q10/Q11 are defined.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import query as Q
+from repro.core.pipeline import ProvenanceIndex
+from repro.core.recompute import recompute_rows
+from repro.dataprep.table import Table
+from repro.dataprep.tracked import track
+from repro.dataprep.usecases import make_census
+
+
+def build_census_with_join(seed=0):
+    idx = ProvenanceIndex("census+join")
+    t = make_census(seed)
+    d = track(t, idx, "census_src")
+    # reference table joined on the a0 category (the paper modified Census
+    # to include a join for Q10/Q11)
+    ref = Table.from_columns({
+        "a0": np.arange(9, dtype=np.float32),
+        "region": np.arange(9, dtype=np.float32) % 4,
+    })
+    r = track(ref, idx, "region_ref")
+    d = d.impute([f"a{j}" for j in range(9, 15)], strategy="mean")
+    d = d.normalize([f"a{j}" for j in range(9, 15)], kind="zscore")
+    d = d.join(r, on="a0", how="inner")
+    d = d.onehot("a1", n_values=16)
+    d = d.onehot("a2", n_values=64)
+    d.mark_sink()
+    return idx, d
+
+
+def _time_ms(fn, reps=3):
+    vals = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        vals.append((time.perf_counter() - t0) * 1e3)
+    return float(np.mean(vals))
+
+
+def run(quick: bool = False):
+    idx, sink = build_census_with_join()
+    src, ref, out = "census_src", "region_ref", sink.dataset_id
+    mid = idx.ops[2].output_id      # join output (non-materialized)
+    rows = [5]
+    attrs = [3]
+
+    queries = {
+        "Q1": lambda: Q.q1_forward(idx, src, rows, out),
+        "Q2": lambda: Q.q2_backward(idx, out, rows, src),
+        "Q3": lambda: Q.q3_forward_attr(idx, src, rows, attrs, out),
+        "Q4": lambda: Q.q4_backward_attr(idx, out, rows, attrs, src),
+        "Q5": lambda: Q.q5_forward_how(idx, src, rows, out),
+        "Q6": lambda: Q.q6_backward_how(idx, out, rows, src),
+        "Q7": lambda: Q.q7_forward_attr_how(idx, src, rows, attrs, out),
+        "Q8": lambda: Q.q8_backward_attr_how(idx, out, rows, attrs, src),
+        "Q9": lambda: Q.q9_all_transformations(idx, out),
+        "Q10": lambda: Q.q10_co_contributory(idx, src, rows, ref),
+        "Q11": lambda: Q.q11_co_dependency(idx, mid, rows, src, out),
+    }
+    reps = 1 if quick else 3
+    fig4 = {name: _time_ms(fn, reps) for name, fn in queries.items()}
+
+    # Fig 5: same lineage + VALUES from the non-materialized join output
+    def recomputing(name, fn):
+        def wrapped():
+            res = fn()
+            lineage = res[0] if isinstance(res, tuple) else res
+            arr = np.asarray(lineage).reshape(-1)
+            take = [int(x) for x in arr[:4] if np.issubdtype(arr.dtype, np.integer)]
+            recompute_rows(idx, mid, take or [0])
+        return wrapped
+
+    fig5 = {}
+    for name, fn in queries.items():
+        if name == "Q9":
+            fig5[name] = fig4[name]     # metadata-only: unaffected (paper)
+            continue
+        mid_q = {
+            "Q1": lambda: Q.q1_forward(idx, src, rows, mid),
+            "Q2": lambda: Q.q2_backward(idx, mid, rows, src),
+            "Q3": lambda: Q.q3_forward_attr(idx, src, rows, attrs, mid),
+            "Q4": lambda: Q.q4_backward_attr(idx, mid, rows, attrs, src),
+            "Q5": lambda: Q.q5_forward_how(idx, src, rows, mid),
+            "Q6": lambda: Q.q6_backward_how(idx, mid, rows, src),
+            "Q7": lambda: Q.q7_forward_attr_how(idx, src, rows, attrs, mid),
+            "Q8": lambda: Q.q8_backward_attr_how(idx, mid, rows, attrs, src),
+            "Q10": lambda: Q.q10_co_contributory(idx, src, rows, ref),
+            "Q11": lambda: Q.q11_co_dependency(idx, mid, rows, src, out),
+        }[name]
+        fig5[name] = _time_ms(recomputing(name, mid_q), reps)
+
+    print("\n== Fig 4: query latency, materialized (ms) ==")
+    print("  " + "  ".join(f"{k}={v:.2f}" for k, v in fig4.items()))
+    print("== Fig 5: query latency with recomputation (ms) ==")
+    print("  " + "  ".join(f"{k}={v:.2f}" for k, v in fig5.items()))
+    return {"table": "Fig4/5", "fig4_ms": fig4, "fig5_ms": fig5}
+
+
+if __name__ == "__main__":
+    run()

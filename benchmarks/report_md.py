@@ -1,0 +1,41 @@
+"""Emit the EXPERIMENTS.md roofline tables from dry-run reports.
+
+    PYTHONPATH=src python -m benchmarks.report_md \
+        reports/dryrun_baseline.json reports/dryrun_optimized.json
+"""
+import json
+import sys
+
+from benchmarks.roofline import analyze
+
+
+def emit(path: str, mesh: str) -> str:
+    rows = analyze(path, mesh=None)
+    out = []
+    out.append(f"\n### {mesh}-pod mesh ({path})\n")
+    out.append("| arch | shape | compute s | memory s | collective s | dominant "
+               "| useful | roofline | temp GB |")
+    out.append("|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r.get("mesh") != mesh and r.get("dominant") != "skip":
+            continue
+        if r.get("dominant") == "skip":
+            if mesh == "single" and r.get("mesh") == "single":
+                out.append(f"| {r['arch']} | {r['shape']} | — | — | — | SKIP | — | — | — |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3f} "
+            f"| {r['t_memory_s']:.3f} | {r['t_collective_s']:.3f} "
+            f"| {r['dominant']} | {r['useful_ratio']:.3f} "
+            f"| {100*r['roofline_fraction']:.2f}% | {r['temp_gb']:.1f} |")
+    return "\n".join(out)
+
+
+def main():
+    for path in sys.argv[1:]:
+        for mesh in ("single", "multi"):
+            print(emit(path, mesh))
+
+
+if __name__ == "__main__":
+    main()

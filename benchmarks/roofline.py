@@ -1,0 +1,126 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape x mesh).
+
+Reads the dry-run report (reports/dryrun_baseline.json by default) and, per
+cell:
+
+    compute term    = HLO_dot_FLOPs(dev)   / peak_FLOP/s            [s]
+    memory term     = HLO_traffic(dev)     / HBM_bw                 [s]
+    collective term = collective_bytes(dev)/ link_bw                [s]
+
+(The per-device HLO numbers already divide by the chip count — see
+launch/hloanal.py; trips through lax.scan are multiplied back in.)
+
+Also: MODEL_FLOPS = 6·N·D (train) / 2·N_active·D (inference) and the
+usefulness ratio MODEL/HLO, the dominant term, and a one-line 'what would
+move it' note.  Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs.registry import get_config
+from repro.launch.shapes import SHAPES
+
+PEAK_FLOPS = 197e12         # bf16 / chip
+HBM_BW = 819e9              # B/s / chip
+LINK_BW = 50e9              # B/s / link
+
+_MOVE_NOTES = {
+    "compute": "raise per-chip utilization: fewer remat recomputes, larger "
+               "microbatch, fused attention",
+    "memory": "cut HBM traffic: tighter remat policy, fuse elementwise "
+              "chains, bf16 intermediates, avoid resharded copies",
+    "collective": "cut bytes over ICI: reduce-scatter instead of all-reduce, "
+                  "overlap collectives with compute, shard so weights stay "
+                  "resident (no per-layer all-gather)",
+}
+
+
+def model_flops_per_device(arch: str, shape: str, n_chips: int) -> float:
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    n_active = cfg.n_active_params()
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return 6.0 * n_active * tokens / n_chips
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n_active * tokens / n_chips
+    tokens = cell.global_batch              # decode: one token per request
+    return 2.0 * n_active * tokens / n_chips
+
+
+def analyze(report_path: str = "reports/dryrun_baseline.json",
+            mesh: Optional[str] = None) -> List[Dict]:
+    with open(report_path) as f:
+        data = json.load(f)
+    rows = []
+    for rec in data["results"]:
+        if rec["status"] != "ok" or "hlo" not in rec or "error" in rec.get("hlo", {}):
+            if rec["status"] == "skip":
+                rows.append({**rec, "dominant": "skip"})
+            continue
+        if mesh and rec["mesh"] != mesh:
+            continue
+        n_chips = 512 if rec["mesh"] == "multi" else 256
+        h = rec["hlo"]
+        t_c = h["dot_flops"] / PEAK_FLOPS
+        t_m = h["traffic_bytes"] / HBM_BW
+        t_x = h["collective_bytes"] / LINK_BW
+        dominant = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+                       key=lambda kv: kv[1])[0]
+        mf = model_flops_per_device(rec["arch"], rec["shape"], n_chips)
+        bound = max(t_c, t_m, t_x)
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+            "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+            "dominant": dominant,
+            "model_flops_dev": mf,
+            "useful_ratio": mf / h["dot_flops"] if h["dot_flops"] else 0.0,
+            "roofline_fraction": (mf / PEAK_FLOPS) / bound if bound else 0.0,
+            "note": _MOVE_NOTES[dominant],
+            "temp_gb": rec.get("memory", {}).get("temp_size_in_bytes", 0) / 1e9,
+        })
+    return rows
+
+
+def print_table(rows: List[Dict]) -> None:
+    print("\n== Roofline (per device, seconds per step) ==")
+    hdr = (f"{'arch':24s} {'shape':12s} {'mesh':6s} {'compute':>9s} "
+           f"{'memory':>9s} {'collect':>9s} {'domnt':>7s} {'useful':>7s} "
+           f"{'roofl%':>7s} {'tempGB':>7s}")
+    print(hdr)
+    for r in rows:
+        if r.get("dominant") == "skip":
+            print(f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:6s} "
+                  f"{'SKIP (' + r['reason'][:40] + ')':>40s}")
+            continue
+        print(f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:6s} "
+              f"{r['t_compute_s']:9.4f} {r['t_memory_s']:9.4f} "
+              f"{r['t_collective_s']:9.4f} {r['dominant'][:7]:>7s} "
+              f"{r['useful_ratio']:7.3f} {100*r['roofline_fraction']:6.1f}% "
+              f"{r['temp_gb']:7.1f}")
+
+
+def run(quick: bool = False, report: Optional[str] = None):
+    if report is None:
+        for cand in ("reports/dryrun_optimized.json", "reports/dryrun_baseline.json"):
+            if os.path.exists(cand):
+                report = cand
+                break
+    if report is None or not os.path.exists(report):
+        print("[roofline] no dry-run report found; "
+              "run `python -m repro.launch.dryrun` first")
+        return {"table": "roofline", "rows": []}
+    print(f"[roofline] report: {report}")
+    rows = analyze(report)
+    print_table(rows)
+    return {"table": "roofline", "rows": rows}
+
+
+if __name__ == "__main__":
+    import sys
+    run(report=sys.argv[1] if len(sys.argv) > 1 else "reports/dryrun_baseline.json")

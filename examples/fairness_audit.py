@@ -1,0 +1,95 @@
+"""Dataset-level fairness / consent audit via einsum composition (paper §IV).
+
+    PYTHONPATH=src python examples/fairness_audit.py
+
+The paper's motivating audit: "determine the proportion of female/male
+individuals in the output dataset using a gender attribute available only
+in the input dataset".  Record-by-record tracing would need |D'| backward
+queries; the paper instead CONTRACTS the per-op tensors into one
+src -> sink relation (Einstein summation).  We run it three ways and show
+they agree:
+
+  1. hop-by-hop Q2 per output record (the slow reference);
+  2. composed relation via boolean-semiring matmul (matrix-chain-ordered);
+  3. the MESH-SHARDED audit (rows of the relation sharded over 'data';
+     one psum crosses the mesh) — the pod-scale path.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import AxisType
+
+from repro.core import query as Q
+from repro.core.compose import compose_chain, dataset_lineage
+from repro.core.distributed import lineage_audit_sharded, shard_relation
+from repro.core.pipeline import ProvenanceIndex
+from repro.dataprep.table import Table
+from repro.dataprep.tracked import track
+from repro.kernels.ref import pack_bits
+
+rng = np.random.default_rng(0)
+N = 2000
+
+# --- a credit-scoring style pipeline -----------------------------------------
+idx = ProvenanceIndex("audit")
+src = Table.from_columns({
+    "gender": rng.integers(0, 2, N).astype(np.float32),
+    "age": rng.uniform(18, 80, N).astype(np.float32),
+    "income": rng.lognormal(10, 1, N).astype(np.float32),
+    "score": rng.normal(size=N).astype(np.float32),
+})
+t = track(src, idx, "applicants")
+t = t.impute(["income"], strategy="median")
+t = t.normalize(["age", "income"], kind="zscore")
+t = t.drop_columns(["gender"])                    # gender REMOVED mid-pipeline
+t = t.filter_rows(np.asarray(t.table.col("score")) > 0.2)   # selection step
+t = t.oversample(frac=0.25, seed=3)
+t.mark_sink()
+sink = t.dataset_id
+n_out = idx.datasets[sink].n_rows
+print(f"pipeline: {N} applicants -> {n_out} selected+augmented records "
+      f"(gender column dropped mid-way)\n")
+
+gender = src.col("gender").astype(int)
+
+# --- 1. hop-by-hop reference --------------------------------------------------
+t0 = time.perf_counter()
+back, _ = Q.backward_record_masks(idx, sink, np.arange(n_out))
+contributors = np.flatnonzero(back["applicants"])
+ref_counts = np.bincount(gender[contributors], minlength=2)
+t_ref = time.perf_counter() - t0
+
+# --- 2. einsum composition ----------------------------------------------------
+t0 = time.perf_counter()
+rel = dataset_lineage(idx, "applicants", sink, use_pallas=False)  # (N, n_out)
+hits = rel.any(axis=1)
+comp_counts = np.bincount(gender[hits], minlength=2)
+t_comp = time.perf_counter() - t0
+
+# --- 3. sharded audit (the pod-scale path) -------------------------------------
+mesh = jax.make_mesh((len(jax.devices()),), ("data",),
+                     axis_types=(AxisType.Auto,))
+bits = np.asarray(pack_bits(jnp.asarray(rel)))
+rel_sh = shard_relation(bits, mesh)
+mask = np.ones(n_out, bool)
+mw = jnp.asarray(pack_bits(jnp.asarray(mask[None]))[0])
+grp = jnp.asarray(gender.astype(np.int32))
+t0 = time.perf_counter()
+shard_counts = np.asarray(
+    lineage_audit_sharded(rel_sh[:N], grp, mw, 2, mesh))
+t_shard = time.perf_counter() - t0
+
+print(f"{'method':28s} {'female':>7s} {'male':>7s} {'time':>9s}")
+print(f"{'1. hop-by-hop Q2':28s} {ref_counts[0]:7d} {ref_counts[1]:7d} {t_ref*1e3:7.1f}ms")
+print(f"{'2. einsum composition':28s} {comp_counts[0]:7d} {comp_counts[1]:7d} {t_comp*1e3:7.1f}ms")
+print(f"{'3. sharded audit (psum)':28s} {shard_counts[0]:7d} {shard_counts[1]:7d} {t_shard*1e3:7.1f}ms")
+
+assert (ref_counts == comp_counts).all() and (ref_counts == shard_counts).all()
+sel = ref_counts / ref_counts.sum()
+base = np.bincount(gender, minlength=2) / N
+print(f"\nselection rate by gender: female {sel[0]:.3f} vs base {base[0]:.3f}; "
+      f"male {sel[1]:.3f} vs base {base[1]:.3f}")
+print("all three methods agree — the audit answers WITHOUT the gender column "
+      "ever reaching the output dataset.")

@@ -1,0 +1,6 @@
+"""Config for --arch chameleon-34b (exact assignment spec; see archs.py)."""
+from repro.configs.archs import ARCHS, SMOKES
+
+ARCH_ID = "chameleon-34b"
+CONFIG = ARCHS[ARCH_ID]
+SMOKE = SMOKES[ARCH_ID]

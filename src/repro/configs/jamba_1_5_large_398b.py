@@ -1,0 +1,6 @@
+"""Config for --arch jamba-1.5-large-398b (exact assignment spec; see archs.py)."""
+from repro.configs.archs import ARCHS, SMOKES
+
+ARCH_ID = "jamba-1.5-large-398b"
+CONFIG = ARCHS[ARCH_ID]
+SMOKE = SMOKES[ARCH_ID]

@@ -1,0 +1,6 @@
+"""Config for --arch mamba2-370m (exact assignment spec; see archs.py)."""
+from repro.configs.archs import ARCHS, SMOKES
+
+ARCH_ID = "mamba2-370m"
+CONFIG = ARCHS[ARCH_ID]
+SMOKE = SMOKES[ARCH_ID]

@@ -1,0 +1,3 @@
+"""TensProv core: tensors, schema metadata, capture, queries, composition."""
+from repro.core.provtensor import ProvTensor
+from repro.core.pipeline import ProvenanceIndex

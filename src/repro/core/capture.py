@@ -1,0 +1,52 @@
+"""Hybrid provenance capture (paper §III-B): CaptureInfo -> ProvTensor.
+
+The *hybrid* strategy is realized in :mod:`repro.dataprep.ops`: index-
+preserving ops carry their kept-row lists straight out of the operation's own
+semantics (observation over preserved dataframe indices), while the join
+threads row-ids through the merge (active capture).  This module only turns
+those payloads into the tensors of §III-A — no content diffing anywhere.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.opcat import CaptureInfo, IDENTITY_CATEGORIES, OpCategory
+from repro.core.provtensor import (
+    ProvTensor,
+    append_tensor,
+    haugment_tensor,
+    hreduce_tensor,
+    identity_tensor,
+    join_tensor,
+)
+
+__all__ = ["build_tensor"]
+
+
+def build_tensor(info: CaptureInfo) -> ProvTensor:
+    cat = info.category
+    if cat in IDENTITY_CATEGORIES:
+        # transformation / vertical reduction / vertical augmentation:
+        # 2-D binary identity tensor (paper §III-A a, b, d)
+        if info.n_out != info.n_in[0]:
+            raise ValueError(f"{info.op_name}: identity category but n_out != n_in")
+        return identity_tensor(info.n_out)
+    if cat is OpCategory.HREDUCE:
+        if info.kept_rows is None:
+            raise ValueError(f"{info.op_name}: HREDUCE needs kept_rows")
+        return hreduce_tensor(info.kept_rows, info.n_in[0])
+    if cat is OpCategory.HAUGMENT:
+        if info.links is not None:
+            # multi-parent augmentation (sequence packing et al.): raw COO
+            return ProvTensor(n_out=info.n_out, n_in=(info.n_in[0],),
+                              coo=np.asarray(info.links, dtype=np.int32))
+        if info.src_rows is None:
+            raise ValueError(f"{info.op_name}: HAUGMENT needs src_rows or links")
+        return haugment_tensor(info.src_rows, info.n_in[0])
+    if cat is OpCategory.JOIN:
+        if info.join_pairs is None:
+            raise ValueError(f"{info.op_name}: JOIN needs join_pairs")
+        return join_tensor(info.join_pairs, info.n_in[0], info.n_in[1])
+    if cat is OpCategory.APPEND:
+        return append_tensor(info.n_in[0], info.n_in[1])
+    raise ValueError(f"unknown category {cat}")

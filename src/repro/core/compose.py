@@ -1,0 +1,168 @@
+"""Einstein-summation composition of provenance chains (paper §IV).
+
+For whole-dataset lineage (the paper's fairness/consent audits), chaining
+``slice → project`` per record is wasteful; the paper instead contracts the
+tensors of consecutive operations:
+
+    T_1 ⊗ T_2 ⊗ ... ⊗ T_n   (contracting out_dim(T_j) = in_dim(T_{j+1}))
+
+Over binary relations this is the (OR, AND) boolean semiring.  We realize it
+as bit-packed boolean matmul — the :mod:`repro.kernels.bitmatmul` Pallas
+kernel on TPU, its jnp oracle elsewhere — giving one (|D_src| × |D_dst|)
+relation bitplane for the whole dataflow path.
+
+Two chain orders are supported and chosen by a flop model:
+
+* forward  (src→dst):  R = R_1 · R_2 · ... · R_n, accumulating left-to-right;
+* backward (dst→src):  transposed accumulation right-to-left.
+
+The associativity freedom matters: intermediate relation widths vary by orders
+of magnitude (a filter shrinks, a join blows up).  ``plan_chain`` does the
+classic matrix-chain dynamic program on the (rows, cols/32-word) dims.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.pipeline import OpRecord, ProvenanceIndex
+from repro.core.provtensor import ProvTensor, pack_bitplane, unpack_bitplane
+
+__all__ = [
+    "path_tensors",
+    "compose_pair",
+    "compose_chain",
+    "plan_chain",
+    "dataset_lineage",
+]
+
+
+def path_tensors(index: ProvenanceIndex, src: str, dst: str) -> List[Tuple[OpRecord, int]]:
+    """The op chain linking ``src`` to ``dst``: [(op, input_slot), ...].
+
+    Follows the (unique-producer) dataflow backward from ``dst`` and keeps the
+    ops on a path that reaches ``src``.  For multi-input ops the slot records
+    WHICH input lies on the path.
+    """
+    chain: List[Tuple[OpRecord, int]] = []
+    cur = dst
+    while cur != src:
+        if cur not in index.producer:
+            raise KeyError(f"no dataflow path {src} -> {dst} (stuck at {cur})")
+        op = index.ops[index.producer[cur]]
+        slot = None
+        for k, in_id in enumerate(op.input_ids):
+            if in_id == src or index.path_exists(src, in_id):
+                slot = k
+                break
+        if slot is None:
+            raise KeyError(f"no dataflow path {src} -> {dst} (op {op.info.op_name})")
+        chain.append((op, slot))
+        cur = op.input_ids[slot]
+    return list(reversed(chain))
+
+
+def _relation_bitplane(t: ProvTensor, slot: int) -> np.ndarray:
+    """R[i, o] forward bitplane of one op tensor for one input slot."""
+    return t.bitplane_fwd(slot)
+
+
+def compose_pair(a_bits: np.ndarray, b_bits: np.ndarray, n_mid: int, use_pallas: bool = True) -> np.ndarray:
+    """(OR,AND)-compose packed relations A (R×mid) · B (mid×C) -> (R×C) packed.
+
+    ``a_bits`` packs its columns (mid dim); ``b_bits`` is (mid, C/32).
+    """
+    from repro.kernels import ops as K  # late import: keeps numpy-only paths jax-free
+
+    return np.asarray(K.bitmatmul(a_bits, b_bits, use_pallas=use_pallas))
+
+
+def plan_chain(dims: Sequence[Tuple[int, int]]) -> List[Tuple[int, int]]:
+    """Matrix-chain-order DP over relation shapes [(r0,c0),(r1,c1)..] where
+    c_j == r_{j+1}.  Returns the multiplication order as (i, j) merges over a
+    working list — standard O(n^3) DP, n is tiny (pipeline length)."""
+    n = len(dims)
+    if n <= 1:
+        return []
+    p = [dims[0][0]] + [d[1] for d in dims]  # dimension vector
+    INF = float("inf")
+    cost = [[0.0] * n for _ in range(n)]
+    split = [[0] * n for _ in range(n)]
+    for length in range(2, n + 1):
+        for i in range(0, n - length + 1):
+            j = i + length - 1
+            cost[i][j] = INF
+            for k in range(i, j):
+                c = cost[i][k] + cost[k + 1][j] + p[i] * p[k + 1] * p[j + 1]
+                if c < cost[i][j]:
+                    cost[i][j] = c
+                    split[i][j] = k
+    order: List[Tuple[int, int]] = []
+
+    def emit(i: int, j: int) -> None:
+        if i == j:
+            return
+        k = split[i][j]
+        emit(i, k)
+        emit(k + 1, j)
+        order.append((i, k))  # merge [i..k] with [k+1..j]
+
+    emit(0, n - 1)
+    return order
+
+
+def compose_chain(
+    index: ProvenanceIndex,
+    src: str,
+    dst: str,
+    use_pallas: bool = True,
+    optimize: bool = True,
+) -> np.ndarray:
+    """Packed (|src| × |dst|/32) relation bitplane for the whole path.
+
+    ``optimize=True`` applies the matrix-chain DP (associativity); otherwise
+    left-to-right accumulation (the paper's literal chain)."""
+    chain = path_tensors(index, src, dst)
+    if not chain:
+        n = index.datasets[src].n_rows
+        return pack_bitplane(np.eye(n, dtype=bool))
+    planes = [_relation_bitplane(op.tensor, slot) for op, slot in chain]
+    rowdims = [op.tensor.n_in[slot] for op, slot in chain]
+    coldims = [op.tensor.n_out for op, _ in chain]
+
+    if not optimize or len(planes) == 1:
+        acc = planes[0]
+        for j in range(1, len(planes)):
+            acc = compose_pair(acc, planes[j], rowdims[j], use_pallas=use_pallas)
+        return acc
+
+    # matrix-chain DP over (rows, cols)
+    dims = list(zip(rowdims, coldims))
+    order = plan_chain(dims)
+    # working list of (plane, n_rows, n_cols)
+    work: List[Optional[Tuple[np.ndarray, int, int]]] = [
+        (planes[i], rowdims[i], coldims[i]) for i in range(len(planes))
+    ]
+
+    for (i, _k) in order:
+        # merge segment starting at i with the next live segment to its right
+        j = i + 1
+        while work[j] is None:
+            j += 1
+        a, ra, ca = work[i]
+        b, rb, cb = work[j]
+        merged = compose_pair(a, b, ca, use_pallas=use_pallas)
+        work[i] = (merged, ra, cb)
+        work[j] = None
+    final = next(w for w in work if w is not None)
+    return final[0]
+
+
+def dataset_lineage(
+    index: ProvenanceIndex, src: str, dst: str, use_pallas: bool = True
+) -> np.ndarray:
+    """Dense bool (|src|, |dst|) lineage relation for the whole dataset —
+    the paper's einsum use case (fairness / consent audits)."""
+    bits = compose_chain(index, src, dst, use_pallas=use_pallas)
+    return unpack_bitplane(bits, index.datasets[dst].n_rows)

@@ -1,0 +1,79 @@
+"""Operation taxonomy (paper Table I / Section II) and capture payloads."""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.schema import Bitset
+
+__all__ = ["OpCategory", "AttrMap", "CaptureInfo"]
+
+
+class OpCategory(enum.Enum):
+    TRANSFORM = "data_transformation"
+    VREDUCE = "vertical_reduction"
+    VAUGMENT = "vertical_augmentation"
+    HREDUCE = "horizontal_reduction"
+    HAUGMENT = "horizontal_augmentation"
+    JOIN = "join"
+    APPEND = "append"
+
+
+# Categories whose record-level tensor is the 2-D identity (paper §III-A).
+IDENTITY_CATEGORIES = (OpCategory.TRANSFORM, OpCategory.VREDUCE, OpCategory.VAUGMENT)
+# Categories whose attribute mapping is positional identity (paper §IV).
+IDENTITY_ATTR_CATEGORIES = (OpCategory.TRANSFORM, OpCategory.HREDUCE, OpCategory.HAUGMENT)
+
+
+@dataclasses.dataclass
+class AttrMap:
+    """Attribute mapping between ONE input schema and the output schema.
+
+    ``kind``:
+      * 'identity'  — positional identity (no bitset stored; paper §IV)
+      * 'vreduce'   — ``bitset`` over input attrs (1 = kept)
+      * 'vaugment'  — ``bitset`` over output attrs (first m = inputs used to
+                       engineer, bits >= m = the new attrs), ``m`` = #input attrs
+      * 'join'      — ``bitset`` over output attrs (1 = from this input);
+                       ``perm`` optional explicit output-attr -> input-attr list
+                       (the paper's order-changing fallback)
+    """
+
+    kind: str
+    bitset: Optional[Bitset] = None
+    m: Optional[int] = None
+    perm: Optional[np.ndarray] = None  # int32 (n_out_attrs,), -1 = not from here
+
+    def nbytes(self) -> int:
+        total = 0
+        if self.bitset is not None:
+            total += self.bitset.nbytes()
+        if self.perm is not None:
+            total += int(self.perm.nbytes)
+        return total
+
+
+@dataclasses.dataclass
+class CaptureInfo:
+    """Everything an operation hands to the provenance index at capture time."""
+
+    op_name: str                       # e.g. 'filter', 'onehot', 'join'
+    category: OpCategory
+    contextual: bool                   # paper §III-E materialization policy
+    n_out: int
+    n_in: List[int]
+    # record-level link payload (exactly one of these per category):
+    kept_rows: Optional[np.ndarray] = None    # HREDUCE: out i <- in kept[i]
+    src_rows: Optional[np.ndarray] = None     # HAUGMENT: out i <- in src[i] (-1 ok)
+    join_pairs: Optional[np.ndarray] = None   # JOIN: (n_out, 2), -1 for outer dangles
+    links: Optional[np.ndarray] = None        # HAUGMENT multi-parent: (nnz, 2) of
+                                              # (out_row, in_row) — e.g. sequence
+                                              # packing, where one packed sequence
+                                              # derives from several documents
+    # schema-level (prospective) annotations, one per input:
+    attr_maps: List[AttrMap] = dataclasses.field(default_factory=list)
+    # recomputation closure: op params needed to re-execute on a subset of rows
+    params: Dict[str, Any] = dataclasses.field(default_factory=dict)

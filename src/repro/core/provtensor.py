@@ -1,0 +1,299 @@
+"""Sparse binary provenance tensors (the paper's Section III).
+
+A :class:`ProvTensor` encodes the why-provenance of ONE data-processing
+operation: an order-(k+1) binary tensor ``T(o, i_1..i_k) = 1`` iff output
+record ``o`` derives from the tuple of input records ``(i_1..i_k)``.
+
+Representations held simultaneously (all index-only — the values list of a
+COO layout is omitted entirely because the tensor is binary, exactly as the
+paper's Section III-C argues):
+
+* ``coo`` — ``(nnz, 1+k)`` int32 triples/tuples ``(out, in_1, .., in_k)``.
+  ``-1`` marks "no link" for that input (used by append, whose provenance the
+  paper stores as two block-diagonal 2-D tensors; we fuse them into one COO
+  with a sentinel so the query engine is uniform).
+* bidirectional CSR per input ``k`` — the array-resident realization of the
+  paper's 3-level rooted-DAG (Fig. 1).  A lineage probe is
+  ``row_ptr[q] : row_ptr[q+1]`` then a bounded gather of ``col_idx`` — the
+  paper's "three list accesses", vectorized over a batch of probes.
+* optional bitplanes — ``(rows, ceil(cols/32))`` uint32 bit-packed boolean
+  matrices used by the Einstein-summation composition path
+  (:mod:`repro.core.compose`); 32 boolean entries per lane word.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+__all__ = [
+    "CSR",
+    "ProvTensor",
+    "identity_tensor",
+    "hreduce_tensor",
+    "haugment_tensor",
+    "join_tensor",
+    "append_tensor",
+    "pack_bitplane",
+    "unpack_bitplane",
+]
+
+
+# ---------------------------------------------------------------------------
+# CSR half of the bidirectional index
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class CSR:
+    """Compressed sparse rows: ``row_ptr`` (n_rows+1,), ``col_idx`` (nnz,).
+
+    ``neighbors(q)`` = ``col_idx[row_ptr[q] : row_ptr[q+1]]``.
+    """
+
+    n_rows: int
+    n_cols: int
+    row_ptr: np.ndarray  # int32 (n_rows+1,)
+    col_idx: np.ndarray  # int32 (nnz,)
+
+    @staticmethod
+    def from_pairs(rows: np.ndarray, cols: np.ndarray, n_rows: int, n_cols: int) -> "CSR":
+        rows = np.asarray(rows, dtype=np.int32)
+        cols = np.asarray(cols, dtype=np.int32)
+        keep = (rows >= 0) & (cols >= 0)
+        rows, cols = rows[keep], cols[keep]
+        order = np.lexsort((cols, rows))
+        rows, cols = rows[order], cols[order]
+        counts = np.bincount(rows, minlength=n_rows).astype(np.int64)
+        row_ptr = np.zeros(n_rows + 1, dtype=np.int32)
+        np.cumsum(counts, out=row_ptr[1:])
+        return CSR(n_rows=n_rows, n_cols=n_cols, row_ptr=row_ptr, col_idx=cols)
+
+    def neighbors(self, q: int) -> np.ndarray:
+        return self.col_idx[self.row_ptr[q] : self.row_ptr[q + 1]]
+
+    def batch_neighbors(self, qs: np.ndarray, max_deg: Optional[int] = None) -> np.ndarray:
+        """Padded (-1) batched probe: ``(len(qs), max_deg)`` int32."""
+        qs = np.asarray(qs, dtype=np.int32)
+        starts = self.row_ptr[qs]
+        ends = self.row_ptr[qs + 1]
+        degs = ends - starts
+        if max_deg is None:
+            max_deg = int(degs.max()) if len(degs) else 0
+        max_deg = max(max_deg, 1)
+        out = np.full((len(qs), max_deg), -1, dtype=np.int32)
+        for i, (s, e) in enumerate(zip(starts, ends)):  # host path; jit path in kernels
+            d = min(e - s, max_deg)
+            out[i, :d] = self.col_idx[s : s + d]
+        return out
+
+    def neighbor_mask(self, qs: np.ndarray) -> np.ndarray:
+        """OR of neighbor indicator rows for a query set -> bool (n_cols,)."""
+        mask = np.zeros(self.n_cols, dtype=bool)
+        qs = np.asarray(qs, dtype=np.int64)
+        qs = qs[(qs >= 0) & (qs < self.n_rows)]
+        if qs.size == 0:
+            return mask
+        # Vectorized ragged gather via repeat/arange.
+        starts = self.row_ptr[qs]
+        degs = self.row_ptr[qs + 1] - starts
+        total = int(degs.sum())
+        if total == 0:
+            return mask
+        flat = np.repeat(starts - np.concatenate(([0], np.cumsum(degs)[:-1])), degs) + np.arange(total)
+        mask[self.col_idx[flat]] = True
+        return mask
+
+    @property
+    def nnz(self) -> int:
+        return int(self.col_idx.shape[0])
+
+    def nbytes(self) -> int:
+        return int(self.row_ptr.nbytes + self.col_idx.nbytes)
+
+
+# ---------------------------------------------------------------------------
+# Bit-packing helpers (uint32 lanes, little-endian within the word)
+# ---------------------------------------------------------------------------
+def pack_bitplane(dense: np.ndarray) -> np.ndarray:
+    """Pack bool (R, C) -> uint32 (R, ceil(C/32)); bit j of word w = col 32w+j."""
+    dense = np.asarray(dense, dtype=bool)
+    r, c = dense.shape
+    cw = (c + 31) // 32
+    padded = np.zeros((r, cw * 32), dtype=bool)
+    padded[:, :c] = dense
+    bits = padded.reshape(r, cw, 32).astype(np.uint32)
+    shifts = np.arange(32, dtype=np.uint32)
+    return (bits << shifts[None, None, :]).sum(axis=-1, dtype=np.uint32)
+
+
+def unpack_bitplane(words: np.ndarray, n_cols: int) -> np.ndarray:
+    words = np.asarray(words, dtype=np.uint32)
+    r, cw = words.shape
+    shifts = np.arange(32, dtype=np.uint32)
+    bits = (words[:, :, None] >> shifts[None, None, :]) & np.uint32(1)
+    return bits.reshape(r, cw * 32)[:, :n_cols].astype(bool)
+
+
+# ---------------------------------------------------------------------------
+# The provenance tensor itself
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class ProvTensor:
+    """Order-(k+1) sparse binary tensor for one data-processing operation."""
+
+    n_out: int
+    n_in: tuple  # sizes of each of the k input index spaces
+    coo: np.ndarray  # (nnz, 1+k) int32; col 0 = output index; -1 = no link
+
+    _fwd: Optional[list] = dataclasses.field(default=None, repr=False)
+    _bwd: Optional[list] = dataclasses.field(default=None, repr=False)
+
+    # -- construction -------------------------------------------------------
+    def __post_init__(self) -> None:
+        self.coo = np.asarray(self.coo, dtype=np.int32)
+        if self.coo.ndim != 2 or self.coo.shape[1] != 1 + len(self.n_in):
+            raise ValueError(
+                f"coo shape {self.coo.shape} inconsistent with k={len(self.n_in)} inputs"
+            )
+
+    @property
+    def k(self) -> int:
+        return len(self.n_in)
+
+    @property
+    def nnz(self) -> int:
+        return int(self.coo.shape[0])
+
+    # -- the paper's optimized representation (bidirectional CSR) -----------
+    def fwd(self, inp: int) -> CSR:
+        """input-record -> output-records CSR for input ``inp`` (solid edges)."""
+        if self._fwd is None:
+            self._fwd = [None] * self.k
+        if self._fwd[inp] is None:
+            self._fwd[inp] = CSR.from_pairs(
+                self.coo[:, 1 + inp], self.coo[:, 0], self.n_in[inp], self.n_out
+            )
+        return self._fwd[inp]
+
+    def bwd(self, inp: int) -> CSR:
+        """output-record -> input-records CSR for input ``inp`` (dashed edges)."""
+        if self._bwd is None:
+            self._bwd = [None] * self.k
+        if self._bwd[inp] is None:
+            self._bwd[inp] = CSR.from_pairs(
+                self.coo[:, 0], self.coo[:, 1 + inp], self.n_out, self.n_in[inp]
+            )
+        return self._bwd[inp]
+
+    # -- paper §IV: slice + project, expressed on masks ---------------------
+    def forward_mask(self, inp: int, in_mask: np.ndarray) -> np.ndarray:
+        """project(slice(T, p_in, rows), p_out) with rows given as a mask."""
+        rows = np.flatnonzero(np.asarray(in_mask, dtype=bool))
+        return self.fwd(inp).neighbor_mask(rows)
+
+    def backward_mask(self, inp: int, out_mask: np.ndarray) -> np.ndarray:
+        """project(slice(T, p_out, rows), p_in)."""
+        rows = np.flatnonzero(np.asarray(out_mask, dtype=bool))
+        return self.bwd(inp).neighbor_mask(rows)
+
+    def forward_rows(self, inp: int, rows: Sequence[int]) -> np.ndarray:
+        m = np.zeros(self.n_in[inp], dtype=bool)
+        m[np.asarray(list(rows), dtype=np.int64)] = True
+        return np.flatnonzero(self.forward_mask(inp, m))
+
+    def backward_rows(self, inp: int, rows: Sequence[int]) -> np.ndarray:
+        m = np.zeros(self.n_out, dtype=bool)
+        m[np.asarray(list(rows), dtype=np.int64)] = True
+        return np.flatnonzero(self.backward_mask(inp, m))
+
+    # -- bitplane views (for the einsum composition path) -------------------
+    def bitplane_fwd(self, inp: int) -> np.ndarray:
+        """uint32 (n_in[inp], ceil(n_out/32)) relation matrix R[i, o]."""
+        dense = np.zeros((self.n_in[inp], self.n_out), dtype=bool)
+        valid = self.coo[:, 1 + inp] >= 0
+        dense[self.coo[valid, 1 + inp], self.coo[valid, 0]] = True
+        return pack_bitplane(dense)
+
+    def bitplane_bwd(self, inp: int) -> np.ndarray:
+        """uint32 (n_out, ceil(n_in[inp]/32)) relation matrix R[o, i]."""
+        dense = np.zeros((self.n_out, self.n_in[inp]), dtype=bool)
+        valid = self.coo[:, 1 + inp] >= 0
+        dense[self.coo[valid, 0], self.coo[valid, 1 + inp]] = True
+        return pack_bitplane(dense)
+
+    # -- set-semantics canonicalization (paper §III-C.a) ---------------------
+    def canonicalize(self, duplicate_groups: np.ndarray) -> "ProvTensor":
+        """Bag -> set semantics: map each output index to the smallest index of
+        its duplicate group.  ``duplicate_groups[o]`` = canonical (smallest)
+        output index of o's duplicate-value group."""
+        groups = np.asarray(duplicate_groups, dtype=np.int32)
+        if groups.shape != (self.n_out,):
+            raise ValueError("duplicate_groups must have one entry per output record")
+        coo = self.coo.copy()
+        coo[:, 0] = groups[coo[:, 0]]
+        coo = np.unique(coo, axis=0)
+        return ProvTensor(n_out=self.n_out, n_in=self.n_in, coo=coo)
+
+    # -- memory accounting (Table IX / XI) -----------------------------------
+    def nbytes(self, include_index: bool = True) -> int:
+        """Bytes of the provenance encoding: COO indices (the values list is
+        omitted — binary tensor) plus, when built, the bidirectional CSR."""
+        total = int(self.coo.nbytes)
+        if include_index:
+            for half in (self._fwd or []), (self._bwd or []):
+                for csr in half:
+                    if csr is not None:
+                        total += csr.nbytes()
+        return total
+
+
+# ---------------------------------------------------------------------------
+# Constructors per operation category (paper §III-A a..g)
+# ---------------------------------------------------------------------------
+def identity_tensor(n: int) -> ProvTensor:
+    """Data transformation / vertical reduction / vertical augmentation:
+    2-D binary identity tensor."""
+    idx = np.arange(n, dtype=np.int32)
+    return ProvTensor(n_out=n, n_in=(n,), coo=np.stack([idx, idx], axis=1))
+
+
+def hreduce_tensor(kept: np.ndarray, n_in: int) -> ProvTensor:
+    """Horizontal reduction: masking tensor.  ``kept[i]`` = input index that
+    became output record i."""
+    kept = np.asarray(kept, dtype=np.int32)
+    out = np.arange(len(kept), dtype=np.int32)
+    return ProvTensor(n_out=len(kept), n_in=(n_in,), coo=np.stack([out, kept], axis=1))
+
+
+def haugment_tensor(src: np.ndarray, n_in: int) -> ProvTensor:
+    """Horizontal augmentation: ``src[o]`` = input index output o derives from,
+    or -1 for synthetic rows with no establishable mapping (paper §III-A e)."""
+    src = np.asarray(src, dtype=np.int32)
+    out = np.arange(len(src), dtype=np.int32)
+    coo = np.stack([out, src], axis=1)
+    return ProvTensor(n_out=len(src), n_in=(n_in,), coo=coo)
+
+
+def join_tensor(pairs: np.ndarray, n_left: int, n_right: int, n_out: Optional[int] = None) -> ProvTensor:
+    """Join: order-3 tensor.  ``pairs`` is (n_out, 2) of (left_idx, right_idx)
+    for each output record, or -1 for the dangling side of outer joins."""
+    pairs = np.asarray(pairs, dtype=np.int32)
+    if n_out is None:
+        n_out = len(pairs)
+    out = np.arange(len(pairs), dtype=np.int32)
+    coo = np.concatenate([out[:, None], pairs], axis=1)
+    return ProvTensor(n_out=n_out, n_in=(n_left, n_right), coo=coo)
+
+
+def append_tensor(n_left: int, n_right: int) -> ProvTensor:
+    """Append: the paper's two block-diagonal 2-D tensors, fused via the -1
+    sentinel.  Output rows [0, n_left) link to the left input, rows
+    [n_left, n_left+n_right) to the right input."""
+    out = np.arange(n_left + n_right, dtype=np.int32)
+    left = np.where(out < n_left, out, -1).astype(np.int32)
+    right = np.where(out >= n_left, out - n_left, -1).astype(np.int32)
+    return ProvTensor(
+        n_out=n_left + n_right,
+        n_in=(n_left, n_right),
+        coo=np.stack([out, left, right], axis=1),
+    )

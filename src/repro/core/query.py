@@ -1,0 +1,344 @@
+"""Provenance query processing (paper Section IV, Table VII: Q1-Q11).
+
+Record-level queries chain ``project(slice(T, p_in, rows), p_out)`` hops —
+realized as batched CSR probes (the optimized representation of §III-C) —
+over the topologically-ordered op DAG.  Attribute-level queries additionally
+thread (row-set x attr-set) terms through the Table-VI bitset maps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro.core.opcat import AttrMap, OpCategory
+from repro.core.pipeline import OpRecord, ProvenanceIndex
+from repro.core import schema as sc
+
+__all__ = [
+    "Hop",
+    "forward_record_masks",
+    "backward_record_masks",
+    "q1_forward",
+    "q2_backward",
+    "q3_forward_attr",
+    "q4_backward_attr",
+    "q5_forward_how",
+    "q6_backward_how",
+    "q7_forward_attr_how",
+    "q8_backward_attr_how",
+    "q9_all_transformations",
+    "q10_co_contributory",
+    "q11_co_dependency",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Hop:
+    """One op traversal — the *how* part of how-provenance (Q5-Q8)."""
+
+    op_id: int
+    op_name: str
+    category: str
+    src_dataset: str
+    dst_dataset: str
+    n_records: int
+
+
+def _as_mask(rows, n: int) -> np.ndarray:
+    if isinstance(rows, np.ndarray) and rows.dtype == bool:
+        return rows
+    m = np.zeros(n, dtype=bool)
+    m[np.asarray(list(rows), dtype=np.int64)] = True
+    return m
+
+
+# ---------------------------------------------------------------------------
+# Record-level propagation (Q1/Q2 cores)
+# ---------------------------------------------------------------------------
+def forward_record_masks(
+    index: ProvenanceIndex, src: str, rows, collect_hops: bool = False
+) -> Tuple[Dict[str, np.ndarray], List[Hop]]:
+    """Propagate a row mask from ``src`` to every reachable dataset."""
+    masks: Dict[str, np.ndarray] = {src: _as_mask(rows, index.datasets[src].n_rows)}
+    hops: List[Hop] = []
+    for op in index.downstream_ops(src):
+        out_n = op.tensor.n_out
+        out_mask = masks.get(op.output_id, np.zeros(out_n, dtype=bool))
+        for k, in_id in enumerate(op.input_ids):
+            if in_id in masks and masks[in_id].any():
+                contrib = op.tensor.forward_mask(k, masks[in_id])
+                if collect_hops and contrib.any():
+                    hops.append(
+                        Hop(op.op_id, op.info.op_name, op.info.category.value,
+                            in_id, op.output_id, int(contrib.sum()))
+                    )
+                out_mask |= contrib
+        masks[op.output_id] = out_mask
+    return masks, hops
+
+
+def backward_record_masks(
+    index: ProvenanceIndex, dst: str, rows, collect_hops: bool = False
+) -> Tuple[Dict[str, np.ndarray], List[Hop]]:
+    masks: Dict[str, np.ndarray] = {dst: _as_mask(rows, index.datasets[dst].n_rows)}
+    hops: List[Hop] = []
+    for op in reversed(index.upstream_ops(dst)):
+        if op.output_id not in masks or not masks[op.output_id].any():
+            continue
+        for k, in_id in enumerate(op.input_ids):
+            contrib = op.tensor.backward_mask(k, masks[op.output_id])
+            if collect_hops and contrib.any():
+                hops.append(
+                    Hop(op.op_id, op.info.op_name, op.info.category.value,
+                        op.output_id, in_id, int(contrib.sum()))
+                )
+            prev = masks.get(in_id, np.zeros(index.datasets[in_id].n_rows, dtype=bool))
+            masks[in_id] = prev | contrib
+    return masks, hops
+
+
+def q1_forward(index: ProvenanceIndex, src: str, rows, dst: str) -> np.ndarray:
+    """Q1: records in ``dst`` derived from ``rows`` of ``src``."""
+    masks, _ = forward_record_masks(index, src, rows)
+    if dst not in masks:
+        return np.zeros(0, dtype=np.int64)
+    return np.flatnonzero(masks[dst])
+
+
+def q2_backward(index: ProvenanceIndex, dst: str, rows, src: str) -> np.ndarray:
+    """Q2: records in ``src`` that contributed to ``rows`` of ``dst``."""
+    masks, _ = backward_record_masks(index, dst, rows)
+    if src not in masks:
+        return np.zeros(0, dtype=np.int64)
+    return np.flatnonzero(masks[src])
+
+
+def q5_forward_how(index: ProvenanceIndex, src: str, rows, dst: str):
+    masks, hops = forward_record_masks(index, src, rows, collect_hops=True)
+    recs = np.flatnonzero(masks[dst]) if dst in masks else np.zeros(0, dtype=np.int64)
+    return recs, hops
+
+
+def q6_backward_how(index: ProvenanceIndex, dst: str, rows, src: str):
+    masks, hops = backward_record_masks(index, dst, rows, collect_hops=True)
+    recs = np.flatnonzero(masks[src]) if src in masks else np.zeros(0, dtype=np.int64)
+    return recs, hops
+
+
+# ---------------------------------------------------------------------------
+# Attribute maps (Table VI bitsets -> per-op attr propagation)
+# ---------------------------------------------------------------------------
+def _attrs_forward(amap: AttrMap, attrs: np.ndarray, n_out_attrs: int) -> np.ndarray:
+    """Map an input-attr mask to the output-attr mask through one op input."""
+    out = np.zeros(n_out_attrs, dtype=bool)
+    src = np.flatnonzero(attrs)
+    if amap.kind == "identity":
+        valid = src[src < n_out_attrs]
+        out[valid] = True
+        return out
+    if amap.kind == "vreduce":
+        b = amap.bitset
+        if amap.perm is not None:  # order-changing fallback (paper: int list)
+            for j, a in enumerate(amap.perm):
+                if attrs[a]:
+                    out[j] = True
+            return out
+        for a in src:
+            j = sc.map_vr_f(b, int(a))
+            if j is not None:
+                out[j] = True
+        return out
+    if amap.kind == "vaugment":
+        b, m = amap.bitset, amap.m
+        new_attrs = [j for j in range(m, b.n) if b.test(j)]
+        for a in src:
+            out[sc.map_va_f(m, int(a))] = True           # preserved position
+            if a < m and b.test(int(a)):                  # engineered features
+                for j in new_attrs:
+                    out[j] = True
+        return out
+    if amap.kind == "join":
+        if amap.perm is not None:
+            for j, a in enumerate(amap.perm):
+                if a >= 0 and attrs[a]:
+                    out[j] = True
+            return out
+        for a in src:
+            j = sc.map_join_f(amap.bitset, int(a))
+            if j is not None:
+                out[j] = True
+        return out
+    raise ValueError(amap.kind)
+
+
+def _attrs_backward(amap: AttrMap, attrs: np.ndarray, n_in_attrs: int) -> np.ndarray:
+    out = np.zeros(n_in_attrs, dtype=bool)
+    src = np.flatnonzero(attrs)
+    if amap.kind == "identity":
+        valid = src[src < n_in_attrs]
+        out[valid] = True
+        return out
+    if amap.kind == "vreduce":
+        if amap.perm is not None:
+            for j in src:
+                out[amap.perm[j]] = True
+            return out
+        for j in src:
+            out[sc.map_vr_b(amap.bitset, int(j))] = True
+        return out
+    if amap.kind == "vaugment":
+        for j in src:
+            for a in sc.map_va_b(amap.bitset, amap.m, int(j)):
+                out[a] = True
+        return out
+    if amap.kind == "join":
+        if amap.perm is not None:
+            for j in src:
+                if amap.perm[j] >= 0:
+                    out[amap.perm[j]] = True
+            return out
+        for j in src:
+            a = sc.map_join_b(amap.bitset, int(j))
+            if a is not None:
+                out[a] = True
+        return out
+    raise ValueError(amap.kind)
+
+
+# ---------------------------------------------------------------------------
+# Attribute-level queries (Q3/Q4/Q7/Q8): (row-mask, attr-mask) terms
+# ---------------------------------------------------------------------------
+def _attr_propagate(
+    index: ProvenanceIndex, start: str, rows, attrs, direction: str,
+    collect_hops: bool = False,
+):
+    ds0 = index.datasets[start]
+    terms: Dict[str, List[Tuple[np.ndarray, np.ndarray]]] = {
+        start: [(_as_mask(rows, ds0.n_rows), _as_mask(attrs, ds0.n_cols))]
+    }
+    hops: List[Hop] = []
+    ops = (
+        index.downstream_ops(start)
+        if direction == "fwd"
+        else list(reversed(index.upstream_ops(start)))
+    )
+    for op in ops:
+        out_ds = index.datasets[op.output_id]
+        if direction == "fwd":
+            for k, in_id in enumerate(op.input_ids):
+                for (rm, am) in terms.get(in_id, []):
+                    if not rm.any():
+                        continue
+                    new_rm = op.tensor.forward_mask(k, rm)
+                    new_am = _attrs_forward(op.info.attr_maps[k], am, out_ds.n_cols)
+                    if new_rm.any() and new_am.any():
+                        terms.setdefault(op.output_id, []).append((new_rm, new_am))
+                        if collect_hops:
+                            hops.append(Hop(op.op_id, op.info.op_name,
+                                            op.info.category.value, in_id,
+                                            op.output_id, int(new_rm.sum())))
+        else:
+            for (rm, am) in terms.get(op.output_id, []):
+                if not rm.any():
+                    continue
+                for k, in_id in enumerate(op.input_ids):
+                    in_ds = index.datasets[in_id]
+                    new_rm = op.tensor.backward_mask(k, rm)
+                    new_am = _attrs_backward(op.info.attr_maps[k], am, in_ds.n_cols)
+                    if new_rm.any() and new_am.any():
+                        terms.setdefault(in_id, []).append((new_rm, new_am))
+                        if collect_hops:
+                            hops.append(Hop(op.op_id, op.info.op_name,
+                                            op.info.category.value, op.output_id,
+                                            in_id, int(new_rm.sum())))
+    return terms, hops
+
+
+def _cells(terms: List[Tuple[np.ndarray, np.ndarray]]) -> np.ndarray:
+    """Union of (rows x attrs) products -> (n, 2) sorted unique cell list."""
+    cells = set()
+    for rm, am in terms:
+        rs, as_ = np.flatnonzero(rm), np.flatnonzero(am)
+        for r in rs:
+            for a in as_:
+                cells.add((int(r), int(a)))
+    return np.array(sorted(cells), dtype=np.int64).reshape(-1, 2)
+
+
+def q3_forward_attr(index, src: str, rows, attrs, dst: str) -> np.ndarray:
+    """Q3: attribute values (cells) of ``dst`` derived from the given cells."""
+    terms, _ = _attr_propagate(index, src, rows, attrs, "fwd")
+    return _cells(terms.get(dst, []))
+
+
+def q4_backward_attr(index, dst: str, rows, attrs, src: str) -> np.ndarray:
+    terms, _ = _attr_propagate(index, dst, rows, attrs, "bwd")
+    return _cells(terms.get(src, []))
+
+
+def q7_forward_attr_how(index, src: str, rows, attrs, dst: str):
+    terms, hops = _attr_propagate(index, src, rows, attrs, "fwd", collect_hops=True)
+    return _cells(terms.get(dst, [])), hops
+
+
+def q8_backward_attr_how(index, dst: str, rows, attrs, src: str):
+    terms, hops = _attr_propagate(index, dst, rows, attrs, "bwd", collect_hops=True)
+    return _cells(terms.get(src, [])), hops
+
+
+# ---------------------------------------------------------------------------
+# Q9: all transformations applied to a dataset (metadata only — no tensors)
+# ---------------------------------------------------------------------------
+def q9_all_transformations(index: ProvenanceIndex, dataset: str) -> List[Dict]:
+    return [
+        {
+            "op_id": op.op_id,
+            "op": op.info.op_name,
+            "category": op.info.category.value,
+            "contextual": op.info.contextual,
+            "inputs": op.input_ids,
+            "output": op.output_id,
+        }
+        for op in index.upstream_ops(dataset)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Q10/Q11: co-contributory and co-dependency (forward + backward combos)
+# ---------------------------------------------------------------------------
+def q10_co_contributory(
+    index: ProvenanceIndex, d1: str, rows, d2: str, via: Optional[str] = None
+) -> np.ndarray:
+    """Records of ``d2`` used together with ``rows`` of ``d1`` to create new
+    records (in ``via``; defaults to any common descendant)."""
+    fwd_masks, _ = forward_record_masks(index, d1, rows)
+    if via is None:
+        candidates = [
+            d for d, m in fwd_masks.items()
+            if d != d1 and m.any() and index.path_exists(d2, d)
+        ]
+        if not candidates:
+            return np.zeros(0, dtype=np.int64)
+        via = candidates[-1]
+    if via not in fwd_masks or not fwd_masks[via].any():
+        return np.zeros(0, dtype=np.int64)
+    back, _ = backward_record_masks(index, via, fwd_masks[via])
+    if d2 not in back:
+        return np.zeros(0, dtype=np.int64)
+    return np.flatnonzero(back[d2])
+
+
+def q11_co_dependency(
+    index: ProvenanceIndex, d2: str, rows, d1: str, d3: str
+) -> np.ndarray:
+    """Records of ``d3`` lineage-dependent on the ``d1`` records that
+    generated ``rows`` of ``d2``."""
+    back, _ = backward_record_masks(index, d2, rows)
+    if d1 not in back or not back[d1].any():
+        return np.zeros(0, dtype=np.int64)
+    fwd, _ = forward_record_masks(index, d1, back[d1])
+    if d3 not in fwd:
+        return np.zeros(0, dtype=np.int64)
+    return np.flatnonzero(fwd[d3])

@@ -1,0 +1,202 @@
+"""Per-record recomputation of non-materialized intermediates (paper §III-E).
+
+The materialization policy keeps only pipeline sources/sinks and inputs of
+*contextual* operations.  A query that must RETURN data from a
+non-materialized intermediate dataset re-executes, per record, the op chain
+from the nearest materialized ancestor — but only on the provenance-related
+rows the tensors identify, never the whole dataset.
+
+* localized op: re-run its value function on exactly the gathered input rows
+  (contextual ops re-apply their STORED whole-dataset statistics, so the
+  result is numerically identical to the original run);
+* oversample's jitter is regenerated from the stored seed, so even synthetic
+  rows recompute exactly;
+* join/append outputs are assembled directly from their provenance-related
+  input rows via the stored attribute permutations.
+
+``recompute_rows(index, dataset, rows)`` returns a Table whose i-th row is
+record ``rows[i]`` of ``dataset``.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.opcat import OpCategory
+from repro.core.pipeline import OpRecord, ProvenanceIndex
+from repro.dataprep import ops as P
+from repro.dataprep.table import Table
+
+__all__ = ["materialized_frontier", "recompute_rows", "fetch_rows"]
+
+
+def materialized_frontier(index: ProvenanceIndex, dataset: str) -> str:
+    """Nearest materialized ancestor of ``dataset`` (itself if materialized)."""
+    cur = dataset
+    while not index.datasets[cur].materialized:
+        if cur not in index.producer:
+            raise RuntimeError(f"{dataset}: no materialized ancestor (corrupt policy)")
+        op = index.ops[index.producer[cur]]
+        nxt = None
+        for in_id in op.input_ids:
+            if index.datasets[in_id].materialized:
+                nxt = in_id
+                break
+        cur = nxt if nxt is not None else op.input_ids[0]
+    return cur
+
+
+def fetch_rows(index: ProvenanceIndex, dataset: str, rows: np.ndarray) -> Table:
+    """Rows (duplicates allowed, any order) of ``dataset``, aligned 1:1."""
+    rows = np.asarray(rows, dtype=np.int64)
+    uniq, inv = np.unique(rows, return_inverse=True)
+    sub = recompute_rows(index, dataset, uniq)
+    return sub.take_rows(inv)
+
+
+def _apply_rowwise(op: OpRecord, t: Table) -> Table:
+    """Re-execute a row-local (identity-category) op on a row subset."""
+    info = op.info
+    name, params = info.op_name, info.params
+    out = t.copy()
+    if name.startswith("transform:"):
+        j = t.cid(params["col"])
+        out.data[:, j] = P.TRANSFORM_FNS[params["fn"]](
+            t.data[:, j], params["fn_params"]).astype(np.float32)
+        return out
+    if name.startswith("normalize:"):
+        for c, st in params["stats"].items():
+            j = t.cid(c)
+            if params["kind"] == "zscore":
+                mu, sd = st
+                out.data[:, j] = (t.data[:, j] - mu) / (sd or 1.0)
+            else:
+                lo, hi = st
+                out.data[:, j] = (t.data[:, j] - lo) / ((hi - lo) or 1.0)
+        return out
+    if name.startswith("impute:"):
+        for c, fill in params["fills"].items():
+            j = t.cid(c)
+            null = out.null[:, j]
+            out.data[null, j] = fill
+            out.null[:, j] = False
+        return out
+    if name.startswith("discretize:"):
+        j = t.cid(params["col"])
+        edges = np.asarray(params["edges"], dtype=np.float32)
+        out.data[:, j] = np.searchsorted(edges, t.data[:, j]).astype(np.float32)
+        return out
+    if name in ("select_columns", "drop_columns"):
+        keep = (params["cols"] if name == "select_columns"
+                else [c for c in t.columns if c not in set(params["cols"])])
+        return t.take_cols(keep)
+    if name == "onehot":
+        out2, _ = P.onehot(t, params["col"], params["n_values"])
+        return out2
+    if name == "string_indexer":
+        j = t.cid(params["col"])
+        domain = np.asarray(params["domain"], dtype=np.float32)
+        codes = np.searchsorted(domain, t.data[:, j]).astype(np.float32)
+        return Table(
+            columns=t.columns + [f"{params['col']}#idx"],
+            data=np.concatenate([t.data, codes[:, None]], axis=1),
+            null=np.concatenate([t.null, t.null[:, j: j + 1]], axis=1),
+            index=t.index.copy(), vocab=dict(t.vocab),
+        )
+    if name == "space_transform":
+        out2, _ = P.space_transform(t, params["cols"], params["proj"],
+                                    params.get("prefix", "pc"))
+        return out2
+    raise NotImplementedError(name)
+
+
+def recompute_rows(index: ProvenanceIndex, dataset: str, rows: Sequence[int]) -> Table:
+    """Table whose i-th row is record rows[i] of ``dataset`` (exact values)."""
+    rows = np.asarray(list(rows), dtype=np.int64)
+    rec = index.datasets[dataset]
+    if rec.materialized:
+        return rec.table.take_rows(rows)
+
+    op = index.ops[index.producer[dataset]]
+    info = op.info
+    cat = info.category
+
+    if cat in (OpCategory.TRANSFORM, OpCategory.VREDUCE, OpCategory.VAUGMENT):
+        sub = fetch_rows(index, op.input_ids[0], rows)
+        return _apply_rowwise(op, sub)
+
+    if cat is OpCategory.HREDUCE:
+        in_rows = np.asarray(info.kept_rows, dtype=np.int64)[rows]
+        return fetch_rows(index, op.input_ids[0], in_rows)
+
+    if cat is OpCategory.HAUGMENT:
+        if info.src_rows is None:
+            raise NotImplementedError(
+                f"{info.op_name}: multi-parent augmentation has no per-row "
+                "value recomputation (packed sequences are token streams)")
+        src = np.asarray(info.src_rows, dtype=np.int64)[rows]
+        if (src < 0).any():
+            raise ValueError(f"{info.op_name}: rows {rows[src < 0]} are "
+                             "synthetic with no established source")
+        sub = fetch_rows(index, op.input_ids[0], src)
+        # regenerate oversample jitter exactly from the stored seed
+        if info.op_name == "oversample" and info.params.get("noise", 0) > 0:
+            n_in = info.n_in[0]
+            n_new = info.n_out - n_in
+            rng = np.random.default_rng(info.params["seed"])
+            rng.integers(0, n_in, size=n_new)          # skip the picks draw
+            noise = rng.normal(0.0, info.params["noise"],
+                               size=(n_new, sub.n_cols)).astype(np.float32)
+            synth = rows >= n_in
+            sub.data[synth] += noise[rows[synth] - n_in]
+        return sub
+
+    if cat is OpCategory.JOIN:
+        pairs = np.asarray(info.join_pairs, dtype=np.int64)[rows]
+        has_l, has_r = pairs[:, 0] >= 0, pairs[:, 1] >= 0
+        left = fetch_rows(index, op.input_ids[0], np.maximum(pairs[:, 0], 0))
+        right = fetch_rows(index, op.input_ids[1], np.maximum(pairs[:, 1], 0))
+        # assemble through the stored output-attr -> input-attr permutations
+        perm_l = op.info.attr_maps[0].perm
+        perm_r = op.info.attr_maps[1].perm
+        n_attrs = len(perm_l)
+        cols = index.datasets[dataset].columns
+        data = np.zeros((len(rows), n_attrs), np.float32)
+        null = np.ones((len(rows), n_attrs), bool)
+        for a in range(n_attrs):
+            if perm_l[a] >= 0:
+                data[has_l, a] = left.data[has_l, perm_l[a]]
+                null[has_l, a] = left.null[has_l, perm_l[a]]
+            if perm_r[a] >= 0:
+                data[has_r & ~(has_l & (perm_l[a] >= 0)), a] = \
+                    right.data[has_r & ~(has_l & (perm_l[a] >= 0)), perm_r[a]]
+                null[has_r & ~(has_l & (perm_l[a] >= 0)), a] = \
+                    right.null[has_r & ~(has_l & (perm_l[a] >= 0)), perm_r[a]]
+        return Table(columns=list(cols), data=data, null=null,
+                     index=rows.copy(), vocab={})
+
+    if cat is OpCategory.APPEND:
+        n_l = info.n_in[0]
+        is_l = rows < n_l
+        out_cols = index.datasets[dataset].columns
+        perm_l = op.info.attr_maps[0].perm
+        perm_r = op.info.attr_maps[1].perm
+        data = np.zeros((len(rows), len(out_cols)), np.float32)
+        null = np.ones((len(rows), len(out_cols)), bool)
+        if is_l.any():
+            lt = fetch_rows(index, op.input_ids[0], rows[is_l])
+            for a in range(len(out_cols)):
+                if perm_l[a] >= 0:
+                    data[is_l, a] = lt.data[:, perm_l[a]]
+                    null[is_l, a] = lt.null[:, perm_l[a]]
+        if (~is_l).any():
+            rt = fetch_rows(index, op.input_ids[1], rows[~is_l] - n_l)
+            for a in range(len(out_cols)):
+                if perm_r[a] >= 0:
+                    data[~is_l, a] = rt.data[:, perm_r[a]]
+                    null[~is_l, a] = rt.null[:, perm_r[a]]
+        return Table(columns=list(out_cols), data=data, null=null,
+                     index=rows.copy(), vocab={})
+
+    raise NotImplementedError(cat)

@@ -1,0 +1,163 @@
+"""Prospective schema metadata: bitsets + attribute-mapping functions.
+
+Implements the paper's Table VI annotations and the forward/backward
+attribute maps of Section IV ("Processing Attribute-Based Provenance
+Queries").  A bitset costs one machine word per 32 attributes — this is the
+paper's key trick for attribute-value provenance without per-cell tracking.
+
+Host (numpy) versions here; the batched rank/select used on-device lives in
+``repro.kernels`` (``bitset_rank``) and is validated against these.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+__all__ = [
+    "Bitset",
+    "map_vr_f",
+    "map_vr_b",
+    "map_va_f",
+    "map_va_b",
+    "map_join_f",
+    "map_join_b",
+    "perm_forward",
+    "perm_backward",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Bitset:
+    """Packed little-endian bitset over attribute positions [0, n)."""
+
+    n: int
+    words: np.ndarray  # uint32 (ceil(n/32),)
+
+    @staticmethod
+    def from_bits(bits) -> "Bitset":
+        bits = np.asarray(bits, dtype=bool)
+        n = len(bits)
+        nw = max((n + 31) // 32, 1)
+        padded = np.zeros(nw * 32, dtype=bool)
+        padded[:n] = bits
+        shifts = np.arange(32, dtype=np.uint32)
+        words = (padded.reshape(nw, 32).astype(np.uint32) << shifts[None, :]).sum(
+            axis=-1, dtype=np.uint32
+        )
+        return Bitset(n=n, words=words)
+
+    @staticmethod
+    def from_indices(indices, n: int) -> "Bitset":
+        bits = np.zeros(n, dtype=bool)
+        bits[np.asarray(list(indices), dtype=np.int64)] = True
+        return Bitset.from_bits(bits)
+
+    @staticmethod
+    def from_string(s: str) -> "Bitset":
+        """Paper notation, e.g. '10011' = attrs 0, 3, 4 set."""
+        return Bitset.from_bits([c == "1" for c in s])
+
+    def to_bits(self) -> np.ndarray:
+        shifts = np.arange(32, dtype=np.uint32)
+        bits = (self.words[:, None] >> shifts[None, :]) & np.uint32(1)
+        return bits.reshape(-1)[: self.n].astype(bool)
+
+    def test(self, i: int) -> bool:
+        return bool((self.words[i // 32] >> np.uint32(i % 32)) & np.uint32(1))
+
+    def rank(self, i: int) -> int:
+        """Number of set bits in positions [0, i] (inclusive) — paper's
+        ``sum_{k<=i} b_k``."""
+        if i < 0:
+            return 0
+        i = min(i, self.n - 1)
+        w, b = i // 32, i % 32
+        full = int(sum(int(x).bit_count() for x in self.words[:w]))
+        mask = np.uint32(0xFFFFFFFF) >> np.uint32(31 - b)
+        return full + int(self.words[w] & mask).bit_count()
+
+    def select(self, r: int) -> Optional[int]:
+        """Position of the r-th (1-based) set bit, or None."""
+        if r <= 0:
+            return None
+        bits = self.to_bits()
+        idx = np.flatnonzero(bits)
+        return int(idx[r - 1]) if r <= len(idx) else None
+
+    def popcount(self) -> int:
+        return int(sum(int(x).bit_count() for x in self.words))
+
+    def indices(self) -> np.ndarray:
+        return np.flatnonzero(self.to_bits())
+
+    def __str__(self) -> str:  # paper notation
+        return "".join("1" if b else "0" for b in self.to_bits())
+
+    def nbytes(self) -> int:
+        return int(self.words.nbytes)
+
+
+# ---------------------------------------------------------------------------
+# Attribute maps (paper §IV).  All positions are 0-based here; the paper is
+# 1-based — rank() compensates.
+# ---------------------------------------------------------------------------
+def map_vr_f(b: Bitset, i: int) -> Optional[int]:
+    """Vertical reduction, forward: input attr i -> output attr or None."""
+    if not b.test(i):
+        return None
+    return b.rank(i) - 1  # 0-based position among kept attributes
+
+
+def map_vr_b(b: Bitset, i: int) -> int:
+    """Vertical reduction, backward: output attr i -> input attr j with
+    rank(j) == i+1 and b_j = 1 (the paper's select)."""
+    j = b.select(i + 1)
+    if j is None:
+        raise IndexError(f"output attribute {i} out of range for bitset {b}")
+    return j
+
+
+def map_va_f(m: int, i: int) -> int:
+    """Vertical augmentation, forward: identity (all input attrs preserved)."""
+    if i >= m:
+        raise IndexError(f"input attribute {i} >= m={m}")
+    return i
+
+
+def map_va_b(b: Bitset, m: int, i: int) -> List[int]:
+    """Vertical augmentation, backward: output attr i -> source input attrs.
+    i < m: same position.  i >= m: the set-bit positions of b within [0, m)
+    (the input attrs used to engineer the new features)."""
+    if i < m:
+        return [i]
+    return [int(j) for j in b.indices() if j < m]
+
+
+def map_join_f(b: Bitset, i: int) -> Optional[int]:
+    """Join, forward: input attr i (0-based within this input dataset) ->
+    output attr position j with rank(j) == i+1, b_j = 1."""
+    return b.select(i + 1)
+
+
+def map_join_b(b: Bitset, i: int) -> Optional[int]:
+    """Join, backward: output attr i -> attr position within this input
+    dataset, or None if attr i does not originate from it."""
+    if i >= b.n or not b.test(i):
+        return None
+    return b.rank(i) - 1
+
+
+# ---------------------------------------------------------------------------
+# Order-changing vertical reduction (paper: "a list of integers can be used
+# instead of a bitset") — a permutation list [4,2,5] style annotation.
+# ---------------------------------------------------------------------------
+def perm_forward(perm: np.ndarray, i: int) -> Optional[int]:
+    """perm[j] = input attr that landed at output position j."""
+    hits = np.flatnonzero(np.asarray(perm) == i)
+    return int(hits[0]) if len(hits) else None
+
+
+def perm_backward(perm: np.ndarray, j: int) -> int:
+    return int(np.asarray(perm)[j])

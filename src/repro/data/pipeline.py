@@ -1,0 +1,214 @@
+"""Training-data pipeline with first-class TensProv provenance.
+
+This is where the paper's technique becomes a FEATURE of the training
+framework: the document -> batch dataflow is itself a data-preparation
+pipeline (paper Table I categories in parentheses), and every step's
+provenance is captured with the same tensors:
+
+    raw corpus table
+      -> quality filter          (horizontal reduction; masking tensor)
+      -> dedup                   (horizontal reduction)
+      -> tokenize + pack to S    (horizontal augmentation, MULTI-PARENT links:
+                                  one packed sequence <- several documents)
+      -> shuffle + shard + batch (horizontal reduction per step: the batch's
+                                  sequence ids ARE the kept-rows payload)
+
+So "which raw documents fed step 734's batch?" is a Q2 backward query, and
+"which batches did flagged document 17 reach?" is Q1 — at any point during
+training, in memory, exactly the paper's development-time use case.
+
+The loader is DETERMINISTIC and RESUMABLE: batch t of epoch e is a pure
+function of (seed, e, t), so checkpoint-restart re-seeks without state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.opcat import AttrMap, CaptureInfo, OpCategory
+from repro.core.pipeline import ProvenanceIndex
+from repro.dataprep.table import Table
+
+__all__ = ["CorpusConfig", "TokenPipeline", "make_corpus"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CorpusConfig:
+    n_docs: int = 2048
+    mean_len: int = 384
+    vocab: int = 50_000
+    seed: int = 0
+    min_quality: float = 0.25
+
+
+def make_corpus(cfg: CorpusConfig) -> Tuple[Table, List[np.ndarray]]:
+    """Synthetic raw corpus: a metadata table (the provenance-visible record
+    space) + per-doc token arrays (hash-tokenized payload)."""
+    rng = np.random.default_rng(cfg.seed)
+    lens = np.maximum(16, rng.poisson(cfg.mean_len, cfg.n_docs)).astype(np.int64)
+    quality = rng.beta(4, 2, cfg.n_docs).astype(np.float32)
+    source = rng.integers(0, 8, cfg.n_docs).astype(np.float32)
+    # ~2% exact duplicates to make dedup non-trivial
+    dup_of = np.full(cfg.n_docs, -1, np.int64)
+    n_dup = max(1, cfg.n_docs // 50)
+    dupes = rng.choice(np.arange(1, cfg.n_docs), n_dup, replace=False)
+    for d in dupes:
+        dup_of[d] = rng.integers(0, d)
+    meta = Table.from_columns({
+        "doc_id": np.arange(cfg.n_docs, dtype=np.float32),
+        "length": lens.astype(np.float32),
+        "quality": quality,
+        "source": source,
+        "consent": (rng.random(cfg.n_docs) > 0.05).astype(np.float32),
+    })
+    docs = []
+    for i in range(cfg.n_docs):
+        src = dup_of[i] if dup_of[i] >= 0 else i
+        r = np.random.default_rng(cfg.seed * 1_000_003 + int(src))
+        docs.append(r.integers(1, cfg.vocab, lens[src], dtype=np.int32))
+        if dup_of[i] >= 0:
+            meta.data[i] = meta.data[src].copy()
+            meta.data[i, 0] = i  # doc_id stays unique
+    return meta, docs
+
+
+class TokenPipeline:
+    """corpus -> packed sequences -> deterministic sharded batches,
+    provenance captured end-to-end in a ProvenanceIndex."""
+
+    def __init__(self, corpus_cfg: CorpusConfig, seq_len: int,
+                 index: Optional[ProvenanceIndex] = None):
+        self.cfg = corpus_cfg
+        self.seq_len = seq_len
+        self.index = index if index is not None else ProvenanceIndex("data-pipeline")
+        self._build()
+
+    # -- the tracked pipeline ------------------------------------------------
+    def _build(self) -> None:
+        cfg = self.cfg
+        meta, docs = make_corpus(cfg)
+        self.index.add_source("corpus", meta)
+
+        # 1. quality filter (HREDUCE)
+        kept = np.flatnonzero(meta.col("quality") >= cfg.min_quality)
+        t1 = meta.take_rows(kept)
+        self.index.record(
+            ["corpus"], "filtered", t1,
+            CaptureInfo(op_name="quality_filter", category=OpCategory.HREDUCE,
+                        contextual=False, n_out=len(kept), n_in=[meta.n_rows],
+                        kept_rows=kept.astype(np.int32),
+                        attr_maps=[AttrMap(kind="identity")],
+                        params={"min_quality": cfg.min_quality}),
+        )
+
+        # 2. dedup by content hash (HREDUCE; contextual — needs the whole set)
+        hashes = {}
+        uniq = []
+        for j, i in enumerate(kept):
+            h = docs[i][: min(64, len(docs[i]))].tobytes()
+            if h not in hashes:
+                hashes[h] = j
+                uniq.append(j)
+        uniq = np.asarray(uniq, dtype=np.int64)
+        t2 = t1.take_rows(uniq)
+        self.index.record(
+            ["filtered"], "deduped", t2,
+            CaptureInfo(op_name="dedup", category=OpCategory.HREDUCE,
+                        contextual=True, n_out=len(uniq), n_in=[t1.n_rows],
+                        kept_rows=uniq.astype(np.int32),
+                        attr_maps=[AttrMap(kind="identity")],
+                        params={}),
+            input_tables=[t1],
+        )
+        self.doc_rows = kept[uniq]                       # deduped -> corpus row
+        self.docs = [docs[i] for i in self.doc_rows]
+
+        # 3. tokenize + pack (HAUGMENT with multi-parent links)
+        S = self.seq_len
+        stream = np.concatenate(self.docs) if self.docs else np.zeros(0, np.int32)
+        owner = np.repeat(np.arange(len(self.docs), dtype=np.int32),
+                          [len(d) for d in self.docs])
+        n_seq = len(stream) // S
+        self.tokens = stream[: n_seq * S].reshape(n_seq, S).astype(np.int32)
+        owner = owner[: n_seq * S].reshape(n_seq, S)
+        links = np.unique(
+            np.stack([np.repeat(np.arange(n_seq, dtype=np.int32), S),
+                      owner.reshape(-1)], axis=1), axis=0)
+        seq_table = Table.from_columns({
+            "seq_id": np.arange(n_seq, dtype=np.float32),
+            "n_docs": np.asarray([(owner[i][1:] != owner[i][:-1]).sum() + 1
+                                  for i in range(n_seq)], np.float32),
+        })
+        self.index.record(
+            ["deduped"], "sequences", seq_table,
+            CaptureInfo(op_name="pack", category=OpCategory.HAUGMENT,
+                        contextual=False, n_out=n_seq, n_in=[len(self.docs)],
+                        links=links,
+                        attr_maps=[AttrMap(kind="identity")],
+                        params={"seq_len": S}),
+        )
+        self.n_seq = n_seq
+        self._batch_ops: Dict[Tuple[int, int], str] = {}
+
+    # -- deterministic resumable batches ---------------------------------------
+    def _order(self, epoch: int) -> np.ndarray:
+        return np.random.default_rng((self.cfg.seed, epoch)).permutation(self.n_seq)
+
+    def batch_at(self, step: int, batch_size: int,
+                 record_provenance: bool = False) -> Dict[str, np.ndarray]:
+        """Batch for global step ``step`` (pure function of seed/step)."""
+        per_epoch = max(self.n_seq // batch_size, 1)
+        epoch, off = divmod(step, per_epoch)
+        order = self._order(epoch)
+        rows = order[off * batch_size: (off + 1) * batch_size]
+        toks = self.tokens[rows]
+        batch = {
+            "tokens": toks,
+            "labels": np.concatenate([toks[:, 1:], np.full((len(rows), 1), -1, toks.dtype)], axis=1),
+            "seq_rows": rows.astype(np.int64),
+        }
+        if record_provenance:
+            self._record_batch(step, rows)
+        return batch
+
+    def batches(self, batch_size: int, record_provenance: bool = False
+                ) -> Iterator[Dict[str, np.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch_at(step, batch_size, record_provenance)
+            step += 1
+
+    # -- per-batch provenance (HREDUCE of the sequence space) --------------------
+    def _record_batch(self, step: int, rows: np.ndarray) -> None:
+        ds = f"batch@{step}"
+        if ds in self.index.datasets:
+            return
+        bt = Table.from_columns({"seq_id": rows.astype(np.float32)})
+        self.index.record(
+            ["sequences"], ds, bt,
+            CaptureInfo(op_name=f"batch_select:{step}", category=OpCategory.HREDUCE,
+                        contextual=False, n_out=len(rows), n_in=[self.n_seq],
+                        kept_rows=rows.astype(np.int32),
+                        attr_maps=[AttrMap(kind="identity")],
+                        params={"step": step}),
+        )
+
+    # -- the paper's queries, specialized --------------------------------------
+    def batch_to_documents(self, step: int) -> np.ndarray:
+        """Q2: corpus rows that fed the batch at ``step``."""
+        from repro.core.query import q2_backward
+        ds = f"batch@{step}"
+        n = self.index.datasets[ds].n_rows
+        return q2_backward(self.index, ds, np.arange(n), "corpus")
+
+    def document_to_batches(self, corpus_row: int) -> List[int]:
+        """Q1: steps whose batches a raw document reached."""
+        from repro.core.query import forward_record_masks
+        masks, _ = forward_record_masks(self.index, "corpus", [corpus_row])
+        out = []
+        for ds, m in masks.items():
+            if ds.startswith("batch@") and m.any():
+                out.append(int(ds.split("@")[1]))
+        return sorted(out)

@@ -1,0 +1,2 @@
+"""Data-preparation substrate instrumented by TensProv (paper Table I ops)."""
+from repro.dataprep.table import Table

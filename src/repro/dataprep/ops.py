@@ -1,0 +1,505 @@
+"""The data-preparation operations of paper Table I, with capture payloads.
+
+Every public op returns ``(out_table, CaptureInfo)``.  The CaptureInfo carries
+exactly the payload the paper's hybrid capture needs:
+
+* index-preserving ops (filter/transform/vertical ops) — observation-based:
+  the kept-row list comes from comparing preserved dataframe indices, no
+  content diffing (paper §III-B);
+* the join — active capture: the implementation threads row-ids through the
+  match (the instrumented-ID-column strategy of §V), so provenance falls out
+  of the matching itself.
+
+Value math is vectorized numpy/jnp; ops are deterministic given their params
+so non-materialized intermediates can be recomputed per-record (§III-E).
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.opcat import AttrMap, CaptureInfo, OpCategory
+from repro.core.schema import Bitset
+from repro.dataprep.table import Table
+
+__all__ = [
+    "value_transform",
+    "binarize",
+    "normalize",
+    "impute",
+    "discretize",
+    "select_columns",
+    "drop_columns",
+    "filter_rows",
+    "undersample",
+    "onehot",
+    "string_indexer",
+    "space_transform",
+    "oversample",
+    "join",
+    "append",
+    "TRANSFORM_FNS",
+]
+
+OpResult = Tuple[Table, CaptureInfo]
+
+
+# ---------------------------------------------------------------------------
+# Data transformation (identity tensor; identity attr map)
+# ---------------------------------------------------------------------------
+TRANSFORM_FNS = {
+    "log1p": lambda x, p: np.log1p(np.maximum(x, 0.0)),
+    "scale": lambda x, p: x * p.get("factor", 1.0) + p.get("offset", 0.0),
+    "clip": lambda x, p: np.clip(x, p.get("lo", -np.inf), p.get("hi", np.inf)),
+    "binarize": lambda x, p: (x > p["threshold"]).astype(np.float32),
+}
+
+
+def value_transform(t: Table, col: str, fn: str, **fn_params) -> OpResult:
+    """Localized TRANSFORM: y = f(x) per cell."""
+    out = t.copy()
+    j = t.cid(col)
+    out.data[:, j] = TRANSFORM_FNS[fn](t.data[:, j], fn_params).astype(np.float32)
+    info = CaptureInfo(
+        op_name=f"transform:{fn}",
+        category=OpCategory.TRANSFORM,
+        contextual=False,
+        n_out=t.n_rows,
+        n_in=[t.n_rows],
+        attr_maps=[AttrMap(kind="identity")],
+        params={"col": col, "fn": fn, "fn_params": fn_params},
+    )
+    return out, info
+
+
+def binarize(t: Table, col: str, threshold: float) -> OpResult:
+    return value_transform(t, col, "binarize", threshold=threshold)
+
+
+def normalize(t: Table, cols: Sequence[str], kind: str = "zscore") -> OpResult:
+    """Contextual TRANSFORM: needs whole-column statistics (paper §III-E)."""
+    out = t.copy()
+    stats = {}
+    for c in cols:
+        j = t.cid(c)
+        x = t.data[:, j]
+        valid = ~t.null[:, j]
+        if kind == "zscore":
+            mu = float(x[valid].mean()) if valid.any() else 0.0
+            sd = float(x[valid].std()) or 1.0
+            out.data[:, j] = (x - mu) / sd
+            stats[c] = (mu, sd)
+        elif kind == "minmax":
+            lo = float(x[valid].min()) if valid.any() else 0.0
+            hi = float(x[valid].max()) if valid.any() else 1.0
+            out.data[:, j] = (x - lo) / ((hi - lo) or 1.0)
+            stats[c] = (lo, hi)
+        else:
+            raise ValueError(kind)
+    info = CaptureInfo(
+        op_name=f"normalize:{kind}",
+        category=OpCategory.TRANSFORM,
+        contextual=True,
+        n_out=t.n_rows,
+        n_in=[t.n_rows],
+        attr_maps=[AttrMap(kind="identity")],
+        params={"cols": list(cols), "kind": kind, "stats": stats},
+    )
+    return out, info
+
+
+def impute(t: Table, cols: Sequence[str], strategy: str = "mean") -> OpResult:
+    """Contextual TRANSFORM: fill nulls from whole-column statistics."""
+    out = t.copy()
+    fills = {}
+    for c in cols:
+        j = t.cid(c)
+        x = t.data[:, j]
+        valid = ~t.null[:, j]
+        if strategy == "mean":
+            fill = float(x[valid].mean()) if valid.any() else 0.0
+        elif strategy == "median":
+            fill = float(np.median(x[valid])) if valid.any() else 0.0
+        elif strategy == "mode":
+            if valid.any():
+                vals, counts = np.unique(x[valid], return_counts=True)
+                fill = float(vals[np.argmax(counts)])
+            else:
+                fill = 0.0
+        else:
+            raise ValueError(strategy)
+        out.data[~valid, j] = fill
+        out.null[:, j] = False
+        fills[c] = fill
+    info = CaptureInfo(
+        op_name=f"impute:{strategy}",
+        category=OpCategory.TRANSFORM,
+        contextual=True,
+        n_out=t.n_rows,
+        n_in=[t.n_rows],
+        attr_maps=[AttrMap(kind="identity")],
+        params={"cols": list(cols), "strategy": strategy, "fills": fills},
+    )
+    return out, info
+
+
+def discretize(t: Table, col: str, n_bins: int, kind: str = "uniform") -> OpResult:
+    """TRANSFORM; quantile binning is contextual, uniform with fixed range is
+    contextual too (range comes from the data) unless bounds are provided."""
+    out = t.copy()
+    j = t.cid(col)
+    x = t.data[:, j]
+    if kind == "uniform":
+        lo, hi = float(x.min()), float(x.max())
+        edges = np.linspace(lo, hi, n_bins + 1)[1:-1]
+    elif kind == "quantile":
+        edges = np.quantile(x, np.linspace(0, 1, n_bins + 1)[1:-1])
+    else:
+        raise ValueError(kind)
+    out.data[:, j] = np.searchsorted(edges, x).astype(np.float32)
+    info = CaptureInfo(
+        op_name=f"discretize:{kind}",
+        category=OpCategory.TRANSFORM,
+        contextual=True,
+        n_out=t.n_rows,
+        n_in=[t.n_rows],
+        attr_maps=[AttrMap(kind="identity")],
+        params={"col": col, "edges": edges.tolist(), "kind": kind},
+    )
+    return out, info
+
+
+# ---------------------------------------------------------------------------
+# Vertical reduction (identity tensor; bitset attr map — paper Table VI)
+# ---------------------------------------------------------------------------
+def select_columns(t: Table, cols: Sequence[str]) -> OpResult:
+    """Keep ``cols`` in their original relative order (bitset annotation) or
+    arbitrary order (falls back to the paper's permutation-list annotation)."""
+    keep_ids = [t.cid(c) for c in cols]
+    order_preserved = keep_ids == sorted(keep_ids)
+    out = t.take_cols(cols)
+    bits = Bitset.from_indices(keep_ids, t.n_cols)
+    amap = AttrMap(kind="vreduce", bitset=bits)
+    if not order_preserved:
+        amap.perm = np.asarray(keep_ids, dtype=np.int32)
+    info = CaptureInfo(
+        op_name="select_columns",
+        category=OpCategory.VREDUCE,
+        contextual=False,
+        n_out=t.n_rows,
+        n_in=[t.n_rows],
+        attr_maps=[amap],
+        params={"cols": list(cols)},
+    )
+    return out, info
+
+
+def drop_columns(t: Table, cols: Sequence[str]) -> OpResult:
+    keep = [c for c in t.columns if c not in set(cols)]
+    out, info = select_columns(t, keep)
+    info.op_name = "drop_columns"
+    info.params = {"cols": list(cols)}
+    return out, info
+
+
+# ---------------------------------------------------------------------------
+# Horizontal reduction (masking tensor; identity attr map)
+# ---------------------------------------------------------------------------
+def filter_rows(t: Table, mask: np.ndarray, op_name: str = "filter") -> OpResult:
+    """Observation-based capture via preserved dataframe indices (§III-B)."""
+    mask = np.asarray(mask, dtype=bool)
+    kept = np.flatnonzero(mask)
+    out = t.take_rows(kept, keep_index=True)
+    info = CaptureInfo(
+        op_name=op_name,
+        category=OpCategory.HREDUCE,
+        contextual=False,
+        n_out=len(kept),
+        n_in=[t.n_rows],
+        kept_rows=kept.astype(np.int32),
+        attr_maps=[AttrMap(kind="identity")],
+        params={},
+    )
+    return out, info
+
+
+def undersample(t: Table, frac: float, seed: int = 0) -> OpResult:
+    rng = np.random.default_rng(seed)
+    kept = np.sort(rng.choice(t.n_rows, size=max(1, int(t.n_rows * frac)), replace=False))
+    mask = np.zeros(t.n_rows, dtype=bool)
+    mask[kept] = True
+    out, info = filter_rows(t, mask, op_name="undersample")
+    info.params = {"frac": frac, "seed": seed}
+    return out, info
+
+
+# ---------------------------------------------------------------------------
+# Vertical augmentation (identity tensor; bitset attr map — paper Table VI)
+# ---------------------------------------------------------------------------
+def onehot(t: Table, col: str, n_values: Optional[int] = None) -> OpResult:
+    j = t.cid(col)
+    x = t.data[:, j].astype(np.int64)
+    contextual = n_values is None
+    if n_values is None:
+        n_values = int(x.max()) + 1 if len(x) else 1
+    eye = np.zeros((t.n_rows, n_values), dtype=np.float32)
+    valid = (x >= 0) & (x < n_values) & ~t.null[:, j]
+    eye[np.arange(t.n_rows)[valid], x[valid]] = 1.0
+    new_names = [f"{col}={v}" for v in range(n_values)]
+    out = Table(
+        columns=t.columns + new_names,
+        data=np.concatenate([t.data, eye], axis=1),
+        null=np.concatenate([t.null, np.zeros_like(eye, dtype=bool)], axis=1),
+        index=t.index.copy(),
+        vocab=dict(t.vocab),
+    )
+    m = t.n_cols
+    # paper's single-bitset encoding: source input attrs ∪ new output attrs
+    bits = Bitset.from_indices([j] + list(range(m, m + n_values)), m + n_values)
+    info = CaptureInfo(
+        op_name="onehot",
+        category=OpCategory.VAUGMENT,
+        contextual=contextual,
+        n_out=t.n_rows,
+        n_in=[t.n_rows],
+        attr_maps=[AttrMap(kind="vaugment", bitset=bits, m=m)],
+        params={"col": col, "n_values": n_values},
+    )
+    return out, info
+
+
+def string_indexer(t: Table, col: str) -> OpResult:
+    """Adds ``col#idx`` = dense rank of the value (contextual: needs domain)."""
+    j = t.cid(col)
+    x = t.data[:, j]
+    vals = np.unique(x[~t.null[:, j]])
+    codes = np.searchsorted(vals, x).astype(np.float32)
+    out = Table(
+        columns=t.columns + [f"{col}#idx"],
+        data=np.concatenate([t.data, codes[:, None]], axis=1),
+        null=np.concatenate([t.null, t.null[:, j : j + 1]], axis=1),
+        index=t.index.copy(),
+        vocab=dict(t.vocab),
+    )
+    m = t.n_cols
+    bits = Bitset.from_indices([j, m], m + 1)
+    info = CaptureInfo(
+        op_name="string_indexer",
+        category=OpCategory.VAUGMENT,
+        contextual=True,
+        n_out=t.n_rows,
+        n_in=[t.n_rows],
+        attr_maps=[AttrMap(kind="vaugment", bitset=bits, m=m)],
+        params={"col": col, "domain": vals.tolist()},
+    )
+    return out, info
+
+
+def space_transform(t: Table, cols: Sequence[str], proj: np.ndarray, prefix: str = "pc") -> OpResult:
+    """Linear feature map (PCA-style) onto ``proj.shape[1]`` new attributes.
+    Localized when the projection matrix is given (fixed params)."""
+    ids = [t.cid(c) for c in cols]
+    proj = np.asarray(proj, dtype=np.float32)
+    newvals = t.data[:, ids] @ proj
+    names = [f"{prefix}{i}" for i in range(proj.shape[1])]
+    out = Table(
+        columns=t.columns + names,
+        data=np.concatenate([t.data, newvals], axis=1),
+        null=np.concatenate([t.null, np.zeros_like(newvals, dtype=bool)], axis=1),
+        index=t.index.copy(),
+        vocab=dict(t.vocab),
+    )
+    m = t.n_cols
+    bits = Bitset.from_indices(ids + list(range(m, m + proj.shape[1])), m + proj.shape[1])
+    info = CaptureInfo(
+        op_name="space_transform",
+        category=OpCategory.VAUGMENT,
+        contextual=False,
+        n_out=t.n_rows,
+        n_in=[t.n_rows],
+        attr_maps=[AttrMap(kind="vaugment", bitset=bits, m=m)],
+        params={"cols": list(cols), "proj": proj},
+    )
+    return out, info
+
+
+# ---------------------------------------------------------------------------
+# Horizontal augmentation (src-mapped tensor; identity attr map)
+# ---------------------------------------------------------------------------
+def oversample(t: Table, frac: float, seed: int = 0, noise: float = 0.0) -> OpResult:
+    """Appends ``frac * n`` duplicated (optionally jittered) rows.  The paper
+    (§III-A e) keeps the output->source correspondence whenever establishable —
+    here it always is, by construction."""
+    rng = np.random.default_rng(seed)
+    n_new = max(1, int(t.n_rows * frac))
+    picks = rng.integers(0, t.n_rows, size=n_new)
+    new_data = t.data[picks].copy()
+    if noise > 0:
+        new_data += rng.normal(0.0, noise, size=new_data.shape).astype(np.float32)
+    out = Table(
+        columns=list(t.columns),
+        data=np.concatenate([t.data, new_data], axis=0),
+        null=np.concatenate([t.null, t.null[picks]], axis=0),
+        index=np.concatenate([t.index, t.index.max() + 1 + np.arange(n_new, dtype=np.int64)]),
+        vocab=dict(t.vocab),
+    )
+    src = np.concatenate([np.arange(t.n_rows, dtype=np.int32), picks.astype(np.int32)])
+    info = CaptureInfo(
+        op_name="oversample",
+        category=OpCategory.HAUGMENT,
+        contextual=False,
+        n_out=out.n_rows,
+        n_in=[t.n_rows],
+        src_rows=src,
+        attr_maps=[AttrMap(kind="identity")],
+        params={"frac": frac, "seed": seed, "noise": noise},
+    )
+    return out, info
+
+
+# ---------------------------------------------------------------------------
+# Join (order-3 tensor; two bitsets + permutation lists — paper Table VI)
+# ---------------------------------------------------------------------------
+def join(left: Table, right: Table, on: str, how: str = "inner", max_pairs: Optional[int] = None) -> OpResult:
+    """Sort-merge equi-join with Pandas-merge bag semantics.
+
+    ACTIVE capture (paper §III-B / §V): the match is computed over row-id
+    vectors threaded through the sort — the produced (left_row, right_row)
+    pairs ARE the provenance; no post-hoc content comparison ever happens.
+    """
+    lk = left.col(on)
+    rk = right.col(on)
+    # sort right once; for each left key find its match range
+    r_order = np.argsort(rk, kind="stable").astype(np.int64)
+    rk_sorted = rk[r_order]
+    lo = np.searchsorted(rk_sorted, lk, side="left")
+    hi = np.searchsorted(rk_sorted, lk, side="right")
+    counts = hi - lo
+    l_rows = np.repeat(np.arange(left.n_rows, dtype=np.int64), counts)
+    offsets = np.concatenate(([0], np.cumsum(counts)[:-1]))
+    flat = np.repeat(lo - offsets, counts) + np.arange(counts.sum(), dtype=np.int64) \
+        if counts.sum() else np.zeros(0, dtype=np.int64)
+    r_rows = r_order[flat.astype(np.int64)] if counts.sum() else np.zeros(0, dtype=np.int64)
+
+    pairs = [np.stack([l_rows, r_rows], axis=1)] if counts.sum() else [np.zeros((0, 2), np.int64)]
+    if how in ("left", "outer"):
+        dangling_l = np.flatnonzero(counts == 0)
+        pairs.append(np.stack([dangling_l, np.full(len(dangling_l), -1, np.int64)], axis=1))
+    if how in ("right", "outer"):
+        matched_r = np.zeros(right.n_rows, dtype=bool)
+        if counts.sum():
+            matched_r[r_rows] = True
+        dangling_r = np.flatnonzero(~matched_r)
+        pairs.append(np.stack([np.full(len(dangling_r), -1, np.int64), dangling_r], axis=1))
+    pairs = np.concatenate(pairs, axis=0)
+    if max_pairs is not None and len(pairs) > max_pairs:
+        pairs = pairs[:max_pairs]
+
+    # assemble output: key, left non-key cols, right non-key cols
+    l_cols = [c for c in left.columns if c != on]
+    r_cols = [c for c in right.columns if c != on]
+    out_names = [on] + [f"{c}_l" if c in r_cols else c for c in l_cols] \
+        + [f"{c}_r" if c in l_cols else c for c in r_cols]
+    n_out_attrs = 1 + len(l_cols) + len(r_cols)
+    n_out = len(pairs)
+    data = np.zeros((n_out, n_out_attrs), dtype=np.float32)
+    null = np.ones((n_out, n_out_attrs), dtype=bool)
+    has_l = pairs[:, 0] >= 0
+    has_r = pairs[:, 1] >= 0
+    li = np.where(has_l, pairs[:, 0], 0)
+    ri = np.where(has_r, pairs[:, 1], 0)
+    # key (from whichever side exists)
+    data[:, 0] = np.where(has_l, left.data[li, left.cid(on)], right.data[ri, right.cid(on)])
+    null[:, 0] = np.where(has_l, left.null[li, left.cid(on)], right.null[ri, right.cid(on)])
+    for a, c in enumerate(l_cols):
+        j = left.cid(c)
+        data[:, 1 + a] = np.where(has_l, left.data[li, j], 0.0)
+        null[:, 1 + a] = np.where(has_l, left.null[li, j], True)
+    for a, c in enumerate(r_cols):
+        j = right.cid(c)
+        data[:, 1 + len(l_cols) + a] = np.where(has_r, right.data[ri, j], 0.0)
+        null[:, 1 + len(l_cols) + a] = np.where(has_r, right.null[ri, j], True)
+
+    out = Table(
+        columns=out_names,
+        data=data,
+        null=null,
+        index=np.arange(n_out, dtype=np.int64),
+        vocab={**{c: v for c, v in right.vocab.items()}, **{c: v for c, v in left.vocab.items()}},
+    )
+
+    # paper Table VI: one bitset per input over OUTPUT attr positions
+    bits_l = Bitset.from_indices([0] + list(range(1, 1 + len(l_cols))), n_out_attrs)
+    bits_r = Bitset.from_indices([0] + list(range(1 + len(l_cols), n_out_attrs)), n_out_attrs)
+    # explicit permutation lists (order-changing fallback): out attr -> in attr
+    perm_l = np.full(n_out_attrs, -1, dtype=np.int32)
+    perm_l[0] = left.cid(on)
+    for a, c in enumerate(l_cols):
+        perm_l[1 + a] = left.cid(c)
+    perm_r = np.full(n_out_attrs, -1, dtype=np.int32)
+    perm_r[0] = right.cid(on)
+    for a, c in enumerate(r_cols):
+        perm_r[1 + len(l_cols) + a] = right.cid(c)
+
+    info = CaptureInfo(
+        op_name=f"join:{how}",
+        category=OpCategory.JOIN,
+        contextual=False,
+        n_out=n_out,
+        n_in=[left.n_rows, right.n_rows],
+        join_pairs=pairs.astype(np.int32),
+        attr_maps=[
+            AttrMap(kind="join", bitset=bits_l, perm=perm_l),
+            AttrMap(kind="join", bitset=bits_r, perm=perm_r),
+        ],
+        params={"on": on, "how": how},
+    )
+    return out, info
+
+
+# ---------------------------------------------------------------------------
+# Append (two block-diagonal tensors; two bitsets — paper §III-A g)
+# ---------------------------------------------------------------------------
+def append(left: Table, right: Table) -> OpResult:
+    """Outer-union: result schema = left cols ∪ right cols, null-extended."""
+    out_names = list(left.columns) + [c for c in right.columns if c not in left.columns]
+    n_out = left.n_rows + right.n_rows
+    data = np.zeros((n_out, len(out_names)), dtype=np.float32)
+    null = np.ones((n_out, len(out_names)), dtype=bool)
+    for a, c in enumerate(out_names):
+        if c in left.columns:
+            data[: left.n_rows, a] = left.col(c)
+            null[: left.n_rows, a] = left.col_null(c)
+        if c in right.columns:
+            data[left.n_rows :, a] = right.col(c)
+            null[left.n_rows :, a] = right.col_null(c)
+    out = Table(
+        columns=out_names,
+        data=data,
+        null=null,
+        index=np.arange(n_out, dtype=np.int64),
+        vocab={**right.vocab, **left.vocab},
+    )
+    perm_l = np.full(len(out_names), -1, dtype=np.int32)
+    perm_r = np.full(len(out_names), -1, dtype=np.int32)
+    for a, c in enumerate(out_names):
+        if c in left.columns:
+            perm_l[a] = left.cid(c)
+        if c in right.columns:
+            perm_r[a] = right.cid(c)
+    bits_l = Bitset.from_bits(perm_l >= 0)
+    bits_r = Bitset.from_bits(perm_r >= 0)
+    info = CaptureInfo(
+        op_name="append",
+        category=OpCategory.APPEND,
+        contextual=False,
+        n_out=n_out,
+        n_in=[left.n_rows, right.n_rows],
+        attr_maps=[
+            AttrMap(kind="join", bitset=bits_l, perm=perm_l),
+            AttrMap(kind="join", bitset=bits_r, perm=perm_r),
+        ],
+        params={},
+    )
+    return out, info

@@ -1,0 +1,123 @@
+"""Columnar in-memory Table — the substrate TensProv instruments.
+
+A deliberately Pandas-shaped but array-resident container: one float32 value
+matrix + a null mask + a preserved integer index.  Categorical values are
+stored as integer codes in float32 (a ``vocab`` per column keeps the labels).
+The preserved ``index`` is what the paper's hybrid capture exploits for
+index-preserving operations (filter et al., §III-B).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+__all__ = ["Table"]
+
+
+@dataclasses.dataclass
+class Table:
+    columns: List[str]
+    data: np.ndarray                      # (n_rows, n_cols) float32
+    null: np.ndarray                      # (n_rows, n_cols) bool
+    index: np.ndarray                     # (n_rows,) int64, dataframe index
+    vocab: Dict[str, list] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        self.data = np.asarray(self.data, dtype=np.float32)
+        if self.data.ndim != 2:
+            raise ValueError("data must be 2-D (rows x cols)")
+        n, c = self.data.shape
+        if len(self.columns) != c:
+            raise ValueError(f"{len(self.columns)} names for {c} columns")
+        if self.null is None:
+            self.null = np.zeros((n, c), dtype=bool)
+        self.null = np.asarray(self.null, dtype=bool)
+        if self.index is None:
+            self.index = np.arange(n, dtype=np.int64)
+        self.index = np.asarray(self.index, dtype=np.int64)
+
+    # -- construction --------------------------------------------------------
+    @staticmethod
+    def from_columns(cols: Dict[str, np.ndarray], null: Optional[Dict[str, np.ndarray]] = None) -> "Table":
+        names = list(cols)
+        data = np.stack([np.asarray(cols[c], dtype=np.float32) for c in names], axis=1)
+        n = data.shape[0]
+        nullm = np.zeros_like(data, dtype=bool)
+        if null:
+            for j, c in enumerate(names):
+                if c in null:
+                    nullm[:, j] = null[c]
+        nullm |= np.isnan(data)
+        return Table(columns=names, data=data, null=nullm, index=np.arange(n, dtype=np.int64))
+
+    # -- shape ----------------------------------------------------------------
+    @property
+    def n_rows(self) -> int:
+        return int(self.data.shape[0])
+
+    @property
+    def n_cols(self) -> int:
+        return int(self.data.shape[1])
+
+    def col(self, name: str) -> np.ndarray:
+        return self.data[:, self.columns.index(name)]
+
+    def col_null(self, name: str) -> np.ndarray:
+        return self.null[:, self.columns.index(name)]
+
+    def cid(self, name: str) -> int:
+        return self.columns.index(name)
+
+    # -- row/col selection (no provenance — used internally) ------------------
+    def take_rows(self, rows: np.ndarray, keep_index: bool = True) -> "Table":
+        rows = np.asarray(rows)
+        return Table(
+            columns=list(self.columns),
+            data=self.data[rows],
+            null=self.null[rows],
+            index=self.index[rows] if keep_index else np.arange(len(rows), dtype=np.int64),
+            vocab=dict(self.vocab),
+        )
+
+    def take_cols(self, names: Sequence[str]) -> "Table":
+        ids = [self.columns.index(c) for c in names]
+        return Table(
+            columns=list(names),
+            data=self.data[:, ids],
+            null=self.null[:, ids],
+            index=self.index.copy(),
+            vocab={c: v for c, v in self.vocab.items() if c in names},
+        )
+
+    def copy(self) -> "Table":
+        return Table(
+            columns=list(self.columns),
+            data=self.data.copy(),
+            null=self.null.copy(),
+            index=self.index.copy(),
+            vocab=dict(self.vocab),
+        )
+
+    def nbytes(self) -> int:
+        return int(self.data.nbytes + self.null.nbytes + self.index.nbytes)
+
+    def row_tuple(self, i: int) -> tuple:
+        """Value identity of a row (nulls normalized) — used by set-semantics
+        canonicalization and by the Chapman baseline's frame diffing."""
+        vals = self.data[i].copy()
+        vals[self.null[i]] = np.nan
+        return tuple(-0.0 if v == 0 else v for v in vals.tolist())
+
+    def duplicate_groups(self) -> np.ndarray:
+        """Set-semantics support (paper §III-C.a): ``groups[i]`` = smallest
+        row index whose VALUES equal row i's (nulls compare equal)."""
+        clean = np.where(self.null, np.float32(np.nan), self.data)
+        view = np.ascontiguousarray(clean).view(np.uint32).reshape(self.n_rows, -1)
+        first: dict = {}
+        groups = np.empty(self.n_rows, dtype=np.int32)
+        for i in range(self.n_rows):
+            key = view[i].tobytes()
+            groups[i] = first.setdefault(key, i)
+        return groups

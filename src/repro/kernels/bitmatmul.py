@@ -1,0 +1,95 @@
+"""Boolean-semiring bitplane matmul Pallas kernel.
+
+The paper composes provenance tensors along a pipeline with Einstein
+summation (Section IV).  Over binary relations the semiring is (OR, AND):
+
+    C[i, j] = OR_m  A[i, m] AND B[m, j]
+
+TPU adaptation (DESIGN.md §2): there is no MXU instruction for the boolean
+semiring, so we bit-pack both operands into uint32 lanes — 32 boolean MACs
+per VPU word op — and tile exactly like a dense GEMM so HBM->VMEM traffic
+matches a matmul of 1/32 the bytes:
+
+* ``a_bits``:  (M, K/32)  uint32 — relation A packed along the contraction dim
+* ``b_bits``:  (K, N/32)  uint32 — relation B packed along the output dim
+* ``c_bits``:  (M, N/32)  uint32 — result packed along the output dim
+
+Grid (M/bm, Nw/bnw, K/bk); the K grid dimension accumulates into the same
+output block (revisited block, init at k==0) — the canonical Pallas matmul
+reduction pattern.  Inside a block each of the ``bk`` contraction steps is a
+masked OR of a B row-segment into the accumulator, vectorized over lanes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["bitmatmul_kernel", "bitmatmul_pallas"]
+
+
+def bitmatmul_kernel(a_ref, b_ref, c_ref, *, block_k: int):
+    """One (bm, bnw) output tile for one bk-slice of the contraction."""
+    k_step = pl.program_id(2)
+
+    a_words = a_ref[...]  # (bm, bk//32) uint32
+    bm = a_words.shape[0]
+    # Unpack the contraction bits: (bm, bk//32, 32) -> (bm, bk).
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, 1, 32), 2)
+    bits = (a_words[:, :, None] >> shifts) & jnp.uint32(1)
+    bits = bits.reshape(bm, block_k)
+    # 0 -> 0x00000000, 1 -> 0xFFFFFFFF lane masks.
+    mask = jnp.uint32(0) - bits  # (bm, bk)
+
+    b_words = b_ref[...]  # (bk, bnw) uint32
+    # OR_k (mask[:, k, None] & b[k, :]) — an OR-reduction over the bk axis.
+    tmp = mask[:, :, None] & b_words[None, :, :]  # (bm, bk, bnw)
+    partial = jax.lax.reduce(tmp, jnp.uint32(0), jax.lax.bitwise_or, (1,))
+
+    @pl.when(k_step == 0)
+    def _init():
+        c_ref[...] = partial
+
+    @pl.when(k_step > 0)
+    def _accum():
+        c_ref[...] = c_ref[...] | partial
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_nw", "block_k", "interpret")
+)
+def bitmatmul_pallas(
+    a_bits: jax.Array,
+    b_bits: jax.Array,
+    *,
+    block_m: int = 8,
+    block_nw: int = 128,
+    block_k: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """C_bits = (OR,AND)-matmul of packed boolean relations.
+
+    Shapes must be pre-padded: M % block_m == 0, (K/32) % (block_k/32) == 0,
+    Nw % block_nw == 0.  ``repro.kernels.ops.bitmatmul`` handles padding.
+    """
+    m, kw = a_bits.shape
+    k, nw = b_bits.shape
+    assert kw * 32 == k, (kw, k)
+    assert m % block_m == 0 and nw % block_nw == 0 and k % block_k == 0
+
+    grid = (m // block_m, nw // block_nw, k // block_k)
+    return pl.pallas_call(
+        functools.partial(bitmatmul_kernel, block_k=block_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k // 32), lambda i, j, ks: (i, ks)),
+            pl.BlockSpec((block_k, block_nw), lambda i, j, ks: (ks, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_nw), lambda i, j, ks: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, nw), jnp.uint32),
+        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(a_bits, b_bits)

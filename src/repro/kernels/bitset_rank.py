@@ -1,0 +1,73 @@
+"""Batched bitset rank Pallas kernel.
+
+The paper's attribute maps (Section IV) are rank/select queries over the
+Table-VI bitsets: ``map_vr_f(b, i) = sum_{k<=i} b_k`` etc.  This kernel
+evaluates ``rank(pos) = popcount(bits[0..pos])`` (inclusive) for a batch of
+positions against one packed bitset.
+
+Structure: a word-level inclusive popcount prefix is computed once per block
+(cumsum of ``lax.population_count`` over the words, VPU-friendly), then each
+query resolves with two scalar reads: prefix[word-1] + popcount(word & mask).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["bitset_rank_kernel", "bitset_rank_pallas"]
+
+
+def bitset_rank_kernel(words_ref, pos_ref, out_ref, *, block_q: int):
+    words = words_ref[...]  # (W,) uint32
+    pops = jax.lax.population_count(words).astype(jnp.int32)
+    prefix = jnp.cumsum(pops)  # inclusive per-word prefix
+
+    def body(qi, _):
+        pos = pos_ref[qi]
+        safe = jnp.maximum(pos, 0)  # pos<0 = null query -> rank 0 (guarded below)
+        w = safe // 32
+        b = safe % 32
+        word = pl.load(words_ref, (pl.dslice(w, 1),))[0]
+        # bits [0..b] of the word
+        mask = jnp.uint32(0xFFFFFFFF) >> (jnp.uint32(31) - b.astype(jnp.uint32))
+        partial = jax.lax.population_count(word & mask).astype(jnp.int32)
+        # prefix is a traced array (not a ref): gather with dynamic_slice
+        before = jnp.where(
+            w > 0,
+            jax.lax.dynamic_slice_in_dim(prefix, jnp.maximum(w - 1, 0), 1)[0],
+            0,
+        )
+        rank = jnp.where(pos < 0, 0, before + partial)
+        pl.store(out_ref, (pl.dslice(qi, 1),), rank[None])
+        return 0
+
+    jax.lax.fori_loop(0, block_q, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "interpret"))
+def bitset_rank_pallas(
+    words: jax.Array,      # (W,) uint32
+    positions: jax.Array,  # (Q,) int32, Q % block_q == 0
+    *,
+    block_q: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    (q,) = positions.shape
+    assert q % block_q == 0, (q, block_q)
+    grid = (q // block_q,)
+    return pl.pallas_call(
+        functools.partial(bitset_rank_kernel, block_q=block_q),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(words.shape, lambda i: (0,)),  # full bitset in VMEM
+            pl.BlockSpec((block_q,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_q,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((q,), jnp.int32),
+        compiler_params=pltpu.CompilerParams(dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(words, positions)

@@ -1,0 +1,72 @@
+"""Batched CSR lineage-probe Pallas kernel.
+
+The paper's optimized tensor representation answers a lineage probe with
+"three list accesses" (root -> dataset -> record -> triples).  The array
+realization is a bidirectional CSR; a probe for query row ``q`` is:
+
+    start, end = row_ptr[q], row_ptr[q+1]       (access 1, 2)
+    neighbors  = col_idx[start:end]             (access 3 — bounded gather)
+
+This kernel vectorizes the probe over a BATCH of queries — strictly more
+general than the paper's scalar traversal — emitting a padded (Q, max_deg)
+neighbor table (-1 padding).  ``col_idx`` must be padded by ``max_deg``
+trailing sentinels so the dynamic contiguous slice never reads OOB.
+
+TPU notes: each query issues one dynamic-slice of length ``max_deg`` from
+VMEM (lane-aligned when max_deg % 128 == 0), so the inner loop is a vector
+load + compare + select — no scatter, no ragged addressing.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["lineage_gather_kernel", "lineage_gather_pallas"]
+
+
+def lineage_gather_kernel(queries_ref, row_ptr_ref, col_idx_ref, out_ref, *, block_q: int, max_deg: int):
+    """Probe ``block_q`` queries against the full CSR resident in VMEM."""
+
+    def body(qi, _):
+        q = queries_ref[qi]
+        start = pl.load(row_ptr_ref, (pl.dslice(q, 1),))[0]
+        end = pl.load(row_ptr_ref, (pl.dslice(q + 1, 1),))[0]
+        seg = pl.load(col_idx_ref, (pl.dslice(start, max_deg),))  # (max_deg,)
+        lane = jax.lax.broadcasted_iota(jnp.int32, (max_deg,), 0)
+        padded = jnp.where(lane < (end - start), seg, jnp.int32(-1))
+        pl.store(out_ref, (pl.dslice(qi, 1), pl.dslice(0, max_deg)), padded[None, :])
+        return 0
+
+    jax.lax.fori_loop(0, block_q, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("max_deg", "block_q", "interpret"))
+def lineage_gather_pallas(
+    queries: jax.Array,   # (Q,) int32, Q % block_q == 0
+    row_ptr: jax.Array,   # (R+1,) int32
+    col_idx: jax.Array,   # (NNZ + max_deg,) int32 — sentinel-padded
+    *,
+    max_deg: int,
+    block_q: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    (q,) = queries.shape
+    assert q % block_q == 0, (q, block_q)
+    grid = (q // block_q,)
+    return pl.pallas_call(
+        functools.partial(lineage_gather_kernel, block_q=block_q, max_deg=max_deg),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q,), lambda i: (i,)),
+            pl.BlockSpec(row_ptr.shape, lambda i: (0,)),   # full CSR in VMEM
+            pl.BlockSpec(col_idx.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_q, max_deg), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((q, max_deg), jnp.int32),
+        compiler_params=pltpu.CompilerParams(dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(queries, row_ptr, col_idx)

@@ -1,0 +1,130 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+These handle padding to hardware-aligned block shapes, choose interpret mode
+automatically off-TPU (this container is CPU-only; TPU v5e is the TARGET),
+and unpad results.  All call sites in :mod:`repro.core` go through here.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.bitmatmul import bitmatmul_pallas
+from repro.kernels.lineage_gather import lineage_gather_pallas
+from repro.kernels.bitset_rank import bitset_rank_pallas
+from repro.kernels import ref
+
+__all__ = ["bitmatmul", "lineage_gather", "bitset_rank", "on_tpu"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, multiple: int, value=0) -> jax.Array:
+    n = x.shape[axis]
+    pad = (-n) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def bitmatmul(
+    a_bits,
+    b_bits,
+    *,
+    block_m: int = 8,
+    block_nw: int = 128,
+    block_k: int = 256,
+    interpret: bool | None = None,
+    use_pallas: bool = True,
+):
+    """(OR,AND)-compose packed relations: (M, K/32) x (K, N/32) -> (M, N/32).
+
+    ``use_pallas=False`` falls back to the jnp oracle (used for very small
+    relations where kernel launch overhead dominates, and on hosts where
+    interpret-mode cost would be prohibitive for large shapes).
+    """
+    a_bits = jnp.asarray(a_bits, dtype=jnp.uint32)
+    b_bits = jnp.asarray(b_bits, dtype=jnp.uint32)
+    m, kw = a_bits.shape
+    k, nw = b_bits.shape
+    if not ((kw - 1) * 32 < k <= kw * 32):
+        raise ValueError(f"contraction mismatch: A packs {kw * 32} cols, B has {k} rows")
+    # Zero-pad B's contraction rows up to A's packed width (zero rows are inert).
+    b_bits = _pad_to(b_bits, 0, 32) if k % 32 else b_bits
+    if interpret is None:
+        interpret = not on_tpu()
+    if not use_pallas:
+        return ref.bitmatmul_ref(a_bits, b_bits)
+
+    # Pad every dim to its block multiple (zero bits contribute nothing).
+    a_p = _pad_to(_pad_to(a_bits, 0, block_m), 1, block_k // 32)
+    b_p = _pad_to(_pad_to(b_bits, 0, block_k), 1, block_nw)
+    out = bitmatmul_pallas(
+        a_p,
+        b_p,
+        block_m=block_m,
+        block_nw=block_nw,
+        block_k=block_k,
+        interpret=interpret,
+    )
+    return out[:m, :nw]
+
+
+def lineage_gather(
+    row_ptr,
+    col_idx,
+    queries,
+    *,
+    max_deg: int,
+    block_q: int = 128,
+    interpret: bool | None = None,
+    use_pallas: bool = True,
+):
+    """Batched CSR probe -> (Q, max_deg) padded neighbor table."""
+    row_ptr = jnp.asarray(row_ptr, dtype=jnp.int32)
+    col_idx = jnp.asarray(col_idx, dtype=jnp.int32)
+    queries = jnp.asarray(queries, dtype=jnp.int32)
+    if interpret is None:
+        interpret = not on_tpu()
+    q = queries.shape[0]
+    md = max(int(max_deg), 1)
+    # Sentinel-pad col_idx so the dynamic slice never reads OOB.
+    col_p = jnp.concatenate([col_idx, jnp.full((md,), -1, jnp.int32)])
+    if not use_pallas:
+        return ref.lineage_gather_ref(queries, row_ptr, col_p, max_deg=md)
+    md_pad = -(-md // 128) * 128 if md > 8 else md  # lane-align when big
+    col_p = jnp.concatenate([col_idx, jnp.full((md_pad,), -1, jnp.int32)])
+    q_p = _pad_to(queries, 0, block_q)
+    out = lineage_gather_pallas(
+        q_p, row_ptr, col_p, max_deg=md_pad, block_q=block_q, interpret=interpret
+    )
+    return out[:q, :md]
+
+
+def bitset_rank(
+    words,
+    positions,
+    *,
+    block_q: int = 128,
+    interpret: bool | None = None,
+    use_pallas: bool = True,
+):
+    """Batched inclusive rank over one packed bitset."""
+    words = jnp.asarray(words, dtype=jnp.uint32)
+    positions = jnp.asarray(positions, dtype=jnp.int32)
+    if interpret is None:
+        interpret = not on_tpu()
+    if not use_pallas:
+        return ref.bitset_rank_ref(words, positions)
+    q = positions.shape[0]
+    # -1 pads resolve to rank 0 in-kernel via the pos<0 guard.
+    p_p = _pad_to(positions, 0, block_q, value=0)
+    out = bitset_rank_pallas(words, p_p, block_q=block_q, interpret=interpret)
+    return out[:q]

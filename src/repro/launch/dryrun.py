@@ -1,0 +1,276 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be the first two lines — jax locks the device count on first init:
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import dataclasses
+import functools
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch import shapes as SH
+from repro.launch import sharding as SD
+from repro.models import pshard as PS
+from repro.models.registry import get_model
+from repro.train.optimizer import AdamWConfig
+from repro.train.trainer import init_train_state, make_train_step
+
+
+def _act_policy(mesh) -> dict:
+    """Default activation policy: batch over (pod,data), width over model.
+
+    moe_groups = |data shards|: MoE dispatch sorts within each data shard
+    (local argsort) instead of one global sort (see models/moe.py).
+    """
+    fs = SD.fsdp_axes(mesh)
+    dp_size = 1
+    for a in fs:
+        dp_size *= mesh.shape[a]
+    return {"dp": fs or None, "tp": SD.tp_axis(mesh), "moe_groups": dp_size}
+
+
+def _fit_n_micro(requested: int, global_batch: int, mesh,
+                 layout: str = "fsdp_tp") -> int:
+    """Largest n_micro <= requested with (batch/n_micro) divisible by |dp|
+    (a microbatch smaller than the data axis forces GSPMD to replicate)."""
+    dp_axes, _ = SD.layout_axes(mesh, layout)
+    dp = 1
+    for a in dp_axes:
+        dp *= mesh.shape[a]
+    nm = max(1, min(requested, global_batch))
+    while nm > 1 and (global_batch % nm or (global_batch // nm) % dp):
+        nm -= 1
+    return nm
+
+__all__ = ["lower_cell", "run_dryrun", "collective_bytes"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of one HLO result type, incl. tuples."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes per collective kind over the compiled module."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"(?:ROOT )?%?[\w.\-]+ = (.+?) (\w[\w\-]*)\(", s)
+        if not m:
+            continue
+        type_str, op = m.groups()
+        for kind in _COLLECTIVES:
+            if op == kind or op.startswith(kind + "-"):
+                out[kind] += _shape_bytes(type_str)
+                break
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Cell lowering
+# ---------------------------------------------------------------------------
+def _abstract_state(cfg, opt_cfg):
+    return jax.eval_shape(
+        functools.partial(init_train_state, cfg, opt_cfg=opt_cfg),
+        jax.random.PRNGKey(0),
+    )
+
+
+def lower_cell(arch: str, shape: str, mesh, opt_cfg: Optional[AdamWConfig] = None,
+               policy_extra: Optional[dict] = None, layout: str = "fsdp_tp",
+               cfg_overrides: Optional[dict] = None,
+               n_micro_override: Optional[int] = None):
+    """Returns (lowered, compiled) for one cell on one mesh."""
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    cell = SH.SHAPES[shape]
+    model = get_model(cfg)
+    opt_cfg = opt_cfg or AdamWConfig()
+    nm = _fit_n_micro(n_micro_override or SH.n_micro(arch, shape),
+                      cell.global_batch, mesh, layout)
+    qc = SH.q_chunk(arch, shape)
+    policy = {**_act_policy(mesh), **(policy_extra or {})}
+    if layout == "dp_only":
+        policy["dp"] = tuple(mesh.axis_names)
+        policy["tp"] = None
+        policy["moe_groups"] = 1
+
+    with jax.set_mesh(mesh), PS.use_policy(policy):
+        if cell.kind == "train":
+            state_shapes = _abstract_state(cfg, opt_cfg)
+            batch_shapes = SH.input_specs(arch, shape)
+            state_sh = SD.to_shardings(SD.state_pspecs(state_shapes, mesh, layout), mesh)
+            batch_sh = SD.to_shardings(SD.batch_pspecs(batch_shapes, mesh, layout), mesh)
+            step = make_train_step(cfg, opt_cfg, n_micro=nm, q_chunk=qc)
+            jitted = jax.jit(
+                step,
+                in_shardings=(state_sh, batch_sh),
+                out_shardings=(state_sh, None),
+                donate_argnums=(0,),
+            )
+            lowered = jitted.lower(state_shapes, batch_shapes)
+
+        elif cell.kind == "prefill":
+            params_shapes = _abstract_state(cfg, opt_cfg).params
+            param_sh = SD.to_shardings(SD.param_pspecs(params_shapes, mesh, layout), mesh)
+            ins = SH.input_specs(arch, shape)
+            in_sh = SD.to_shardings(SD.batch_pspecs(ins, mesh, layout), mesh)
+            if cfg.is_encdec:
+                fn = lambda p, tokens, frames: model.prefill(cfg, p, frames, tokens,
+                                                             q_chunk=qc)
+                jitted = jax.jit(fn, in_shardings=(param_sh, in_sh["tokens"],
+                                                   in_sh["frames"]))
+                lowered = jitted.lower(params_shapes, ins["tokens"], ins["frames"])
+            else:
+                fn = lambda p, tokens: model.prefill(cfg, p, tokens, q_chunk=qc)
+                jitted = jax.jit(fn, in_shardings=(param_sh, in_sh["tokens"]))
+                lowered = jitted.lower(params_shapes, ins["tokens"])
+
+        else:  # decode
+            params_shapes = _abstract_state(cfg, opt_cfg).params
+            param_sh = SD.to_shardings(SD.param_pspecs(params_shapes, mesh, layout), mesh)
+            cache_shapes = SH.cache_specs(arch, shape)
+            cache_sh = SD.to_shardings(SD.cache_pspecs(cache_shapes, mesh), mesh)
+            ins = SH.input_specs(arch, shape)
+            tok_sh = SD.to_shardings(SD.batch_pspecs(ins, mesh, layout), mesh)
+
+            def serve_step(p, cache, token, pos):
+                return model.decode_step(cfg, p, token, pos, cache)
+
+            jitted = jax.jit(
+                serve_step,
+                in_shardings=(param_sh, cache_sh, tok_sh["token"], tok_sh["pos"]),
+                out_shardings=(None, cache_sh),
+                donate_argnums=(1,),
+            )
+            lowered = jitted.lower(params_shapes, cache_shapes, ins["token"], ins["pos"])
+
+        compiled = lowered.compile()
+    return lowered, compiled
+
+
+# ---------------------------------------------------------------------------
+# The sweep
+# ---------------------------------------------------------------------------
+def run_cell(arch: str, shape: str, mesh, mesh_name: str) -> Dict[str, Any]:
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape, "mesh": mesh_name}
+    skip = SH.cell_skip_reason(arch, shape)
+    if skip:
+        rec["status"] = "skip"
+        rec["reason"] = skip
+        return rec
+    t0 = time.time()
+    try:
+        lowered, compiled = lower_cell(arch, shape, mesh)
+        rec["status"] = "ok"
+        rec["compile_s"] = round(time.time() - t0, 1)
+        try:
+            ma = compiled.memory_analysis()
+            rec["memory"] = {
+                k: int(getattr(ma, k))
+                for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "generated_code_size_in_bytes")
+                if hasattr(ma, k)
+            }
+        except Exception as e:  # pragma: no cover
+            rec["memory"] = {"error": str(e)}
+        try:
+            ca = compiled.cost_analysis()
+            ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+            rec["cost"] = {
+                "flops": float(ca.get("flops", -1)),
+                "bytes_accessed": float(ca.get("bytes accessed", -1)),
+            }
+        except Exception as e:  # pragma: no cover
+            rec["cost"] = {"error": str(e)}
+        try:
+            from repro.launch.hloanal import analyze_hlo
+            txt = compiled.as_text()
+            rec["collectives"] = collective_bytes(txt)        # raw (loops once)
+            rec["hlo"] = analyze_hlo(txt).as_dict()           # scan-corrected
+        except Exception as e:
+            rec["hlo"] = {"error": str(e)}
+    except Exception as e:
+        rec["status"] = "fail"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["trace"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def run_dryrun(archs=None, shapes=None, meshes=("single", "multi"),
+               out_path: Optional[str] = None) -> Dict[str, Any]:
+    archs = archs or SH._ARCH_ORDER
+    shapes = shapes or list(SH.SHAPES)
+    results = []
+    for mesh_name in meshes:
+        mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+        for arch in archs:
+            for shape in shapes:
+                rec = run_cell(arch, shape, mesh, mesh_name)
+                status = rec["status"]
+                extra = (f" {rec.get('compile_s', '')}s" if status == "ok"
+                         else f" ({rec.get('reason', rec.get('error', ''))[:80]})")
+                print(f"[{mesh_name:6s}] {arch:24s} {shape:12s} {status}{extra}",
+                      flush=True)
+                results.append(rec)
+    summary = {
+        "results": results,
+        "ok": sum(r["status"] == "ok" for r in results),
+        "skip": sum(r["status"] == "skip" for r in results),
+        "fail": sum(r["status"] == "fail" for r in results),
+    }
+    if out_path:
+        os.makedirs(os.path.dirname(out_path), exist_ok=True)
+        with open(out_path, "w") as f:
+            json.dump(summary, f, indent=1)
+    return summary
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", action="append", default=None)
+    ap.add_argument("--shape", action="append", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--out", default="reports/dryrun.json")
+    args = ap.parse_args()
+    meshes = ("single", "multi") if args.mesh == "both" else (args.mesh,)
+    summary = run_dryrun(args.arch, args.shape, meshes, args.out)
+    print(f"\nok={summary['ok']} skip={summary['skip']} fail={summary['fail']}")
+    if summary["fail"]:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,261 @@
+"""Scan-aware HLO accounting for the roofline analysis.
+
+``compiled.cost_analysis()`` counts every ``while`` body ONCE — but our
+models scan over layer blocks (and the trainer scans over microbatches), so
+raw numbers undercount by the product of trip counts (e.g. 126x for
+llama3-405b).  This module parses the post-optimization HLO text and fixes
+that:
+
+1. split the module into named computations;
+2. build the call graph: ``while`` ops link to their body/condition
+   computations (trip count = the loop bound constant in the condition),
+   fusions link via ``calls=``, conditionals via branch computations;
+3. propagate a MULTIPLIER from the entry computation (x trip count through
+   while bodies, x1 elsewhere);
+4. tally, per computation and weighted by multiplier:
+   * dot FLOPs (2 x numel(result) x contraction size — the MXU term),
+   * collective bytes by kind (result-shape bytes of all-gather/all-reduce/
+     reduce-scatter/all-to-all/collective-permute),
+   * HBM traffic ~= sum over top-level ops of result+operand bytes (each
+     post-fusion op's boundary IS memory traffic to first order; fusion
+     bodies are skipped for bytes, included for dot FLOPs).
+
+All counts are PER DEVICE (the HLO is the per-partition SPMD module).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["HloStats", "analyze_hlo"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4, "c64": 8,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_TYPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*"
+    r"(\([^)]*\)|[\w\[\],]+(?:\{[\d,]*\})?)\s+([\w\-]+)\("
+)
+_OPERAND_RE = re.compile(r"%[\w.\-]+")
+
+
+def _type_info(type_str: str) -> Tuple[int, List[Tuple[str, List[int]]]]:
+    """(total bytes, [(dtype, dims), ...]) for a possibly-tuple type."""
+    total = 0
+    shapes = []
+    for dt, dims in _TYPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        ds = [int(d) for d in dims.split(",") if d]
+        n = 1
+        for d in ds:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+        shapes.append((dt, ds))
+    return total, shapes
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    kind: str
+    type_str: str
+    line: str
+
+
+@dataclasses.dataclass
+class _Computation:
+    name: str
+    ops: List[_Op]
+    is_fusion_body: bool = False
+
+
+@dataclasses.dataclass
+class HloStats:
+    dot_flops: float = 0.0
+    traffic_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    per_collective: Dict[str, float] = dataclasses.field(default_factory=dict)
+    n_while: int = 0
+    trip_counts: List[int] = dataclasses.field(default_factory=list)
+
+    def as_dict(self) -> Dict:
+        return {
+            "dot_flops": self.dot_flops,
+            "traffic_bytes": self.traffic_bytes,
+            "collective_bytes": self.collective_bytes,
+            "per_collective": dict(self.per_collective),
+            "n_while": self.n_while,
+            "trip_counts": list(self.trip_counts),
+        }
+
+
+def _split_computations(text: str) -> Dict[str, _Computation]:
+    comps: Dict[str, _Computation] = {}
+    cur: Optional[_Computation] = None
+    for line in text.splitlines():
+        if not line.startswith(" ") and "{" in line and ("(" in line or line.startswith("ENTRY")):
+            m = re.match(r"(?:ENTRY\s+)?(%?[\w.\-]+)\s*(?:\(|\{)", line.strip())
+            if m:
+                name = m.group(1).lstrip("%")
+                cur = _Computation(name=name, ops=[])
+                comps[name] = cur
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        d = _DEF_RE.match(line)
+        if d:
+            cur.ops.append(_Op(name=d.group(1).lstrip("%"), kind=d.group(3),
+                               type_str=d.group(2), line=line.strip()))
+    return comps
+
+
+def _entry_name(text: str, comps: Dict[str, _Computation]) -> Optional[str]:
+    m = re.search(r"^ENTRY\s+(%?[\w.\-]+)", text, re.M)
+    if m:
+        return m.group(1).lstrip("%")
+    # fallback: a computation never referenced by others
+    referenced = set()
+    for c in comps.values():
+        for op in c.ops:
+            for key in ("condition=", "body=", "calls=", "to_apply=",
+                        "branch_computations="):
+                if key in op.line:
+                    for nm in re.findall(key.rstrip("=") + r"=\{?([^,)}]+)", op.line):
+                        referenced.add(nm.strip().lstrip("%"))
+    for name in comps:
+        if name not in referenced:
+            return name
+    return None
+
+
+def _trip_count(cond: _Computation) -> int:
+    best = 1
+    for op in cond.ops:
+        if op.kind == "constant":
+            m = re.search(r"constant\((\d+)\)", op.line)
+            if m:
+                v = int(m.group(1))
+                if 1 <= v <= 1_000_000:
+                    best = max(best, v)
+    return best
+
+
+def analyze_hlo(text: str) -> HloStats:
+    comps = _split_computations(text)
+    entry = _entry_name(text, comps)
+    stats = HloStats(per_collective={k: 0.0 for k in _COLLECTIVES})
+    if entry is None or entry not in comps:
+        return stats
+
+    # symbol table: op name -> type string (module-wide; names are unique)
+    types: Dict[str, str] = {}
+    for c in comps.values():
+        for op in c.ops:
+            types[op.name] = op.type_str
+
+    # multipliers via worklist from the entry
+    mult: Dict[str, float] = {entry: 1.0}
+    fusion_body: Dict[str, bool] = {name: False for name in comps}
+    work = [entry]
+    seen_edges = set()
+    while work:
+        cname = work.pop()
+        c = comps.get(cname)
+        if c is None:
+            continue
+        m = mult.get(cname, 1.0)
+        for op in c.ops:
+            line = op.line
+            if op.kind == "while":
+                stats.n_while += 1
+                mb = re.search(r"body=(%?[\w.\-]+)", line)
+                mc = re.search(r"condition=(%?[\w.\-]+)", line)
+                if not (mb and mc):
+                    continue
+                body = mb.group(1).lstrip("%")
+                cond = mc.group(1).lstrip("%")
+                trips = _trip_count(comps[cond]) if cond in comps else 1
+                stats.trip_counts.append(trips)
+                edge = (cname, body)
+                if edge not in seen_edges:
+                    seen_edges.add(edge)
+                    mult[body] = mult.get(body, 0.0) + m * trips
+                    work.append(body)
+            else:
+                for key, is_fusion in (("calls=", True), ("to_apply=", False),
+                                       ("branch_computations=", False)):
+                    if key in line:
+                        for nm in re.findall(key.rstrip("=") + r"=\{?([%\w.\-, ]+)\}?", line):
+                            for part in nm.split(","):
+                                callee = part.strip().lstrip("%")
+                                if callee in comps:
+                                    edge = (cname, callee)
+                                    if edge not in seen_edges:
+                                        seen_edges.add(edge)
+                                        mult[callee] = mult.get(callee, 0.0) + m
+                                        fusion_body[callee] = fusion_body.get(callee, False) or is_fusion
+                                        work.append(callee)
+
+    _SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+                   "bitcast", "while", "conditional", "call"}
+
+    for cname, c in comps.items():
+        m = mult.get(cname)
+        if m is None:
+            continue
+        in_fusion = fusion_body.get(cname, False)
+        for op in c.ops:
+            # --- dot FLOPs (everywhere, incl. fusion bodies) ----------------
+            if op.kind in ("dot", "convolution"):
+                out_bytes, out_shapes = _type_info(op.type_str)
+                numel = 1
+                for _, ds in out_shapes:
+                    for d in ds:
+                        numel *= d
+                # contraction size from the first operand's type
+                operands = _OPERAND_RE.findall(op.line.split("(", 1)[1])
+                csize = 1
+                if operands:
+                    lhs_t = types.get(operands[0].lstrip("%"), "")
+                    _, lhs_shapes = _type_info(lhs_t)
+                    mdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+                    if lhs_shapes and mdims:
+                        dims = [int(x) for x in mdims.group(1).split(",") if x]
+                        for d in dims:
+                            if d < len(lhs_shapes[0][1]):
+                                csize *= lhs_shapes[0][1][d]
+                stats.dot_flops += m * 2.0 * numel * csize
+            if in_fusion:
+                continue
+            # --- collective bytes -------------------------------------------
+            for kind in _COLLECTIVES:
+                if op.kind == kind or op.kind.startswith(kind + "-"):
+                    b, _ = _type_info(op.type_str)
+                    stats.per_collective[kind] += m * b
+                    stats.collective_bytes += m * b
+                    break
+            # --- HBM traffic ------------------------------------------------
+            if op.kind in _SKIP_BYTES:
+                continue
+            out_b, _ = _type_info(op.type_str)
+            in_b = 0
+            args = op.line.split("(", 1)[1]
+            for ref in _OPERAND_RE.findall(args.split("metadata")[0]):
+                t = types.get(ref.lstrip("%"))
+                if t:
+                    b, _ = _type_info(t)
+                    in_b += b
+            stats.traffic_bytes += m * (out_b + in_b)
+    return stats

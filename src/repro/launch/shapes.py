@@ -1,0 +1,138 @@
+"""The assigned input-shape cells and their ShapeDtypeStruct stand-ins.
+
+Four shapes per architecture (40 cells total):
+
+    train_4k      seq 4096,    global_batch 256   -> lowers train_step
+    prefill_32k   seq 32768,   global_batch 32    -> lowers prefill
+    decode_32k    seq 32768,   global_batch 128   -> lowers serve_step
+    long_500k     seq 524288,  global_batch 1     -> lowers serve_step
+
+``long_500k`` needs a sub-quadratic mechanism: it RUNS for ssm/hybrid
+(constant-size SSD state) and for gemma3's 5:1 local:global interleave
+(bounded window caches; the few global layers hold an O(S) cache sharded
+over the model axis), and is SKIPPED for pure full-attention stacks —
+the skip table below mirrors DESIGN.md §6.
+
+``input_specs`` returns weak-type-correct ShapeDtypeStructs only — nothing
+is ever allocated for the full configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.registry import get_config
+
+__all__ = ["SHAPES", "ShapeCell", "input_specs", "cell_skip_reason", "all_cells"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                    # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524_288, 1, "decode"),
+}
+
+# archs with a sub-quadratic mechanism (bounded state or bounded window)
+_LONG_OK = {"mamba2-370m", "jamba-1.5-large-398b", "gemma3-12b", "gemma3-1b"}
+
+
+def cell_skip_reason(arch: str, shape: str) -> Optional[str]:
+    if shape == "long_500k" and arch not in _LONG_OK:
+        return ("pure full attention on every layer: no sub-quadratic "
+                "mechanism for a 500k-token cache (DESIGN.md §6)")
+    return None
+
+
+def all_cells():
+    for arch in _ARCH_ORDER:
+        for shape in SHAPES:
+            yield arch, shape
+
+
+_ARCH_ORDER = [
+    "gemma3-12b", "llama3-405b", "gemma3-1b", "olmo-1b", "whisper-small",
+    "qwen3-moe-235b-a22b", "dbrx-132b", "mamba2-370m",
+    "jamba-1.5-large-398b", "chameleon-34b",
+]
+
+
+def input_specs(arch: str, shape: str) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    b, s = cell.global_batch, cell.seq_len
+    i32 = jnp.int32
+
+    if cell.kind == "train":
+        specs: Dict[str, Any] = {
+            "tokens": jax.ShapeDtypeStruct((b, s), i32),
+            "labels": jax.ShapeDtypeStruct((b, s), i32),
+        }
+        if cfg.is_encdec:
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+        return specs
+
+    if cell.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        if cfg.is_encdec:
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+        return specs
+
+    # decode: one new token against an S-long cache
+    return {
+        "token": jax.ShapeDtypeStruct((b,), i32),
+        "pos": jax.ShapeDtypeStruct((), i32),
+    }
+
+
+def cache_specs(arch: str, shape: str) -> Any:
+    """ShapeDtypeStructs of the decode cache for a decode cell."""
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    from repro.models.registry import get_model
+    model = get_model(cfg)
+    return jax.eval_shape(
+        lambda: model.init_cache(cfg, cell.global_batch, cell.seq_len,
+                                 dtype=jnp.bfloat16)
+    )
+
+
+# per-(arch, shape) lowering knobs: microbatch count + query chunking,
+# chosen so the per-device activation footprint fits 16 GB HBM
+_N_MICRO = {
+    ("llama3-405b", "train_4k"): 16,
+    ("jamba-1.5-large-398b", "train_4k"): 16,
+    ("chameleon-34b", "train_4k"): 8,
+    ("dbrx-132b", "train_4k"): 8,
+    ("qwen3-moe-235b-a22b", "train_4k"): 8,
+    ("gemma3-12b", "train_4k"): 4,
+    # enc-dec: per-microbatch encoder recompute is the price of fitting
+    # 16 GB HBM (temp 107 -> 13.5 GB at nm=16; EXPERIMENTS.md §Perf A3)
+    ("whisper-small", "train_4k"): 16,
+}
+
+
+def n_micro(arch: str, shape: str) -> int:
+    return _N_MICRO.get((arch, shape), 2 if shape == "train_4k" else 1)
+
+
+def q_chunk(arch: str, shape: str) -> int:
+    cell = SHAPES[shape]
+    if cell.kind in ("train", "prefill") and cell.seq_len > 8192:
+        return 2048
+    return 0

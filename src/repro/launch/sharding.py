@@ -1,0 +1,226 @@
+"""Partition rules: FSDP x TP layout for every param / batch / cache leaf.
+
+MaxText-style logical rules, resolved per-mesh with a DIVISIBILITY GUARD: a
+dim is only sharded if its size divides the product of the proposed axes
+(e.g. whisper's vocab 51865 is not 16-divisible -> the vocab dim of its
+embedding falls back to replicated, the d_model dim still FSDPs).
+
+Layout summary (fsdp = ("pod","data") when present, tp = "model"):
+
+  embed        (V, D)        -> (tp, fsdp)     vocab-sharded embedding
+  lm_head      (D, V)        -> (fsdp, tp)
+  attn wq/wk/wv(D, H*hd)     -> (fsdp, tp)
+  attn wo      (H*hd, D)     -> (tp, fsdp)
+  mlp wi/wg    (D, F)        -> (fsdp, tp)
+  mlp wo       (F, D)        -> (tp, fsdp)
+  moe router   (D, E)        -> (fsdp, None)
+  moe wi/wg    (E, D, F)     -> (tp, fsdp, None)   expert-parallel
+  moe wo       (E, F, D)     -> (tp, None, fsdp)
+  ssd in_proj  (D, X)        -> (fsdp, tp)
+  ssd out_proj (di, D)       -> (tp, fsdp)
+  ssd conv     (k, Cd)       -> (None, tp)
+  norms/scalars              -> replicated
+  stacked-layer leading axis -> None prepended (blocks / enc_layers / ...)
+
+Batches: tokens/labels (B, S) -> (dp, None) when B divides; frames
+(B, T, D) -> (dp, None, None).  Caches: batch over dp when divisible; KV
+heads over tp when divisible, else SEQUENCE over tp (the flash-decode
+layout for kv_heads < |tp|); long-context batch-1 cells shard the sequence
+over (data, model) jointly.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "fsdp_axes", "tp_axis", "param_pspecs", "batch_pspecs", "cache_pspecs",
+    "state_pspecs", "to_shardings",
+]
+
+
+def fsdp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def tp_axis(mesh: Mesh) -> Optional[str]:
+    return "model" if "model" in mesh.axis_names else None
+
+
+def layout_axes(mesh: Mesh, layout: str = "fsdp_tp"):
+    """(fsdp_axes, tp_axis) for a named layout.
+
+    fsdp_tp  — FSDP over (pod, data) x tensor-parallel over model (default).
+    dp_only  — pure data parallelism over EVERY axis, no TP: the right
+               layout for models far too small to fill a TP group (whisper:
+               d_model 768 on a 16-wide model axis leaves 48-wide matmul
+               shards and pays per-layer weight gathers; see §Perf iter D2).
+    """
+    if layout == "dp_only":
+        return tuple(mesh.axis_names), None
+    return fsdp_axes(mesh), tp_axis(mesh)
+
+
+def _axes_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+
+def _guard(mesh: Mesh, size: int, axes):
+    """axes if size divides their product, else None (replicate)."""
+    if axes is None:
+        return None
+    n = _axes_size(mesh, axes)
+    return axes if (n > 1 and size % n == 0) else None
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+def _param_rule(mesh: Mesh, path: str, shape: Tuple[int, ...],
+                layout: str = "fsdp_tp") -> P:
+    fs, tp = layout_axes(mesh, layout)
+    fs = fs or None
+    stacked = any(seg in path for seg in ("blocks/", "enc_layers/", "dec_layers/"))
+    core = shape[1:] if stacked else shape
+    name = path.rsplit("/", 1)[-1]
+
+    def spec(*dims) -> P:
+        resolved = [_guard(mesh, core[i], d) for i, d in enumerate(dims)]
+        if stacked:
+            resolved = [None] + resolved
+        return P(*resolved)
+
+    if len(core) <= 1:
+        return P(*([None] * len(shape)))
+
+    if name == "embed":
+        return spec(tp, fs)
+    if name == "lm_head":
+        return spec(fs, tp)
+    if "moe" in path:
+        if name == "router":
+            return spec(fs, None)
+        if name in ("wi", "wg"):
+            return spec(tp, fs, None)
+        if name == "wo":
+            return spec(tp, None, fs)
+    if "mlp" in path or "attn" in path or "cross" in path:
+        if name in ("wi", "wg", "wq", "wk", "wv"):
+            return spec(fs, tp)
+        if name == "wo":
+            return spec(tp, fs)
+    if "ssd" in path:
+        if name == "in_proj":
+            return spec(fs, tp)
+        if name == "out_proj":
+            return spec(tp, fs)
+        if name == "conv_w":
+            return spec(None, tp)
+    # fallback: FSDP the largest dim
+    dims: list = [None] * len(core)
+    big = int(np.argmax(core))
+    dims[big] = _guard(mesh, core[big], fs)
+    if stacked:
+        dims = [None] + dims
+    return P(*dims)
+
+
+def param_pspecs(shapes: Any, mesh: Mesh, layout: str = "fsdp_tp") -> Any:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(shapes)
+    specs = [_param_rule(mesh, _path_str(p), tuple(l.shape), layout)
+             for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ---------------------------------------------------------------------------
+# Batches
+# ---------------------------------------------------------------------------
+def batch_pspecs(shapes: Any, mesh: Mesh, layout: str = "fsdp_tp") -> Any:
+    dp = (tuple(mesh.axis_names) if layout == "dp_only" else fsdp_axes(mesh)) or None
+
+    def rule(path, leaf):
+        shape = tuple(leaf.shape)
+        if len(shape) == 0:
+            return P()
+        b = _guard(mesh, shape[0], dp)
+        return P(b, *([None] * (len(shape) - 1)))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(shapes)
+    return jax.tree_util.tree_unflatten(treedef, [rule(p, l) for p, l in flat])
+
+
+# ---------------------------------------------------------------------------
+# Decode caches
+# ---------------------------------------------------------------------------
+_CACHE_RANK = {"k": 4, "v": 4, "ck": 4, "cv": 4, "state": 4, "conv": 3}
+
+
+def _cache_rule(mesh: Mesh, path: str, shape: Tuple[int, ...]) -> P:
+    dp = fsdp_axes(mesh) or None
+    tp = tp_axis(mesh)
+    name = path.rsplit("/", 1)[-1]
+    # stacked (scan) caches carry a leading layer axis above the core rank
+    core_rank = _CACHE_RANK.get(name, len(shape))
+    stacked = len(shape) == core_rank + 1
+    core = shape[1:] if stacked else shape
+
+    def wrap(resolved):
+        return P(*(([None] + resolved) if stacked else resolved))
+
+    if name in ("k", "v", "ck", "cv"):
+        b, s, kv, hd = core
+        bax = _guard(mesh, b, dp)
+        if bax is None and _guard(mesh, s, dp + (tp,) if (dp and tp) else tp) is not None:
+            # batch-1 long-context: sequence over (data, model) jointly
+            joint = (dp + (tp,)) if dp else (tp,)
+            return wrap([None, _guard(mesh, s, joint), None, None])
+        if _guard(mesh, kv, tp) is not None:
+            return wrap([bax, None, tp, None])
+        return wrap([bax, _guard(mesh, s, tp), None, None])
+    if name == "state":                      # SSD (B, H, P, N)
+        b, h, p_, n = core
+        return wrap([_guard(mesh, b, dp), _guard(mesh, h, tp), None, None])
+    if name == "conv":                       # (B, k-1, Cd)
+        b, k_, cd = core
+        return wrap([_guard(mesh, b, dp), None, _guard(mesh, cd, tp)])
+    return P(*([None] * len(shape)))
+
+
+def cache_pspecs(shapes: Any, mesh: Mesh) -> Any:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(shapes)
+    specs = [_cache_rule(mesh, _path_str(p), tuple(l.shape)) for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ---------------------------------------------------------------------------
+# TrainState (params + optimizer) — moments mirror the param layout
+# ---------------------------------------------------------------------------
+def state_pspecs(state_shapes: Any, mesh: Mesh, layout: str = "fsdp_tp") -> Any:
+    from repro.train.trainer import TrainState
+    from repro.train.optimizer import OptState
+
+    pspecs = param_pspecs(state_shapes.params, mesh, layout)
+    err = (None if state_shapes.opt.err is None
+           else param_pspecs(state_shapes.opt.err, mesh, layout))
+    return TrainState(
+        params=pspecs,
+        opt=OptState(step=P(), mu=pspecs, nu=pspecs, err=err),
+    )
+
+
+def to_shardings(pspecs: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), pspecs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,84 @@
+"""Training launcher.
+
+Two modes:
+
+* LOCAL (default): actually trains a reduced config of ``--arch`` on the
+  host devices with the provenance-carrying data pipeline, fault-tolerant
+  loop and async checkpoints — runnable end-to-end on this CPU container.
+
+* PROD (--mesh single|multi): builds the production mesh (placeholder
+  devices), lowers + compiles the FULL config's train step with the
+  FSDP x TP layout, and prints the memory/cost analysis — the launch path a
+  real TPU fleet would take (on hardware the same code runs instead of
+  stopping at compile).
+
+    PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --steps 30
+    PYTHONPATH=src python -m repro.launch.train --arch llama3-405b \
+        --mesh multi --dry-run
+
+XLA flags for a real run: --xla_tpu_enable_latency_hiding_scheduler=true
+--xla_tpu_megacore_fusion_allow_ags=true (compute/comm overlap; set them in
+the deployment environment, they are inert on CPU).
+"""
+import argparse
+import os
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--mesh", choices=["local", "single", "multi"], default="local")
+    ap.add_argument("--dry-run", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--grad-compress", action="store_true")
+    args = ap.parse_args()
+
+    if args.mesh != "local":
+        # production path: device-count env var must precede jax init
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+        from repro.launch.dryrun import run_cell
+        from repro.launch.mesh import make_production_mesh
+        mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+        rec = run_cell(args.arch, "train_4k", mesh, args.mesh)
+        print({k: v for k, v in rec.items() if k != "trace"})
+        sys.exit(0 if rec["status"] in ("ok", "skip") else 1)
+
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.registry import get_smoke_config
+    from repro.data.pipeline import CorpusConfig, TokenPipeline
+    from repro.train.checkpoint import CheckpointManager
+    from repro.train.loop import LoopConfig, run_training
+    from repro.train.optimizer import AdamWConfig
+    from repro.train.trainer import init_train_state, make_train_step
+
+    cfg = get_smoke_config(args.arch)
+    opt = AdamWConfig(lr_peak=1e-3, warmup_steps=10, total_steps=args.steps,
+                      grad_compress_bits=8 if args.grad_compress else 0)
+    state = init_train_state(cfg, jax.random.PRNGKey(0), opt)
+    step = jax.jit(make_train_step(cfg, opt, n_micro=2))
+    tp = TokenPipeline(CorpusConfig(n_docs=256, mean_len=128, vocab=cfg.vocab,
+                                    seed=0), seq_len=args.seq)
+
+    def batch_fn(s):
+        b = tp.batch_at(s, args.batch, record_provenance=True)
+        out = {"tokens": jnp.asarray(b["tokens"]), "labels": jnp.asarray(b["labels"])}
+        if cfg.is_encdec:
+            out["frames"] = jax.random.normal(
+                jax.random.PRNGKey(s), (args.batch, cfg.enc_seq, cfg.d_model))
+        return out
+
+    ckpt = CheckpointManager(os.path.join(args.ckpt_dir, args.arch), keep=2)
+    out = run_training(step, state, batch_fn, ckpt,
+                       LoopConfig(total_steps=args.steps, ckpt_every=10))
+    print(f"loss: {out['losses'][0]:.3f} -> {out['losses'][-1]:.3f} "
+          f"({len(out['losses'])} steps, resumed_from={out['resumed_from']})")
+    print(f"batch 0 raw-document lineage: {len(tp.batch_to_documents(0))} docs")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,298 @@
+"""Shared model components: norms, RoPE, GQA attention, gated MLP.
+
+Functional style throughout: params are plain dicts of jnp arrays, every
+entry point takes (cfg, params, ...).  Sharding is by annotation only —
+:mod:`repro.launch.sharding` maps the same dict structure to PartitionSpecs;
+nothing here touches the mesh.
+
+Attention serves four duties from one implementation:
+  * training   — full-sequence causal (optionally sliding-window) with
+                 query-chunking (lax.scan over q blocks) so the score matrix
+                 never exceeds (q_chunk x S) per head: required for 32k+
+                 prefill on 16 GB HBM;
+  * prefill    — same as training path, returns the populated KV cache;
+  * decode     — single-query step against a cache (one new token);
+  * encoder    — bidirectional (no mask), whisper's stub-frontend encoder.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+__all__ = [
+    "rmsnorm",
+    "nonparam_ln",
+    "norm_apply",
+    "rope",
+    "init_attn",
+    "attn_forward",
+    "attn_decode",
+    "init_mlp",
+    "mlp_forward",
+    "init_dense",
+    "cross_attn_forward",
+    "cross_attn_decode",
+]
+
+Params = Dict[str, jax.Array]
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def nonparam_ln(x: jax.Array, _scale=None, eps: float = 1e-5) -> jax.Array:
+    """OLMo's non-parametric LayerNorm: no scale, no bias."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def norm_apply(cfg: ModelConfig, x: jax.Array, scale: Optional[jax.Array]) -> jax.Array:
+    if cfg.norm == "nonparam_ln":
+        return nonparam_ln(x)
+    return rmsnorm(x, scale)
+
+
+def init_norm(cfg: ModelConfig, d: int) -> Params:
+    if cfg.norm == "nonparam_ln":
+        return {}  # no parameters at all
+    return {"scale": jnp.zeros((d,), jnp.float32)}
+
+
+def _norm_scale(p: Params) -> Optional[jax.Array]:
+    return p.get("scale")
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32) * (math.log(theta) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA; causal / sliding-window / bidirectional; cached decode)
+# ---------------------------------------------------------------------------
+def init_attn(cfg: ModelConfig, key: jax.Array, cross: bool = False) -> Params:
+    d, hd = cfg.d_model, cfg.hd
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    p = {
+        "wq": jax.random.normal(ks[0], (d, h * hd), jnp.float32) * s,
+        "wk": jax.random.normal(ks[1], (d, kv * hd), jnp.float32) * s,
+        "wv": jax.random.normal(ks[2], (d, kv * hd), jnp.float32) * s,
+        "wo": jax.random.normal(ks[3], (h * hd, d), jnp.float32) * s,
+    }
+    if cfg.qk_norm and not cross:
+        p["q_scale"] = jnp.zeros((hd,), jnp.float32)
+        p["k_scale"] = jnp.zeros((hd,), jnp.float32)
+    return p
+
+
+def _project_qkv(cfg: ModelConfig, p: Params, xq: jax.Array, xkv: jax.Array,
+                 q_pos, k_pos, use_rope: bool):
+    b = xq.shape[0]
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = xq.dtype
+    q = (xq @ p["wq"].astype(dt)).reshape(b, -1, h, hd)
+    k = (xkv @ p["wk"].astype(dt)).reshape(b, -1, kv, hd)
+    v = (xkv @ p["wv"].astype(dt)).reshape(b, -1, kv, hd)
+    if cfg.qk_norm and "q_scale" in p:
+        q = rmsnorm(q, p["q_scale"])
+        k = rmsnorm(k, p["k_scale"])
+    if use_rope:
+        q = rope(q, q_pos, cfg.rope_theta)
+        k = rope(k, k_pos, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(cfg: ModelConfig, q: jax.Array, k: jax.Array, v: jax.Array,
+          mask: Optional[jax.Array]) -> jax.Array:
+    """q: (B, Sq, H, hd); k/v: (B, Sk, KV, hd); mask: (Sq, Sk) bool or None."""
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, hd)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k) / math.sqrt(hd)
+    scores = scores.astype(jnp.float32)
+    if mask is not None:
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(b, sq, h * hd)
+
+
+def _make_mask(sq: int, sk: int, q_off, kind: str, window: int) -> Optional[jax.Array]:
+    if kind == "bidir":
+        return None
+    qi = q_off + jnp.arange(sq)[:, None]
+    kj = jnp.arange(sk)[None, :]
+    mask = kj <= qi
+    if kind == "local" and window > 0:
+        mask &= kj > qi - window
+    return mask
+
+
+def attn_forward(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,                 # (B, S, D)
+    kind: str = "causal",         # causal | local | bidir
+    q_chunk: int = 0,             # 0 = no chunking
+) -> jax.Array:
+    b, s, _ = x.shape
+    pos = jnp.arange(s)[None, :]
+    use_rope = kind != "bidir"
+    q, k, v = _project_qkv(cfg, p, x, x, pos, pos, use_rope)
+    if q_chunk and s > q_chunk and s % q_chunk == 0:
+        nq = s // q_chunk
+        qs = q.reshape(b, nq, q_chunk, cfg.n_heads, cfg.hd).swapaxes(0, 1)
+
+        def body(carry, args):
+            i, qc = args
+            mask = _make_mask(q_chunk, s, i * q_chunk, kind, cfg.window)
+            return carry, _sdpa(cfg, qc, k, v, mask)
+
+        _, outs = jax.lax.scan(body, 0, (jnp.arange(nq), qs))
+        out = outs.swapaxes(0, 1).reshape(b, s, cfg.n_heads * cfg.hd)
+    else:
+        mask = _make_mask(s, s, 0, kind, cfg.window)
+        out = _sdpa(cfg, q, k, v, mask)
+    return out @ p["wo"].astype(x.dtype)
+
+
+def attn_prefill(
+    cfg: ModelConfig, p: Params, x: jax.Array, kind: str, q_chunk: int = 0
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Forward + return the KV cache (positions [0, S) filled).
+
+    q-chunked exactly like :func:`attn_forward`: the score matrix never
+    exceeds (q_chunk x S) per head — required for 32k prefill in 16 GB HBM.
+    """
+    b, s, _ = x.shape
+    pos = jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(cfg, p, x, x, pos, pos, kind != "bidir")
+    if q_chunk and s > q_chunk and s % q_chunk == 0:
+        nq = s // q_chunk
+        qs = q.reshape(b, nq, q_chunk, cfg.n_heads, cfg.hd).swapaxes(0, 1)
+
+        def body(carry, args):
+            i, qc = args
+            mask = _make_mask(q_chunk, s, i * q_chunk, kind, cfg.window)
+            return carry, _sdpa(cfg, qc, k, v, mask)
+
+        _, outs = jax.lax.scan(body, 0, (jnp.arange(nq), qs))
+        out = outs.swapaxes(0, 1).reshape(b, s, cfg.n_heads * cfg.hd)
+    else:
+        mask = _make_mask(s, s, 0, kind, cfg.window)
+        out = _sdpa(cfg, q, k, v, mask)
+    return out @ p["wo"].astype(x.dtype), {"k": k, "v": v}
+
+
+def attn_decode(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,                 # (B, 1, D)
+    cache: Dict[str, jax.Array],  # k/v: (B, S_max, KV, hd)
+    pos: jax.Array,               # scalar int32: index of the new token
+    kind: str = "causal",
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    b = x.shape[0]
+    q, k_new, v_new = _project_qkv(cfg, p, x, x, pos[None, None], pos[None, None], True)
+    s_max = cache["k"].shape[1]
+    # ring buffer when the cache is exactly window-sized (sliding-window layer)
+    ring = kind == "local" and cfg.window > 0 and s_max <= cfg.window
+    slot = jnp.mod(pos, s_max) if ring else pos
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype), (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype), (0, slot, 0, 0))
+    sk = k.shape[1]
+    kj = jnp.arange(sk)[None, :]
+    if ring:
+        # slots [0, min(pos+1, W)) hold the last `window` tokens
+        mask = kj < jnp.minimum(pos + 1, sk)
+    elif kind == "local" and cfg.window > 0:
+        mask = (kj <= pos) & (kj > pos - cfg.window)
+    else:
+        mask = kj <= pos
+    out = _sdpa(cfg, q, k, v, mask.reshape(1, sk))
+    return out @ p["wo"].astype(x.dtype), {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (whisper decoder): K/V from the encoder, precomputed once
+# ---------------------------------------------------------------------------
+def cross_attn_forward(cfg: ModelConfig, p: Params, x: jax.Array, enc: jax.Array) -> jax.Array:
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(cfg, p, x, enc, None, None, use_rope=False)
+    return _sdpa(cfg, q, k, v, None) @ p["wo"].astype(x.dtype)
+
+
+def cross_kv(cfg: ModelConfig, p: Params, enc: jax.Array) -> Dict[str, jax.Array]:
+    b = enc.shape[0]
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    dt = enc.dtype
+    return {
+        "ck": (enc @ p["wk"].astype(dt)).reshape(b, -1, kv, hd),
+        "cv": (enc @ p["wv"].astype(dt)).reshape(b, -1, kv, hd),
+    }
+
+
+def cross_attn_decode(cfg: ModelConfig, p: Params, x: jax.Array,
+                      ckv: Dict[str, jax.Array]) -> jax.Array:
+    b = x.shape[0]
+    h, hd = cfg.n_heads, cfg.hd
+    dt = x.dtype
+    q = (x @ p["wq"].astype(dt)).reshape(b, -1, h, hd)
+    out = _sdpa(cfg, q, ckv["ck"].astype(dt), ckv["cv"].astype(dt), None)
+    return out @ p["wo"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+def init_mlp(cfg: ModelConfig, key: jax.Array) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {
+        "wi": jax.random.normal(ks[0], (d, f), jnp.float32) / math.sqrt(d),
+        "wo": jax.random.normal(ks[2], (f, d), jnp.float32) / math.sqrt(f),
+    }
+    if cfg.gated_mlp:
+        p["wg"] = jax.random.normal(ks[1], (d, f), jnp.float32) / math.sqrt(d)
+    return p
+
+
+def mlp_forward(p: Params, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    if "wg" in p:  # SwiGLU
+        h = jax.nn.silu(x @ p["wg"].astype(dt)) * (x @ p["wi"].astype(dt))
+    else:          # GELU 2-matrix (whisper)
+        h = jax.nn.gelu(x @ p["wi"].astype(dt))
+    return h @ p["wo"].astype(dt)
+
+
+def init_dense(key: jax.Array, shape: Tuple[int, ...], scale: float) -> jax.Array:
+    return jax.random.normal(key, shape, jnp.float32) * scale

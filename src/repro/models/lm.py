@@ -1,0 +1,318 @@
+"""Decoder-only LM assembly: embeddings + scanned blocks + head.
+
+Covers 8 of the 10 assigned architectures (dense llama3/olmo, gemma3's
+5-local:1-global interleave, qwen3/dbrx MoE, mamba2 pure-SSD, jamba hybrid,
+chameleon early-fusion VLM backbone).  Whisper (enc-dec) lives in
+:mod:`repro.models.whisper` and reuses every sublayer from here.
+
+Layer stacking: the repeating BLOCK of LayerSpecs is lax.scan'ned with
+params stacked on a leading n_blocks axis (keeps HLO size O(block), compile
+time flat in depth — 126-layer llama3 compiles as 1 block x 126).  TAIL
+layers (depth not divisible by block length) are unrolled.
+
+Three entry points per model:
+  forward(cfg, params, tokens)            -> logits            (training)
+  prefill(cfg, params, tokens, cache)     -> logits, cache     (serving)
+  decode_step(cfg, params, token, pos, cache) -> logits, cache (serving)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.models import common as C
+from repro.models import moe as M
+from repro.models import pshard as PS
+from repro.models import ssd as S
+
+__all__ = [
+    "init_params",
+    "forward",
+    "prefill",
+    "decode_step",
+    "init_cache",
+]
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def _init_layer(cfg: ModelConfig, spec: LayerSpec, key: jax.Array) -> Params:
+    k1, k2 = jax.random.split(key)
+    p: Params = {"pre_norm": C.init_norm(cfg, cfg.d_model)}
+    if spec.mixer in ("attn", "attn_local", "attn_bidir"):
+        p["attn"] = C.init_attn(cfg, k1)
+    elif spec.mixer == "ssd":
+        p["ssd"] = S.init_ssd(cfg, k1)
+    else:
+        raise ValueError(spec.mixer)
+    if spec.ffn != "none":
+        p["post_norm"] = C.init_norm(cfg, cfg.d_model)
+        if spec.ffn == "mlp":
+            p["mlp"] = C.init_mlp(cfg, k2)
+        elif spec.ffn == "moe":
+            p["moe"] = M.init_moe(cfg, k2)
+        else:
+            raise ValueError(spec.ffn)
+    return p
+
+
+def _init_block(cfg: ModelConfig, key: jax.Array) -> Params:
+    ks = jax.random.split(key, len(cfg.block))
+    return {f"l{i}": _init_layer(cfg, spec, ks[i]) for i, spec in enumerate(cfg.block)}
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    ks = jax.random.split(key, 4 + len(cfg.tail))
+    p: Params = {
+        "embed": jax.random.normal(ks[0], (cfg.padded_vocab, cfg.d_model),
+                                   jnp.float32) / math.sqrt(cfg.d_model),
+        "final_norm": C.init_norm(cfg, cfg.d_model),
+    }
+    # stacked block params: vmap init over the n_blocks axis
+    block_keys = jax.random.split(ks[1], cfg.n_blocks)
+    p["blocks"] = jax.vmap(lambda k: _init_block(cfg, k))(block_keys)
+    for i, spec in enumerate(cfg.tail):
+        p[f"tail{i}"] = _init_layer(cfg, spec, ks[4 + i])
+    if not cfg.tie_embeddings:
+        p["lm_head"] = jax.random.normal(
+            ks[2], (cfg.d_model, cfg.padded_vocab), jnp.float32) / math.sqrt(cfg.d_model)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Layer application (training / full-sequence)
+# ---------------------------------------------------------------------------
+_KIND = {"attn": "causal", "attn_local": "local", "attn_bidir": "bidir"}
+
+
+def _apply_layer(cfg: ModelConfig, spec: LayerSpec, p: Params, x: jax.Array,
+                 q_chunk: int) -> jax.Array:
+    # Sequence-parallel residual stream (OPT-IN via policy 'sp' -> model
+    # axis): the residual boundary each scan step saves for backward is
+    # sharded S/|tp| per device instead of replicated — the 405B-on-16GB
+    # lever.  Measured trade (EXPERIMENTS.md §Perf iter C3): temp -23 GB,
+    # HBM traffic -36%, but +2100 s of reshard collectives under our cost
+    # model — so it stays opt-in, not default.
+    sp = bool((PS.policy() or {}).get("sp"))
+    if sp:
+        x = PS.hint(x, "dp", "sp", None)
+    h = C.norm_apply(cfg, x, C._norm_scale(p["pre_norm"]))
+    if spec.mixer == "ssd":
+        x = x + S.ssd_forward(cfg, p["ssd"], h)
+    else:
+        x = x + C.attn_forward(cfg, p["attn"], h, kind=_KIND[spec.mixer], q_chunk=q_chunk)
+    if spec.ffn != "none":
+        if sp:
+            x = PS.hint(x, "dp", "sp", None)
+        h = C.norm_apply(cfg, x, C._norm_scale(p["post_norm"]))
+        if spec.ffn == "mlp":
+            x = x + C.mlp_forward(p["mlp"], h)
+        else:
+            x = x + M.moe_forward(cfg, p["moe"], h)
+    return x
+
+
+def _apply_block(cfg: ModelConfig, bp: Params, x: jax.Array, q_chunk: int) -> jax.Array:
+    for i, spec in enumerate(cfg.block):
+        x = _apply_layer(cfg, spec, bp[f"l{i}"], x, q_chunk)
+    return x
+
+
+def _embed(cfg: ModelConfig, params: Params, tokens: jax.Array,
+           dtype=jnp.bfloat16) -> jax.Array:
+    x = params["embed"].astype(dtype)[tokens]
+    return PS.hint(x, "dp", None, None)
+
+
+def _head(cfg: ModelConfig, params: Params, x: jax.Array) -> jax.Array:
+    x = C.norm_apply(cfg, x, C._norm_scale(params["final_norm"]))
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ w.astype(x.dtype)).astype(jnp.float32)
+    if cfg.padded_vocab != cfg.vocab:   # mask the padding rows to -inf
+        vid = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+        logits = jnp.where(vid < cfg.vocab, logits, -1e30)
+    return PS.hint(logits, "dp", None, "tp")
+
+
+def forward(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jax.Array,              # (B, S) int32
+    q_chunk: int = 0,
+    dtype=jnp.bfloat16,
+) -> jax.Array:
+    """Training forward: causal logits (B, S, V) float32."""
+    x = _embed(cfg, params, tokens, dtype)
+
+    body = lambda bp, h: _apply_block(cfg, bp, h, q_chunk)
+    if cfg.remat:
+        pol = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+               if cfg.remat_policy == "dots"
+               else jax.checkpoint_policies.nothing_saveable)
+        body = jax.checkpoint(body, policy=pol)
+
+    if cfg.scan_layers and cfg.n_blocks > 1:
+        def scan_fn(h, bp):
+            return body(bp, h), None
+        x, _ = jax.lax.scan(scan_fn, x, params["blocks"])
+    else:
+        for j in range(cfg.n_blocks):
+            bp = jax.tree.map(lambda a: a[j], params["blocks"])
+            x = body(bp, x)
+    for i, spec in enumerate(cfg.tail):
+        x = _apply_layer(cfg, spec, params[f"tail{i}"], x, q_chunk)
+    return _head(cfg, params, x)
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+def _layer_cache(cfg: ModelConfig, spec: LayerSpec, batch: int, s_max: int,
+                 dtype) -> Params:
+    if spec.mixer == "ssd":
+        return S.init_ssd_cache(cfg, batch, dtype)
+    length = min(cfg.window, s_max) if (spec.mixer == "attn_local" and cfg.window) else s_max
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((batch, length, kv, hd), dtype),
+        "v": jnp.zeros((batch, length, kv, hd), dtype),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int, dtype=jnp.bfloat16) -> Params:
+    cache: Params = {}
+    block_caches = [
+        {f"l{i}": _layer_cache(cfg, spec, batch, s_max, dtype)
+         for i, spec in enumerate(cfg.block)}
+        for _ in range(cfg.n_blocks)
+    ]
+    cache["blocks"] = jax.tree.map(lambda *xs: jnp.stack(xs), *block_caches) \
+        if cfg.n_blocks > 1 else jax.tree.map(lambda x: x[None], block_caches[0])
+    for i, spec in enumerate(cfg.tail):
+        cache[f"tail{i}"] = _layer_cache(cfg, spec, batch, s_max, dtype)
+    return cache
+
+
+def _decode_layer(cfg: ModelConfig, spec: LayerSpec, p: Params, x: jax.Array,
+                  lc: Params, pos: jax.Array) -> Tuple[jax.Array, Params]:
+    h = C.norm_apply(cfg, x, C._norm_scale(p["pre_norm"]))
+    if spec.mixer == "ssd":
+        out, lc = S.ssd_decode(cfg, p["ssd"], h, lc)
+        x = x + out
+    else:
+        out, lc = C.attn_decode(cfg, p["attn"], h, lc, pos, kind=_KIND[spec.mixer])
+        x = x + out
+    if spec.ffn != "none":
+        h = C.norm_apply(cfg, x, C._norm_scale(p["post_norm"]))
+        x = x + (C.mlp_forward(p["mlp"], h) if spec.ffn == "mlp"
+                 else M.moe_forward(cfg, p["moe"], h))
+    return x, lc
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: Params,
+    token: jax.Array,               # (B,) int32 — the newest token
+    pos: jax.Array,                 # scalar int32 — its position
+    cache: Params,
+    dtype=jnp.bfloat16,
+) -> Tuple[jax.Array, Params]:
+    """One decode step: (B, V) float32 logits for the NEXT token + new cache."""
+    x = _embed(cfg, params, token[:, None], dtype)
+
+    def block_body(h, xs):
+        bp, bc = xs
+        new_bc = {}
+        for i, spec in enumerate(cfg.block):
+            h, new_bc[f"l{i}"] = _decode_layer(cfg, spec, bp[f"l{i}"], h, bc[f"l{i}"], pos)
+        return h, new_bc
+
+    if cfg.scan_layers and cfg.n_blocks > 1:
+        x, new_blocks = jax.lax.scan(block_body, x, (params["blocks"], cache["blocks"]))
+    else:
+        new_list = []
+        for j in range(cfg.n_blocks):
+            bp = jax.tree.map(lambda a: a[j], params["blocks"])
+            bc = jax.tree.map(lambda a: a[j], cache["blocks"])
+            x, nb = block_body(x, (bp, bc))
+            new_list.append(nb)
+        new_blocks = jax.tree.map(lambda *xs: jnp.stack(xs), *new_list)
+    new_cache: Params = {"blocks": new_blocks}
+    for i, spec in enumerate(cfg.tail):
+        x, new_cache[f"tail{i}"] = _decode_layer(
+            cfg, spec, params[f"tail{i}"], x, cache[f"tail{i}"], pos
+        )
+    logits = _head(cfg, params, x)[:, 0, :]
+    return logits, new_cache
+
+
+def prefill(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jax.Array,              # (B, S)
+    q_chunk: int = 0,
+    dtype=jnp.bfloat16,
+) -> Tuple[jax.Array, Params]:
+    """Process the whole prompt, return last-position logits + filled cache.
+
+    Lowered for the prefill_32k cells.  KV caches are emitted at prompt
+    length; the serving engine right-pads them into the decode-time ring.
+    """
+    b, s = tokens.shape
+    x = _embed(cfg, params, tokens, dtype)
+    caches: Params = {}
+
+    def block_fn(h, bp):
+        new_bc = {}
+        for i, spec in enumerate(cfg.block):
+            p = bp[f"l{i}"]
+            hn = C.norm_apply(cfg, h, C._norm_scale(p["pre_norm"]))
+            if spec.mixer == "ssd":
+                out, sc = S.ssd_forward(cfg, p["ssd"], hn, return_cache=True)
+                new_bc[f"l{i}"] = sc
+                h = h + out
+            else:
+                out, kvc = C.attn_prefill(cfg, p["attn"], hn, _KIND[spec.mixer], q_chunk)
+                new_bc[f"l{i}"] = kvc
+                h = h + out
+            if spec.ffn != "none":
+                hn = C.norm_apply(cfg, h, C._norm_scale(p["post_norm"]))
+                h = h + (C.mlp_forward(p["mlp"], hn) if spec.ffn == "mlp"
+                         else M.moe_forward(cfg, p["moe"], hn))
+        return h, new_bc
+
+    if cfg.scan_layers and cfg.n_blocks > 1:
+        x, caches["blocks"] = jax.lax.scan(lambda h, bp: block_fn(h, bp), x, params["blocks"])
+    else:
+        outs = []
+        for j in range(cfg.n_blocks):
+            bp = jax.tree.map(lambda a: a[j], params["blocks"])
+            x, bc = block_fn(x, bp)
+            outs.append(bc)
+        caches["blocks"] = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    for i, spec in enumerate(cfg.tail):
+        hn = C.norm_apply(cfg, x, C._norm_scale(params[f"tail{i}"]["pre_norm"]))
+        if spec.mixer == "ssd":
+            out, caches[f"tail{i}"] = S.ssd_forward(
+                cfg, params[f"tail{i}"]["ssd"], hn, return_cache=True)
+            x = x + out
+        else:
+            out, kvc = C.attn_prefill(cfg, params[f"tail{i}"]["attn"], hn,
+                                      _KIND[spec.mixer], q_chunk)
+            caches[f"tail{i}"] = kvc
+            x = x + out
+        if spec.ffn != "none":
+            p = params[f"tail{i}"]
+            hn = C.norm_apply(cfg, x, C._norm_scale(p["post_norm"]))
+            x = x + (C.mlp_forward(p["mlp"], hn) if spec.ffn == "mlp"
+                     else M.moe_forward(cfg, p["moe"], hn))
+    logits = _head(cfg, params, x[:, -1:, :])[:, 0, :]
+    return logits, caches

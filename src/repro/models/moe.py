@@ -1,0 +1,139 @@
+"""Mixture-of-Experts FFN with GROUPED sort-based token dispatch.
+
+Expert-parallel design (qwen3-moe 128e/top-8, dbrx 16e/top-4, jamba 16e/top-2):
+
+* router: (T, E) logits -> top-k expert ids + softmaxed weights;
+* dispatch: the token stream is reshaped into G groups (the launcher sets
+  G = |data shards| via the pshard policy, so each group IS one data shard's
+  tokens).  Tokens are replicated k times and SORTED BY EXPERT WITHIN THEIR
+  GROUP — argsort along the last axis keeps the G axis sharded, so the sort
+  is LOCAL to each data shard.  (A single global sort forces GSPMD to
+  all-gather the whole token stream: the baseline dry-run measured that at
+  933 s of collective time per step on qwen3-moe train_4k — the grouped
+  dispatch is the fix, see EXPERIMENTS.md §Perf.)
+* capacity: rank-within-expert computed per group; overflow drops
+  (capacity_factor bounded, lane-aligned);
+* expert compute: (G, E, C, D) x (E, D, F) einsums — G sharded over data,
+  E sharded over "model" (expert parallel).  The buffer is built locally
+  per (data, expert) shard pair; the only EP collective left is the
+  combine-side gather of expert outputs.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import pshard as PS
+
+__all__ = ["init_moe", "moe_forward"]
+
+Params = Dict[str, jax.Array]
+
+
+def init_moe(cfg: ModelConfig, key: jax.Array) -> Params:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": jax.random.normal(ks[0], (d, e), jnp.float32) / math.sqrt(d),
+        "wi": jax.random.normal(ks[1], (e, d, f), jnp.float32) / math.sqrt(d),
+        "wg": jax.random.normal(ks[2], (e, d, f), jnp.float32) / math.sqrt(d),
+        "wo": jax.random.normal(ks[3], (e, f, d), jnp.float32) / math.sqrt(f),
+    }
+
+
+def _capacity(cfg: ModelConfig, tokens_per_group: int) -> int:
+    # C is a SUBLANE dim of the (G,E,C,D) buffer (D covers the 128 lanes), so
+    # 8-alignment suffices; a 128 floor padded decode-sized batches 16x
+    # (measured: qwen3-moe decode_32k useful ratio 0.078 with floor 128).
+    per = tokens_per_group * cfg.top_k / cfg.n_experts
+    c = int(math.ceil(per * cfg.capacity_factor / 8.0)) * 8
+    return max(c, 8)
+
+
+def _n_groups(t: int) -> int:
+    pol = PS.policy() or {}
+    g = int(pol.get("moe_groups", 1) or 1)
+    return g if (g > 1 and t % g == 0) else 1
+
+
+def moe_forward(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    """x: (B, S, D) -> (B, S, D)."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    g = _n_groups(t)
+    tg = t // g
+    xt = x.reshape(g, tg, d)
+    xt = PS.hint(xt, "dp", None, None)
+    dt = x.dtype
+
+    # ---- router ---------------------------------------------------------
+    logits = (xt.astype(jnp.float32) @ p["router"])            # (G, Tg, E)
+    topw, topi = jax.lax.top_k(logits, k)                      # (G, Tg, k)
+    topw = jax.nn.softmax(topw, axis=-1).astype(dt)
+
+    # ---- grouped sort-based dispatch --------------------------------------
+    flat_e = topi.reshape(g, tg * k)                           # expert per slot
+    flat_w = topw.reshape(g, tg * k)
+    flat_tok = jnp.tile(
+        jnp.repeat(jnp.arange(tg, dtype=jnp.int32), k)[None, :], (g, 1))
+
+    order = jnp.argsort(flat_e, axis=-1)                       # LOCAL per group
+    e_sorted = jnp.take_along_axis(flat_e, order, axis=-1)
+    tok_sorted = jnp.take_along_axis(flat_tok, order, axis=-1)
+
+    # rank within expert = position - first position of that expert (per group)
+    eids = jnp.arange(e, dtype=e_sorted.dtype)
+    starts = jax.vmap(jnp.searchsorted)(e_sorted, jnp.tile(eids[None], (g, 1)))
+    rank = (jnp.arange(tg * k, dtype=jnp.int32)[None, :]
+            - jnp.take_along_axis(starts, e_sorted, axis=-1).astype(jnp.int32))
+
+    cap = _capacity(cfg, tg)
+    keep = rank < cap                                          # overflow drops
+    slot = jnp.where(keep, e_sorted * cap + rank, e * cap)     # sentinel row
+    gidx = jnp.tile(jnp.arange(g, dtype=jnp.int32)[:, None], (1, tg * k))
+
+    # slot -> token map (SMALL int array: (G, E*C+1), replicated over 'model')
+    tok_of_slot = jnp.full((g, e * cap + 1), tg, jnp.int32)    # default: zero row
+    tok_of_slot = tok_of_slot.at[gidx, slot].set(tok_sorted, mode="drop")
+
+    # dispatch is a GATHER from the token stream, not a scatter into the
+    # buffer: tokens are dp-sharded / tp-replicated, so every expert shard
+    # gathers its own (E/|tp|, C) rows LOCALLY.  (A scatter here makes GSPMD
+    # replicate the (G,E,C,D) buffer across 'model' — measured 17 GB of
+    # all-gather per microbatch-layer on qwen3-moe before this change.)
+    xt_pad = jnp.concatenate([xt, jnp.zeros((g, 1, d), dt)], axis=1)
+    buf = jnp.take_along_axis(
+        xt_pad, tok_of_slot[:, : e * cap, None], axis=1
+    ).reshape(g, e, cap, d)                                    # (G, E, C, D)
+    buf = PS.hint(buf, "dp", "tp", None, None)                 # expert-parallel
+
+    # ---- expert compute (E sharded over "model", G over data) -------------
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, p["wg"].astype(dt)))
+    h = h * jnp.einsum("gecd,edf->gecf", buf, p["wi"].astype(dt))
+    y = jnp.einsum("gecf,efd->gecd", h, p["wo"].astype(dt))    # (G, E, C, D)
+
+    # ---- combine: SCATTER-ADD from buffer rows, not gather ------------------
+    # Gathering y_flat[slot] would need every expert's rows on every data
+    # shard — GSPMD lowers that as a full all-gather of the (G,E,C,D) buffer
+    # over the model axis (measured: 2.7 GB/layer/microbatch on qwen3-moe).
+    # Instead each BUFFER ROW knows its destination token (slot->token map,
+    # small and replicated) and its router weight; every expert shard
+    # scatter-ADDS only the rows it owns into the (G,Tg,D) token layout, and
+    # the partial sums meet in one all-reduce of token activations — k/E of
+    # the buffer bytes.
+    w_sorted = jnp.take_along_axis(flat_w, order, axis=-1)     # (G, Tg*k)
+    w_of_slot = jnp.zeros((g, e * cap + 1), dt)
+    w_of_slot = w_of_slot.at[gidx, slot].set(w_sorted.astype(dt), mode="drop")
+
+    y_flat = y.reshape(g, e * cap, d)                          # (dp, tp)-sharded
+    contrib = y_flat * w_of_slot[:, : e * cap, None]           # elementwise
+    rows = jnp.tile(jnp.arange(g, dtype=jnp.int32)[:, None], (1, e * cap))
+    out = jnp.zeros((g, tg + 1, d), dt)
+    out = out.at[rows, tok_of_slot[:, : e * cap]].add(contrib, mode="drop")
+    out = PS.hint(out[:, :tg], "dp", None, None)
+    return out.reshape(b, s, d)

@@ -1,0 +1,26 @@
+"""Uniform model interface over the two assembly modules (lm / whisper)."""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple
+
+from repro.configs.base import ModelConfig
+from repro.models import lm, whisper
+
+__all__ = ["Model", "get_model"]
+
+
+class Model(NamedTuple):
+    init_params: Callable
+    forward: Callable       # training logits
+    prefill: Callable
+    decode_step: Callable
+    init_cache: Callable
+
+
+_LM = Model(lm.init_params, lm.forward, lm.prefill, lm.decode_step, lm.init_cache)
+_ENCDEC = Model(whisper.init_params, whisper.forward, whisper.prefill,
+                whisper.decode_step, whisper.init_cache)
+
+
+def get_model(cfg: ModelConfig) -> Model:
+    return _ENCDEC if cfg.is_encdec else _LM

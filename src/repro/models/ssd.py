@@ -1,0 +1,195 @@
+"""Mamba2 block: short causal conv + SSD (state-space duality) mixer.
+
+Training path is the CHUNKED dual form (arXiv:2405.21060 §6): within-chunk
+terms are attention-like einsums (MXU-friendly), across-chunk terms are a
+scan over per-chunk states — O(S) memory, matmul-dominated compute.
+
+Decode path is the recurrent form: a constant-size (B, H, P, N) state and a
+(B, k-1, conv_dim) conv ring — no KV cache, which is why mamba2/jamba RUN
+the long_500k cell (DESIGN.md §6).
+
+Shapes: D=d_model, d_inner=expand*D, P=ssm_head_dim, H=d_inner/P heads,
+N=ssm_state, G=1 B/C group.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+__all__ = ["init_ssd", "ssd_forward", "ssd_decode", "init_ssd_cache"]
+
+Params = Dict[str, jax.Array]
+
+
+def _dims(cfg: ModelConfig):
+    d = cfg.d_model
+    di = cfg.d_inner
+    p_ = cfg.ssm_head_dim
+    h = di // p_
+    n = cfg.ssm_state
+    return d, di, p_, h, n
+
+
+def init_ssd(cfg: ModelConfig, key: jax.Array) -> Params:
+    d, di, p_, h, n = _dims(cfg)
+    conv_dim = di + 2 * n
+    ks = jax.random.split(key, 4)
+    return {
+        # in_proj -> [z (di), x (di), B (n), C (n), dt (h)]
+        "in_proj": jax.random.normal(ks[0], (d, 2 * di + 2 * n + h), jnp.float32) / math.sqrt(d),
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim), jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.zeros((h,), jnp.float32),           # A = -exp(A_log) in (-1, 0]
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm_scale": jnp.zeros((di,), jnp.float32),
+        "out_proj": jax.random.normal(ks[3], (di, d), jnp.float32) / math.sqrt(di),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj: jax.Array):
+    _, di, p_, h, n = _dims(cfg)
+    z = proj[..., :di]
+    xbc = proj[..., di : di + di + 2 * n]
+    dt = proj[..., di + di + 2 * n :]
+    return z, xbc, dt
+
+
+def _causal_conv(w: jax.Array, b: jax.Array, x: jax.Array) -> jax.Array:
+    """Depthwise causal conv, kernel (k, C), x (B, S, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k))
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def _gated_norm(x: jax.Array, z: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x = x * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+            * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def ssd_forward(cfg: ModelConfig, p: Params, x: jax.Array,
+                return_cache: bool = False):
+    """Chunked SSD training/prefill pass.  x: (B, S, D) -> (B, S, D).
+
+    ``return_cache=True`` additionally returns the decode-handoff cache:
+    the final recurrent state and the conv ring tail."""
+    d, di, p_, h, n = _dims(cfg)
+    b, s, _ = x.shape
+    q = cfg.ssm_chunk
+    assert s % q == 0, (s, q)
+    c = s // q
+    dt_ = x.dtype
+
+    proj = x @ p["in_proj"].astype(dt_)
+    z, xbc_raw, dt = _split_proj(cfg, proj)
+    xbc = _causal_conv(p["conv_w"].astype(dt_), p["conv_b"].astype(dt_), xbc_raw)
+    xs = xbc[..., :di].reshape(b, s, h, p_)
+    Bm = xbc[..., di : di + n]                                   # (B,S,N) G=1
+    Cm = xbc[..., di + n :]                                      # (B,S,N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                     # (H,)
+    dA = dt * A[None, None, :]                                   # (B,S,H)
+
+    # chunk reshape
+    xs = xs.reshape(b, c, q, h, p_)
+    Bm = Bm.reshape(b, c, q, n)
+    Cm = Cm.reshape(b, c, q, n)
+    dt = dt.reshape(b, c, q, h)
+    dA = dA.reshape(b, c, q, h)
+    dA_cs = jnp.cumsum(dA, axis=2)                               # (B,C,Q,H)
+
+    # ---- within-chunk (attention-like dual form) ---------------------------
+    # L[l, s'] = exp(dA_cs[l] - dA_cs[s']) for s' <= l
+    seg = dA_cs[:, :, :, None, :] - dA_cs[:, :, None, :, :]      # (B,C,Q,Q,H)
+    li = jnp.tril(jnp.ones((q, q), bool))
+    L = jnp.where(li[None, None, :, :, None], jnp.exp(seg), 0.0).astype(dt_)
+    xdt = (xs * dt[..., None].astype(dt_))                       # (B,C,Q,H,P)
+    cb = jnp.einsum("bcln,bcsn->bcls", Cm, Bm)                   # (B,C,Q,Q)
+    y_diag = jnp.einsum("bcls,bclsh,bcshp->bclhp", cb, L, xdt)
+
+    # ---- per-chunk states + inter-chunk recurrence --------------------------
+    decay_out = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)             # (B,C,Q,H)
+    states = jnp.einsum("bcsn,bcsh,bcshp->bchpn", Bm, decay_out.astype(dt_), xdt)
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])                    # (B,C,H)
+
+    def scan_fn(carry, inp):
+        st, dec = inp                                            # (B,H,P,N), (B,H)
+        new = carry * dec[:, :, None, None].astype(carry.dtype) + st
+        return new, carry                                        # emit PREVIOUS state
+
+    init = jnp.zeros((b, h, p_, n), dt_)
+    final_state, prev_states = jax.lax.scan(
+        scan_fn, init, (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1))
+    )
+    prev_states = prev_states.swapaxes(0, 1)                     # (B,C,H,P,N)
+
+    decay_in = jnp.exp(dA_cs).astype(dt_)                        # (B,C,Q,H)
+    y_off = jnp.einsum("bcln,bchpn,bclh->bclhp", Cm, prev_states, decay_in)
+
+    y = (y_diag + y_off + xs * p["D"].astype(dt_)[None, None, None, :, None])
+    y = y.reshape(b, s, di)
+    y = _gated_norm(y, z, p["norm_scale"])
+    out = y @ p["out_proj"].astype(dt_)
+    if return_cache:
+        cache = {
+            "state": final_state.astype(jnp.float32),
+            "conv": xbc_raw[:, s - (cfg.ssm_conv - 1):, :],
+        }
+        return out, cache
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Recurrent decode
+# ---------------------------------------------------------------------------
+def init_ssd_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Dict[str, jax.Array]:
+    d, di, p_, h, n = _dims(cfg)
+    conv_dim = di + 2 * n
+    return {
+        "state": jnp.zeros((batch, h, p_, n), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+    }
+
+
+def ssd_decode(
+    cfg: ModelConfig, p: Params, x: jax.Array, cache: Dict[str, jax.Array]
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One token.  x: (B, 1, D)."""
+    d, di, p_, h, n = _dims(cfg)
+    b = x.shape[0]
+    dt_ = x.dtype
+
+    proj = x[:, 0, :] @ p["in_proj"].astype(dt_)                 # (B, ...)
+    z, xbc, dt = _split_proj(cfg, proj)
+
+    # conv ring: window = [cache, new]
+    win = jnp.concatenate([cache["conv"], xbc[:, None, :]], axis=1)  # (B,k,Cd)
+    conv_out = jnp.einsum("bkc,kc->bc", win, p["conv_w"].astype(dt_)) + p["conv_b"].astype(dt_)
+    xbc = jax.nn.silu(conv_out)
+    new_conv = win[:, 1:, :]
+
+    xs = xbc[:, :di].reshape(b, h, p_)
+    Bm = xbc[:, di : di + n]
+    Cm = xbc[:, di + n :]
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    dec = jnp.exp(dtv * A[None, :])                               # (B,H)
+
+    st = cache["state"]
+    new_st = st * dec[:, :, None, None] + jnp.einsum(
+        "bhp,bn,bh->bhpn", xs.astype(jnp.float32), Bm.astype(jnp.float32), dtv
+    )
+    y = jnp.einsum("bhpn,bn->bhp", new_st, Cm.astype(jnp.float32)).astype(dt_)
+    y = y + xs * p["D"].astype(dt_)[None, :, None]
+    y = y.reshape(b, di)
+    y = _gated_norm(y, z, p["norm_scale"])
+    out = (y @ p["out_proj"].astype(dt_))[:, None, :]
+    return out, {"state": new_st, "conv": new_conv}

@@ -1,0 +1,153 @@
+"""Async, atomic, mesh-elastic checkpointing (no orbax in this container).
+
+Layout per step::
+
+    <dir>/step_000123.tmp/          (written)
+        arrays.npz                  (flat {path: np.ndarray})
+        meta.msgpack                (step, tree structure, shapes, dtypes, crc)
+    <dir>/step_000123/              (atomic rename on completion)
+
+Fault-tolerance properties:
+
+* ATOMIC: readers only ever see fully-written checkpoints (rename is the
+  commit point; stale ``.tmp`` dirs from killed writers are garbage-collected
+  on next save);
+* ASYNC: ``save`` snapshots device arrays to host then hands the file write
+  to a background thread — training resumes immediately (the snapshot is the
+  only synchronous cost);
+* ELASTIC: arrays are saved UNSHARDED (gathered per-leaf) with their logical
+  shapes; ``restore`` re-shards onto WHATEVER mesh/sharding the restoring job
+  provides — a 2-pod checkpoint restores onto 1 pod or 4 (the
+  elastic-rescale path in EXPERIMENTS.md §Dry-run);
+* INTEGRITY: per-array CRC32 verified on load;
+* RETENTION: ``keep`` most-recent checkpoints, older ones pruned.
+
+On multi-host deployments the gather becomes
+``multihost_utils.process_allgather`` per leaf and only process 0 writes —
+the layout and commit protocol are unchanged.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import threading
+import zlib
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import msgpack
+import numpy as np
+
+__all__ = ["CheckpointManager"]
+
+Pytree = Any
+
+
+def _flatten_with_paths(tree: Pytree) -> List[Tuple[str, np.ndarray]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out.append((key, np.asarray(leaf)))
+    return out
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._gc_tmp()
+
+    # -- save -------------------------------------------------------------
+    def save(self, step: int, tree: Pytree, blocking: bool = False) -> None:
+        """Snapshot now, write in the background (or synchronously)."""
+        self.wait()  # at most one outstanding writer
+        flat = _flatten_with_paths(tree)           # synchronous device->host snapshot
+        treedef = jax.tree_util.tree_structure(tree)
+
+        def _write():
+            tmp = os.path.join(self.dir, f"step_{step:09d}.tmp")
+            final = os.path.join(self.dir, f"step_{step:09d}")
+            os.makedirs(tmp, exist_ok=True)
+            arrays = {k: v for k, v in flat}
+            np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+            meta = {
+                "step": step,
+                "treedef": str(treedef),
+                "keys": [k for k, _ in flat],
+                "crc": {k: zlib.crc32(np.ascontiguousarray(v).tobytes()) for k, v in flat},
+                "shapes": {k: list(v.shape) for k, v in flat},
+                "dtypes": {k: str(v.dtype) for k, v in flat},
+            }
+            with open(os.path.join(tmp, "meta.msgpack"), "wb") as f:
+                f.write(msgpack.packb(meta))
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)                  # the commit point
+            self._prune()
+
+        if blocking:
+            _write()
+        else:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # -- restore ------------------------------------------------------------
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def all_steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                out.append(int(name[5:]))
+        return sorted(out)
+
+    def restore(
+        self,
+        step: int,
+        like: Pytree,
+        shardings: Optional[Pytree] = None,
+    ) -> Pytree:
+        """Restore into the structure of ``like``; if ``shardings`` is given
+        (same tree structure, NamedSharding leaves) arrays are placed sharded
+        — onto ANY mesh, not necessarily the one that saved (elastic)."""
+        path = os.path.join(self.dir, f"step_{step:09d}")
+        with open(os.path.join(path, "meta.msgpack"), "rb") as f:
+            meta = msgpack.unpackb(f.read())
+        npz = np.load(os.path.join(path, "arrays.npz"))
+        flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+        shard_leaves = (
+            jax.tree_util.tree_leaves(shardings) if shardings is not None
+            else [None] * len(flat_like)
+        )
+        leaves = []
+        for (kpath, leaf), shard in zip(flat_like, shard_leaves):
+            key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in kpath)
+            arr = npz[key]
+            if zlib.crc32(np.ascontiguousarray(arr).tobytes()) != meta["crc"][key]:
+                raise IOError(f"checksum mismatch for {key} at step {step}")
+            if tuple(arr.shape) != tuple(leaf.shape):
+                raise ValueError(f"{key}: shape {arr.shape} != expected {leaf.shape}")
+            arr = arr.astype(leaf.dtype)
+            leaves.append(jax.device_put(arr, shard) if shard is not None else jax.device_put(arr))
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    # -- housekeeping ---------------------------------------------------------
+    def _prune(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:09d}"), ignore_errors=True)
+
+    def _gc_tmp(self) -> None:
+        for name in os.listdir(self.dir):
+            if name.endswith(".tmp"):
+                shutil.rmtree(os.path.join(self.dir, name), ignore_errors=True)

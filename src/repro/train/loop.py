@@ -1,0 +1,94 @@
+"""Fault-tolerant training loop: checkpoint/restart, stragglers, elasticity.
+
+Wraps the jitted train_step with the operational machinery a 1000+-node run
+needs.  Single-process semantics here; the multi-host hooks are marked where
+a coordinator-backed deployment plugs in.
+
+* RESUME: on start, restore the latest complete checkpoint (atomic dirs, so
+  a crash mid-save never corrupts the resume point) and continue from its
+  step; the data iterator is re-seeked deterministically from the step.
+* PERIODIC + FINAL checkpoints, async writes (training never blocks on I/O).
+* STRAGGLER MITIGATION: every step is timed against a deadline derived from
+  a running p50; steps beyond `straggler_factor` x p50 are logged and
+  counted.  On real fleets this signal feeds the coordinator that evicts or
+  re-shards around the slow host; here it is surfaced in metrics and the
+  step is never lost (synchronous SPMD cannot drop a participant — the
+  mitigation is detection + re-scheduling, not skipping).
+* CRASH INJECTION (tests): `fail_at_step` raises mid-run to prove restart
+  resumes bit-exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterator, List, Optional
+
+import jax
+import numpy as np
+
+from repro.train.checkpoint import CheckpointManager
+from repro.train.trainer import TrainState
+
+__all__ = ["LoopConfig", "run_training"]
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int
+    ckpt_every: int = 50
+    keep: int = 3
+    straggler_factor: float = 3.0
+    fail_at_step: Optional[int] = None   # test hook: simulated crash
+
+
+def run_training(
+    train_step: Callable,
+    state: TrainState,
+    batch_fn: Callable[[int], Dict[str, Any]],
+    ckpt: CheckpointManager,
+    cfg: LoopConfig,
+    state_shardings: Optional[Any] = None,
+    log: Callable[[str], None] = print,
+) -> Dict[str, Any]:
+    """``batch_fn(step)`` MUST be a pure function of the step (the data
+    pipeline is deterministic/resumable), so restart re-seeks exactly."""
+    start_step = 0
+    latest = ckpt.latest_step()
+    if latest is not None:
+        state = ckpt.restore(latest, like=state, shardings=state_shardings)
+        start_step = latest
+        log(f"[resume] restored step {latest}")
+
+    step_times: List[float] = []
+    stragglers = 0
+    losses: List[float] = []
+
+    for step in range(start_step, cfg.total_steps):
+        batch = batch_fn(step)
+        if cfg.fail_at_step is not None and step == cfg.fail_at_step:
+            raise RuntimeError(f"injected failure at step {step}")
+
+        t0 = time.perf_counter()
+        state, metrics = train_step(state, batch)
+        jax.block_until_ready(metrics["loss"])
+        dt = time.perf_counter() - t0
+
+        if len(step_times) >= 5:
+            p50 = float(np.median(step_times))
+            if dt > cfg.straggler_factor * p50:
+                stragglers += 1
+                log(f"[straggler] step {step}: {dt*1e3:.1f} ms vs p50 {p50*1e3:.1f} ms")
+        step_times.append(dt)
+        losses.append(float(metrics["loss"]))
+
+        if (step + 1) % cfg.ckpt_every == 0 or step + 1 == cfg.total_steps:
+            ckpt.save(step + 1, state)
+
+    ckpt.wait()
+    return {
+        "final_state": state,
+        "losses": losses,
+        "step_times": step_times,
+        "stragglers": stragglers,
+        "resumed_from": start_step,
+    }

@@ -1,0 +1,135 @@
+"""Sharded AdamW with the memory/communication tricks the mesh needs.
+
+No optax in this container — implemented from scratch:
+
+* AdamW with decoupled weight decay and global-norm clipping;
+* configurable MOMENT dtype (bf16 moments halve optimizer HBM — this is what
+  lets llama3-405b training state fit a single 16 GB-HBM v5e pod, see
+  EXPERIMENTS.md §Dry-run);
+* optional int8 GRADIENT COMPRESSION with error feedback for the cross-pod
+  reduction: gradients are fake-quantized to per-leaf int8 scale before the
+  (pod-axis) reduce, the quantization residual is carried in the state and
+  added back next step.  On real multi-pod hardware the quantize/dequantize
+  brackets the `psum` over the "pod" axis (32 GB/s DCI being the scarce
+  resource); the arithmetic here is exactly that path's.
+* linear-warmup + cosine LR schedule.
+
+Optimizer state sharding mirrors the parameter sharding 1:1 (same tree
+structure -> same PartitionSpecs), so FSDP splits moments as well.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "OptState", "init_opt_state", "adamw_update", "lr_schedule"]
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr_peak: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: Any = jnp.bfloat16       # bf16 moments: 8 B/param total state
+    accum_dtype: Any = jnp.float32          # microbatch grad-accumulation buffer
+    grad_compress_bits: int = 0             # 0 = off, 8 = int8 error-feedback
+
+
+class OptState(NamedTuple):
+    step: jax.Array       # scalar int32
+    mu: Pytree            # first moment (moment_dtype)
+    nu: Pytree            # second moment (moment_dtype)
+    err: Optional[Pytree]  # error-feedback residual (only when compressing)
+
+
+def init_opt_state(params: Pytree, cfg: AdamWConfig) -> OptState:
+    zeros = lambda p: jnp.zeros_like(p, dtype=cfg.moment_dtype)
+    err = jax.tree.map(jnp.zeros_like, params) if cfg.grad_compress_bits else None
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+        err=err,
+    )
+
+
+def lr_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    warm = cfg.lr_peak * (step + 1) / max(cfg.warmup_steps, 1)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0
+    )
+    cos = cfg.lr_peak * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cos).astype(jnp.float32)
+
+
+def _global_norm(tree: Pytree) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def _fake_quant_int8(g: jax.Array, err: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Error-feedback int8 quantization of one gradient leaf.
+
+    Returns (quantized-and-dequantized gradient, new residual).  The value
+    returned is what the receiving side of an int8 all-reduce would see.
+    """
+    g = g.astype(jnp.float32) + err.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127)
+    deq = q * scale
+    return deq, (g - deq)
+
+
+def adamw_update(
+    params: Pytree,
+    grads: Pytree,
+    state: OptState,
+    cfg: AdamWConfig,
+) -> Tuple[Pytree, OptState, Dict[str, jax.Array]]:
+    step = state.step
+
+    # --- gradient compression (cross-pod reduce emulation + error feedback) --
+    if cfg.grad_compress_bits == 8:
+        pairs = jax.tree.map(_fake_quant_int8, grads, state.err)
+        grads = jax.tree.map(lambda pr: pr[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+        new_err = jax.tree.map(lambda pr: pr[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    else:
+        new_err = state.err
+
+    # --- global-norm clip -----------------------------------------------------
+    gnorm = _global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-12))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * clip, grads)
+
+    # --- Adam moments (kept in moment_dtype) -----------------------------------
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+    lr = lr_schedule(cfg, step)
+
+    def upd(p, g, m, v):
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * jnp.square(g)
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * delta
+        return new_p.astype(p.dtype), m32.astype(cfg.moment_dtype), v32.astype(cfg.moment_dtype)
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, OptState(step + 1, new_mu, new_nu, new_err), metrics

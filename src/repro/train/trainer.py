@@ -1,0 +1,105 @@
+"""The training step: loss, microbatched grad accumulation, optimizer.
+
+``make_train_step`` builds the jit-able (state, batch) -> (state, metrics)
+function the launcher lowers for the dry-run and the examples run for real:
+
+* next-token cross-entropy with -1-masked labels (pad / document joints);
+* gradient accumulation over ``n_micro`` microbatches via lax.scan — the
+  global batch is reshaped (n_micro, micro, S) so peak activation memory is
+  the single-microbatch footprint (required to fit 405B train_4k on v5e);
+* remat policy comes from the model config (per-block jax.checkpoint);
+* AdamW from :mod:`repro.train.optimizer` (bf16 moments, optional int8
+  error-feedback gradient compression for the cross-pod reduce).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.registry import get_model
+from repro.train.optimizer import AdamWConfig, OptState, adamw_update, init_opt_state
+
+__all__ = ["TrainState", "make_train_step", "make_loss_fn", "init_train_state"]
+
+Pytree = Any
+
+
+class TrainState(NamedTuple):
+    params: Pytree
+    opt: OptState
+
+
+def init_train_state(cfg: ModelConfig, key: jax.Array, opt_cfg: AdamWConfig) -> TrainState:
+    model = get_model(cfg)
+    params = model.init_params(cfg, key)
+    return TrainState(params=params, opt=init_opt_state(params, opt_cfg))
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Masked mean NLL.  labels == -1 are ignored.  logits (B,S,V) f32."""
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    return nll.sum() / denom, denom
+
+
+def make_loss_fn(cfg: ModelConfig, q_chunk: int = 0) -> Callable:
+    model = get_model(cfg)
+
+    def loss_fn(params: Pytree, batch: Dict[str, jax.Array]) -> jax.Array:
+        if cfg.is_encdec:
+            logits = model.forward(cfg, params, batch["frames"], batch["tokens"],
+                                   q_chunk=q_chunk)
+        else:
+            logits = model.forward(cfg, params, batch["tokens"], q_chunk=q_chunk)
+        loss, _ = cross_entropy(logits, batch["labels"])
+        return loss
+
+    return loss_fn
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: AdamWConfig,
+    n_micro: int = 1,
+    q_chunk: int = 0,
+) -> Callable[[TrainState, Dict[str, jax.Array]], Tuple[TrainState, Dict[str, jax.Array]]]:
+    loss_fn = make_loss_fn(cfg, q_chunk)
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]):
+        if n_micro > 1:
+            def split(x):
+                b = x.shape[0]
+                assert b % n_micro == 0, (b, n_micro)
+                return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            adt = opt_cfg.accum_dtype
+
+            def acc(carry, mb):
+                loss_sum, gsum = carry
+                loss, g = grad_fn(state.params, mb)
+                gsum = jax.tree.map(lambda a, b_: a + b_.astype(adt), gsum, g)
+                return (loss_sum + loss, gsum), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, adt), state.params)
+            (loss_sum, gsum), _ = jax.lax.scan(acc, (jnp.float32(0), zeros), micro)
+            loss = loss_sum / n_micro
+            grads = jax.tree.map(lambda g: g / n_micro, gsum)
+        else:
+            loss, grads = grad_fn(state.params, batch)
+
+        new_params, new_opt, metrics = adamw_update(state.params, grads, state.opt, opt_cfg)
+        metrics = {"loss": loss, **metrics}
+        return TrainState(new_params, new_opt), metrics
+
+    return train_step

@@ -1,0 +1,127 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracle.
+
+All three kernels are integer/boolean — assertions are EXACT equality.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops as K
+from repro.kernels import ref as R
+
+
+# ---------------------------------------------------------------------------
+# bitmatmul: (OR,AND) boolean-semiring matmul on packed bitplanes
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("m,k,n", [
+    (1, 1, 1), (8, 32, 32), (7, 33, 9), (40, 70, 50),
+    (64, 256, 128), (130, 300, 257),
+])
+@pytest.mark.parametrize("density", [0.02, 0.3])
+def test_bitmatmul_sweep(m, k, n, density):
+    rng = np.random.default_rng(m * 1000 + k + n)
+    A = rng.random((m, k)) < density
+    B = rng.random((k, n)) < density
+    a_b = R.pack_bits(jnp.asarray(A))
+    b_b = R.pack_bits(jnp.asarray(B))
+    got = K.bitmatmul(a_b, b_b, block_m=8, block_nw=8, block_k=32, interpret=True)
+    want = R.bitmatmul_ref(a_b, b_b)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # semantic check against dense boolean matmul
+    dense = R.unpack_bits(want, n)
+    np.testing.assert_array_equal(np.asarray(dense),
+                                  (A.astype(int) @ B.astype(int)) > 0)
+
+
+def test_bitmatmul_identity():
+    n = 96
+    eye = np.eye(n, dtype=bool)
+    rng = np.random.default_rng(0)
+    Bm = rng.random((n, 40)) < 0.2
+    a_b = R.pack_bits(jnp.asarray(eye))
+    b_b = R.pack_bits(jnp.asarray(Bm))
+    got = K.bitmatmul(a_b, b_b, block_m=8, block_nw=8, block_k=32, interpret=True)
+    np.testing.assert_array_equal(np.asarray(R.unpack_bits(got, 40)), Bm)
+
+
+@given(st.integers(1, 40), st.integers(1, 70), st.integers(1, 40),
+       st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_bitmatmul_property(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    A = rng.random((m, k)) < 0.2
+    B = rng.random((k, n)) < 0.2
+    got = K.bitmatmul(R.pack_bits(jnp.asarray(A)), R.pack_bits(jnp.asarray(B)),
+                      block_m=8, block_nw=8, block_k=32, interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(R.unpack_bits(got, n)), (A.astype(int) @ B.astype(int)) > 0)
+
+
+# ---------------------------------------------------------------------------
+# lineage_gather: batched CSR probe
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n_rows,n_cols,nnz,max_deg", [
+    (4, 5, 6, 3), (16, 16, 40, 8), (100, 50, 300, 16), (33, 7, 90, 33),
+])
+def test_lineage_gather_sweep(n_rows, n_cols, nnz, max_deg):
+    rng = np.random.default_rng(nnz)
+    rows = np.sort(rng.integers(0, n_rows, nnz)).astype(np.int32)
+    cols = rng.integers(0, n_cols, nnz).astype(np.int32)
+    counts = np.bincount(rows, minlength=n_rows)
+    row_ptr = np.zeros(n_rows + 1, np.int32)
+    np.cumsum(counts, out=row_ptr[1:])
+    md = int(max(counts.max(), 1))
+    md = min(md, max_deg) if max_deg else md
+    queries = rng.integers(0, n_rows, 37).astype(np.int32)
+    got = K.lineage_gather(row_ptr, cols, queries, max_deg=md,
+                           block_q=16, interpret=True)
+    colp = jnp.concatenate([jnp.asarray(cols), jnp.full((md,), -1, jnp.int32)])
+    want = R.lineage_gather_ref(jnp.asarray(queries), jnp.asarray(row_ptr),
+                                colp, max_deg=md)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_lineage_gather_matches_host_csr():
+    from repro.core.provtensor import CSR
+    rng = np.random.default_rng(5)
+    rows = rng.integers(0, 20, 60)
+    cols = rng.integers(0, 30, 60)
+    csr = CSR.from_pairs(rows, cols, 20, 30)
+    qs = np.arange(20, dtype=np.int32)
+    md = int(np.diff(csr.row_ptr).max())
+    got = np.asarray(K.lineage_gather(csr.row_ptr, csr.col_idx, qs,
+                                      max_deg=md, block_q=4, interpret=True))
+    for i, q in enumerate(qs):
+        want = sorted(csr.neighbors(q).tolist())
+        have = sorted(x for x in got[i].tolist() if x >= 0)
+        assert have == want
+
+
+# ---------------------------------------------------------------------------
+# bitset_rank: batched inclusive rank
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n_bits", [1, 31, 32, 33, 100, 1000])
+def test_bitset_rank_sweep(n_bits):
+    from repro.core.schema import Bitset
+    rng = np.random.default_rng(n_bits)
+    bits = rng.random(n_bits) < 0.4
+    b = Bitset.from_bits(bits)
+    pos = np.concatenate([np.arange(n_bits), [-1]]).astype(np.int32)
+    got = np.asarray(K.bitset_rank(b.words, pos, block_q=8, interpret=True))
+    want = np.array([b.rank(int(p)) if p >= 0 else 0 for p in pos])
+    np.testing.assert_array_equal(got, want)
+
+
+@given(st.lists(st.booleans(), min_size=1, max_size=200), st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_bitset_rank_property(bits, seed):
+    from repro.core.schema import Bitset
+    b = Bitset.from_bits(bits)
+    rng = np.random.default_rng(seed)
+    pos = rng.integers(-1, len(bits), 17).astype(np.int32)
+    got = np.asarray(K.bitset_rank(b.words, pos, block_q=8, interpret=True))
+    cum = np.concatenate([[0], np.cumsum(np.asarray(bits, int))])
+    want = np.where(pos >= 0, cum[np.clip(pos, -1, len(bits) - 1) + 1], 0)
+    np.testing.assert_array_equal(got, want)

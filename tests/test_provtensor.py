@@ -1,0 +1,120 @@
+"""Unit tests: ProvTensor constructors, CSR probes, bitplanes, set-semantics."""
+import numpy as np
+import pytest
+
+from repro.core.provtensor import (
+    CSR, ProvTensor, append_tensor, haugment_tensor, hreduce_tensor,
+    identity_tensor, join_tensor, pack_bitplane, unpack_bitplane,
+)
+
+
+def test_identity_tensor():
+    t = identity_tensor(5)
+    assert t.nnz == 5 and t.n_out == 5 and t.n_in == (5,)
+    assert t.forward_rows(0, [2]).tolist() == [2]
+    assert t.backward_rows(0, [4]).tolist() == [4]
+
+
+def test_hreduce_masking_tensor():
+    # paper §III-A c: some input columns all-zero (filtered out)
+    t = hreduce_tensor(np.array([1, 3, 4]), n_in=6)
+    assert t.n_out == 3
+    assert t.forward_rows(0, [3]).tolist() == [1]     # input 3 -> output 1
+    assert t.forward_rows(0, [0]).tolist() == []      # filtered out
+    assert t.backward_rows(0, [2]).tolist() == [4]
+
+
+def test_haugment_with_synthetic_rows():
+    # -1 = synthetic row with no establishable mapping (paper §III-A e)
+    t = haugment_tensor(np.array([0, 1, 1, -1]), n_in=2)
+    assert t.backward_rows(0, [2]).tolist() == [1]
+    assert t.backward_rows(0, [3]).tolist() == []
+    assert sorted(t.forward_rows(0, [1]).tolist()) == [1, 2]
+
+
+def test_join_tensor_paper_example():
+    # paper Tables II-IV: T[1,2,1]=1 and T[2,4,2]=1 (1-based); 0-based here
+    t = join_tensor(np.array([[1, 0], [3, 1]]), n_left=4, n_right=2)
+    assert t.k == 2 and t.n_out == 2
+    assert t.backward_rows(0, [0]).tolist() == [1]    # left parent of out 0
+    assert t.backward_rows(1, [0]).tolist() == [0]    # right parent of out 0
+    assert t.forward_rows(0, [3]).tolist() == [1]
+    assert t.forward_rows(0, [0]).tolist() == []      # dangling left row
+
+
+def test_append_block_diagonal():
+    t = append_tensor(3, 2)
+    assert t.n_out == 5
+    assert t.backward_rows(0, [1]).tolist() == [1]    # left block
+    assert t.backward_rows(1, [4]).tolist() == [1]    # right block
+    assert t.backward_rows(0, [4]).tolist() == []     # right rows have no left parent
+    assert t.forward_rows(1, [0]).tolist() == [3]
+
+
+def test_csr_neighbor_mask_and_batch():
+    rows = np.array([0, 0, 2, 3])
+    cols = np.array([1, 4, 0, 2])
+    csr = CSR.from_pairs(rows, cols, n_rows=4, n_cols=5)
+    assert sorted(csr.neighbors(0).tolist()) == [1, 4]
+    assert csr.neighbors(1).tolist() == []
+    mask = csr.neighbor_mask(np.array([0, 3]))
+    assert mask.tolist() == [False, True, True, False, True]
+    table = csr.batch_neighbors(np.array([0, 1, 2]), max_deg=2)
+    assert table.shape == (3, 2)
+    assert set(table[0]) == {1, 4} and table[1].tolist() == [-1, -1]
+
+
+def test_bitplane_roundtrip():
+    rng = np.random.default_rng(0)
+    for r, c in [(1, 1), (3, 31), (5, 32), (7, 33), (16, 100)]:
+        dense = rng.random((r, c)) < 0.3
+        packed = pack_bitplane(dense)
+        assert packed.shape == (r, (c + 31) // 32)
+        assert (unpack_bitplane(packed, c) == dense).all()
+
+
+def test_tensor_bitplanes_match_coo():
+    t = join_tensor(np.array([[1, 0], [3, 1], [3, 0]]), n_left=4, n_right=2)
+    fwd = unpack_bitplane(t.bitplane_fwd(0), t.n_out)       # (n_left, n_out)
+    assert fwd[1, 0] and fwd[3, 1] and fwd[3, 2] and fwd.sum() == 3
+    bwd = unpack_bitplane(t.bitplane_bwd(1), t.n_in[1])     # (n_out, n_right)
+    assert bwd[0, 0] and bwd[1, 1] and bwd[2, 0] and bwd.sum() == 3
+
+
+def test_set_semantics_canonicalize():
+    # paper §III-C.a: duplicates 2 and 4 (1-based) -> smallest id wins
+    t = join_tensor(np.array([[0, 0], [1, 1], [2, 0], [1, 1]]), n_left=3, n_right=2)
+    groups = np.array([0, 1, 2, 1])   # outputs 1 and 3 are value-duplicates
+    c = t.canonicalize(groups)
+    assert c.nnz == 3                  # the duplicate link merged
+    assert sorted(c.backward_rows(0, [1]).tolist()) == [1]
+    # querying the canonical id returns provenance of BOTH duplicates
+    assert 1 in c.coo[:, 0]
+    assert 3 not in c.coo[:, 0]
+
+
+def test_nbytes_accounting():
+    t = join_tensor(np.array([[1, 0], [3, 1]]), n_left=4, n_right=2)
+    base = t.nbytes()
+    assert base == t.coo.nbytes
+    t.fwd(0); t.bwd(1)
+    assert t.nbytes() > base          # built CSR halves are accounted
+
+
+def test_coo_validation():
+    with pytest.raises(ValueError):
+        ProvTensor(n_out=2, n_in=(2,), coo=np.zeros((3, 3), np.int32))
+
+
+def test_set_semantics_via_table_duplicate_groups():
+    """Paper §III-C.a end-to-end: querying a duplicate's canonical id returns
+    the provenance of ALL value-identical output records."""
+    from repro.dataprep.table import Table
+    out_table = Table.from_columns({"k": [1., 2., 1., 3.], "v": [5., 6., 5., 7.]})
+    groups = out_table.duplicate_groups()
+    assert groups.tolist() == [0, 1, 0, 3]          # rows 0 and 2 identical
+    t = join_tensor(np.array([[0, 0], [1, 1], [2, 0], [0, 1]]),
+                    n_left=3, n_right=2)
+    c = t.canonicalize(groups)
+    # canonical record 0 now carries the parents of BOTH duplicates (rows 0, 2)
+    assert sorted(c.backward_rows(0, [0]).tolist()) == [0, 2]

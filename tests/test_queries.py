@@ -1,0 +1,127 @@
+"""Integration tests: Q1-Q11 over tracked pipelines (paper §IV, Table VII)."""
+import numpy as np
+import pytest
+
+from repro.core import query as Q
+from repro.core.pipeline import ProvenanceIndex
+from repro.dataprep import ops as P
+from repro.dataprep.table import Table
+from repro.dataprep.tracked import track
+
+
+@pytest.fixture
+def join_pipeline():
+    """The paper's running example: Dl |x| Dr -> filter -> onehot."""
+    idx = ProvenanceIndex("demo")
+    dl = Table.from_columns({
+        "ID": [10., 20, 30, 40],
+        "Birthdate": [1996., 1994, np.nan, 1987],
+        "Gender": [0., 1, 0, 1],
+    }, null={"Birthdate": [False, False, True, False]})
+    dr = Table.from_columns({"ID": [20., 40], "Name": [0., 1]})
+    tl = track(dl, idx, "Dl")
+    tr = track(dr, idx, "Dr")
+    tj = tl.join(tr, on="ID", how="inner")
+    tf = tj.filter_rows(np.asarray(tj.table.col("Gender")) > 0.5)
+    to = tf.onehot("Gender", n_values=2).mark_sink()
+    return idx, tj, tf, to
+
+
+def test_q1_q2_forward_backward(join_pipeline):
+    idx, tj, tf, to = join_pipeline
+    # Dl row 1 (ID=20) joins Dr row 0 -> out row 0, survives the filter
+    assert Q.q1_forward(idx, "Dl", [1], to.dataset_id).tolist() == [0]
+    assert Q.q2_backward(idx, to.dataset_id, [0], "Dl").tolist() == [1]
+    assert Q.q2_backward(idx, to.dataset_id, [0], "Dr").tolist() == [0]
+    # Dl row 0 (ID=10) is dangling: contributes nowhere
+    assert Q.q1_forward(idx, "Dl", [0], to.dataset_id).tolist() == []
+
+
+def test_q3_q4_attribute_level(join_pipeline):
+    idx, tj, tf, to = join_pipeline
+    # forward from Dl's Birthdate (attr 1): lands in join attr 1, then
+    # onehot preserves position
+    cells = Q.q3_forward_attr(idx, "Dl", [1], [1], to.dataset_id)
+    assert (0, 1) in {tuple(c) for c in cells}
+    # backward from the onehot outputs: Gender=1 column derives from Gender
+    out_cols = to.table.columns
+    gcol = out_cols.index("Gender=1")
+    back = Q.q4_backward_attr(idx, to.dataset_id, [0], [gcol], "Dl")
+    assert {tuple(c) for c in back} == {(1, 2)}   # Dl row 1, attr Gender(2)
+
+
+def test_q5_q8_how_provenance(join_pipeline):
+    idx, tj, tf, to = join_pipeline
+    recs, hops = Q.q6_backward_how(idx, to.dataset_id, [0], "Dl")
+    ops = [h.op_name for h in hops]
+    assert recs.tolist() == [1]
+    assert "onehot" in ops and "filter" in ops and any("join" in o for o in ops)
+    _, hops_attr = Q.q8_backward_attr_how(idx, to.dataset_id, [0], [0], "Dl")
+    assert len(hops_attr) >= 3
+
+
+def test_q9_all_transformations(join_pipeline):
+    idx, tj, tf, to = join_pipeline
+    names = [o["op"] for o in Q.q9_all_transformations(idx, to.dataset_id)]
+    assert names == ["join:inner", "filter", "onehot"]
+
+
+def test_q10_co_contributory(join_pipeline):
+    idx, tj, tf, to = join_pipeline
+    # which Dr records were used together with Dl record 1?
+    co = Q.q10_co_contributory(idx, "Dl", [1], "Dr", via=tj.dataset_id)
+    assert co.tolist() == [0]
+
+
+def test_q11_co_dependency():
+    # D1 --opA--> D2 and D1 --opB--> D3: trace D2 rows to D3 via D1
+    idx = ProvenanceIndex("codep")
+    d1 = Table.from_columns({"k": np.arange(6, dtype=np.float32)})
+    t1 = track(d1, idx, "D1")
+    t2 = t1.filter_rows(np.asarray(t1.table.col("k")) % 2 == 0)   # rows 0,2,4
+    t3 = t1.filter_rows(np.asarray(t1.table.col("k")) >= 2)        # rows 2..5
+    dep = Q.q11_co_dependency(idx, t2.dataset_id, [1], "D1", t3.dataset_id)
+    # t2 row 1 <- D1 row 2 -> t3 row 0
+    assert dep.tolist() == [0]
+
+
+def test_append_provenance():
+    idx = ProvenanceIndex("append")
+    a = Table.from_columns({"x": [1., 2], "y": [3., 4]})
+    b = Table.from_columns({"x": [5., 6, 7], "z": [8., 9, 10]})
+    ta = track(a, idx, "A")
+    tb = track(b, idx, "B")
+    tc = ta.append(tb).mark_sink()
+    assert tc.table.n_rows == 5
+    assert Q.q2_backward(idx, tc.dataset_id, [0], "A").tolist() == [0]
+    assert Q.q2_backward(idx, tc.dataset_id, [3], "B").tolist() == [1]
+    assert Q.q2_backward(idx, tc.dataset_id, [3], "A").tolist() == []
+    # attr mapping: column z exists only in B
+    zcol = tc.table.columns.index("z")
+    cells = Q.q4_backward_attr(idx, tc.dataset_id, [3], [zcol], "B")
+    assert {tuple(c) for c in cells} == {(1, 1)}
+
+
+def test_outer_join_dangling_rows():
+    idx = ProvenanceIndex("outer")
+    l = Table.from_columns({"k": [1., 2, 3], "a": [0., 0, 0]})
+    r = Table.from_columns({"k": [2., 9], "b": [1., 1]})
+    tl, tr = track(l, idx, "L"), track(r, idx, "R")
+    tj = tl.join(tr, on="k", how="outer").mark_sink()
+    assert tj.table.n_rows == 4      # 1 match + 2 dangling left + 1 dangling right
+    for i in range(tj.table.n_rows):
+        lsrc = Q.q2_backward(idx, tj.dataset_id, [i], "L")
+        rsrc = Q.q2_backward(idx, tj.dataset_id, [i], "R")
+        assert len(lsrc) + len(rsrc) >= 1
+
+
+def test_oversample_provenance_paper_e():
+    idx = ProvenanceIndex("ovs")
+    t = Table.from_columns({"x": np.arange(10, dtype=np.float32)})
+    tt = track(t, idx, "T")
+    to = tt.oversample(frac=0.5, seed=1, noise=0.01).mark_sink()
+    assert to.table.n_rows == 15
+    # every synthetic row maps back to exactly one source record
+    for i in range(10, 15):
+        src = Q.q2_backward(idx, to.dataset_id, [i], "T")
+        assert len(src) == 1
