@@ -1,0 +1,19 @@
+PY ?= python
+TIMEOUT ?= 900
+
+.PHONY: test test-fast bench-query ci
+
+# tier-1 verify (ROADMAP.md): the whole suite, stop at first failure
+test:
+	timeout $(TIMEOUT) env PYTHONPATH=src $(PY) -m pytest -x -q
+
+# quick signal: the provenance core only (no model/trainer substrate)
+test-fast:
+	timeout 300 env PYTHONPATH=src $(PY) -m pytest -x -q \
+	  tests/test_provtensor.py tests/test_schema.py tests/test_queries.py \
+	  tests/test_query_parity.py tests/test_compose.py tests/test_recompute.py
+
+bench-query:
+	env PYTHONPATH=src $(PY) benchmarks/bench_query.py
+
+ci: test

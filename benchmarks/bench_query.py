@@ -1,4 +1,6 @@
-"""Fig 4 + Fig 5: query latency Q1-Q11 on the Census pipeline.
+"""Fig 4 + Fig 5: query latency Q1-Q11 on the Census pipeline, plus the
+batched multi-hop comparison (per-hop walk vs batch walk vs composed
+hop-cache) on a deep chain.
 
 Fig 4: all queries against MATERIALIZED endpoints (the default policy keeps
 source + sink).  Fig 5: the same queries when the answer must RETURN values
@@ -13,6 +15,7 @@ import time
 import numpy as np
 
 from repro.core import query as Q
+from repro.core.hopcache import ComposedIndex
 from repro.core.pipeline import ProvenanceIndex
 from repro.core.recompute import recompute_rows
 from repro.dataprep.table import Table
@@ -105,7 +108,95 @@ def run(quick: bool = False):
     print("  " + "  ".join(f"{k}={v:.2f}" for k, v in fig4.items()))
     print("== Fig 5: query latency with recomputation (ms) ==")
     print("  " + "  ".join(f"{k}={v:.2f}" for k, v in fig5.items()))
-    return {"table": "Fig4/5", "fig4_ms": fig4, "fig5_ms": fig5}
+    batch = run_batch_vs_walk(quick=quick)
+    return {"table": "Fig4/5", "fig4_ms": fig4, "fig5_ms": fig5, "batch": batch}
+
+
+# ---------------------------------------------------------------------------
+# Batched multi-hop Q1/Q2: per-hop walk vs batch walk vs composed hop-cache
+# ---------------------------------------------------------------------------
+def build_deep_chain(seed=0, n=4000, n_ops=12):
+    """A >=10-op chain so multi-hop composition has distance to amortize."""
+    rng = np.random.default_rng(seed)
+    idx = ProvenanceIndex("deep-chain")
+    t = Table.from_columns({
+        "k": rng.integers(0, n // 2, n).astype(np.float32),
+        "x": rng.normal(size=n).astype(np.float32),
+        "g": rng.integers(0, 4, n).astype(np.float32),
+    })
+    d = track(t, idx, "chain_src")
+    for i in range(n_ops):
+        kind = i % 4
+        if kind == 0:
+            d = d.value_transform("x", "scale", factor=1.01)
+        elif kind == 1:
+            mask = np.ones(d.table.n_rows, dtype=bool)
+            mask[i :: 17] = False                     # drop a sliver per hop
+            d = d.filter_rows(mask)
+        elif kind == 2:
+            d = d.normalize(["x"], kind="zscore")
+        else:
+            d = d.oversample(frac=0.05, seed=i)
+    d.mark_sink()
+    return idx, d.dataset_id
+
+
+def run_batch_vs_walk(quick: bool = False, n_probes: int = 64):
+    idx, sink = build_deep_chain(n=1000 if quick else 4000,
+                                 n_ops=10 if quick else 14)
+    src = "chain_src"
+    n_src = idx.datasets[src].n_rows
+    n_sink = idx.datasets[sink].n_rows
+    rng = np.random.default_rng(7)
+    probes_f = [sorted(rng.choice(n_src, size=4, replace=False).tolist())
+                for _ in range(8 if quick else n_probes)]
+    probes_b = [sorted(rng.choice(n_sink, size=4, replace=False).tolist())
+                for _ in range(8 if quick else n_probes)]
+    reps = 1 if quick else 3
+
+    # warm the CSR halves so every contender measures probe cost, not build
+    Q.q1_forward(idx, src, probes_f[0], sink)
+    Q.q2_backward(idx, sink, probes_b[0], src)
+
+    walk_f = _time_ms(lambda: [Q.q1_forward(idx, src, p, sink) for p in probes_f], reps)
+    batch_f = _time_ms(lambda: Q.q1_forward(idx, src, probes_f, sink), reps)
+    ci = ComposedIndex(idx, memory_budget_bytes=256 << 20)
+    t0 = time.perf_counter()
+    ci.q1_forward(src, probes_f[:1], sink)            # composes the relation
+    compose_ms = (time.perf_counter() - t0) * 1e3
+    cache_f = _time_ms(lambda: ci.q1_forward(src, probes_f, sink), reps)
+
+    walk_b = _time_ms(lambda: [Q.q2_backward(idx, sink, p, src) for p in probes_b], reps)
+    batch_b = _time_ms(lambda: Q.q2_backward(idx, sink, probes_b, src), reps)
+    cache_b = _time_ms(lambda: ci.q2_backward(sink, probes_b, src), reps)
+
+    # sanity: all three contenders answer identically
+    walk = [Q.q1_forward(idx, src, p, sink) for p in probes_f]
+    for a, b, c in zip(walk, Q.q1_forward(idx, src, probes_f, sink),
+                       ci.q1_forward(src, probes_f, sink)):
+        assert (a == b).all() and (a == c).all()
+
+    out = {
+        "n_ops": len(idx.ops), "n_probes": len(probes_f),
+        "q1_perhop_walk_ms": walk_f, "q1_batch_walk_ms": batch_f,
+        "q1_hopcache_ms": cache_f, "q1_compose_cold_ms": compose_ms,
+        "q2_perhop_walk_ms": walk_b, "q2_batch_walk_ms": batch_b,
+        "q2_hopcache_ms": cache_b,
+        "q1_speedup_batch": walk_f / max(batch_f, 1e-9),
+        "q1_speedup_hopcache": walk_f / max(cache_f, 1e-9),
+        "q2_speedup_batch": walk_b / max(batch_b, 1e-9),
+        "q2_speedup_hopcache": walk_b / max(cache_b, 1e-9),
+        "hopcache_stats": ci.stats(),
+    }
+    print(f"\n== batched multi-hop Q1/Q2 ({len(idx.ops)}-op chain, "
+          f"{len(probes_f)} probe sets) ==")
+    print(f"  Q1  per-hop walk {walk_f:8.2f} ms | batch walk {batch_f:8.2f} ms "
+          f"({out['q1_speedup_batch']:.1f}x) | hop-cache {cache_f:8.2f} ms "
+          f"({out['q1_speedup_hopcache']:.1f}x; cold compose {compose_ms:.2f} ms)")
+    print(f"  Q2  per-hop walk {walk_b:8.2f} ms | batch walk {batch_b:8.2f} ms "
+          f"({out['q2_speedup_batch']:.1f}x) | hop-cache {cache_b:8.2f} ms "
+          f"({out['q2_speedup_hopcache']:.1f}x)")
+    return out
 
 
 if __name__ == "__main__":

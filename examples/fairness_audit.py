@@ -19,7 +19,6 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import AxisType
 
 from repro.core import query as Q
 from repro.core.compose import compose_chain, dataset_lineage
@@ -69,8 +68,8 @@ comp_counts = np.bincount(gender[hits], minlength=2)
 t_comp = time.perf_counter() - t0
 
 # --- 3. sharded audit (the pod-scale path) -------------------------------------
-mesh = jax.make_mesh((len(jax.devices()),), ("data",),
-                     axis_types=(AxisType.Auto,))
+from repro.launch.mesh import make_local_mesh
+mesh = make_local_mesh()
 bits = np.asarray(pack_bits(jnp.asarray(rel)))
 rel_sh = shard_relation(bits, mesh)
 mask = np.ones(n_out, bool)

@@ -59,3 +59,15 @@ from repro.core.compose import dataset_lineage
 rel = dataset_lineage(index, "D_l", to.dataset_id, use_pallas=False)
 print("\nwhole-dataset lineage relation D_l -> sink (the einsum path):")
 print(rel.astype(int))
+
+# --- batch queries: many probe sets, one vectorized pass ----------------------
+probes = [[0], [1], [2, 3]]
+print("\nbatched Q1 (one pass over the DAG, all probe sets at once):")
+for p, res in zip(probes, Q.q1_forward(index, "D_l", probes, to.dataset_id)):
+    print(f"    D_l rows {p} -> output rows {res.tolist()}")
+
+# --- the composed hop-cache: multi-hop queries as one probe -------------------
+ci = index.composed(memory_budget_bytes=16 << 20)   # LRU byte budget
+print("\nhop-cached Q2 (single probe of the composed D_l -> sink relation):")
+print("    output row 0 <-", ci.q2_backward(to.dataset_id, [0], "D_l").tolist())
+print("    hop-cache stats:", ci.stats())

@@ -29,13 +29,24 @@ import numpy as np
 from repro.core.pipeline import OpRecord, ProvenanceIndex
 from repro.core.provtensor import ProvTensor, pack_bitplane, unpack_bitplane
 
+try:  # host-side sparse composition backend (the hop-cache default off-TPU)
+    import scipy.sparse as _sp
+except ImportError:  # pragma: no cover - environment-dependent
+    _sp = None
+
 __all__ = [
     "path_tensors",
+    "op_bitplane",
+    "op_csr",
     "compose_pair",
+    "compose_pair_csr",
     "compose_chain",
     "plan_chain",
     "dataset_lineage",
+    "HAVE_SCIPY",
 ]
+
+HAVE_SCIPY = _sp is not None
 
 
 def path_tensors(index: ProvenanceIndex, src: str, dst: str) -> List[Tuple[OpRecord, int]]:
@@ -63,9 +74,36 @@ def path_tensors(index: ProvenanceIndex, src: str, dst: str) -> List[Tuple[OpRec
     return list(reversed(chain))
 
 
-def _relation_bitplane(t: ProvTensor, slot: int) -> np.ndarray:
-    """R[i, o] forward bitplane of one op tensor for one input slot."""
+def op_bitplane(t: ProvTensor, slot: int) -> np.ndarray:
+    """R[i, o] forward bitplane of one op tensor for one input slot
+    (memoized on the tensor — the hop-cache recomposes from these)."""
     return t.bitplane_fwd(slot)
+
+
+_relation_bitplane = op_bitplane  # backward-compat alias
+
+
+def op_csr(t: ProvTensor, slot: int):
+    """The same forward relation as scipy CSR — zero-copy view over the
+    tensor's bidirectional index (shares row_ptr/col_idx).
+
+    float32 values keep the boolean semiring exact under composition: path
+    counts are sums of positives, so ``> 0`` never misclassifies (an integer
+    dtype could overflow and wrap a count to zero).
+    """
+    if _sp is None:
+        raise ImportError("scipy is required for the CSR composition backend")
+    c = t.fwd(slot)
+    data = np.ones(c.nnz, dtype=np.float32)
+    return _sp.csr_matrix((data, c.col_idx, c.row_ptr), shape=(c.n_rows, c.n_cols))
+
+
+def compose_pair_csr(a, b):
+    """(OR,AND)-compose two CSR relations: sparse matmul, then clamp the
+    path counts back to the binary relation."""
+    c = (a @ b).tocsr()
+    c.data = np.ones_like(c.data)
+    return c
 
 
 def compose_pair(a_bits: np.ndarray, b_bits: np.ndarray, n_mid: int, use_pallas: bool = True) -> np.ndarray:

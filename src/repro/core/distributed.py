@@ -28,6 +28,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+if hasattr(jax, "shard_map"):  # jax >= 0.6
+    _shard_map = jax.shard_map
+else:  # pragma: no cover - version-dependent
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 from repro.kernels import ref as kref
 
 __all__ = [
@@ -68,7 +73,7 @@ def compose_sharded(a_bits: jax.Array, b_bits: jax.Array, mesh: Mesh) -> jax.Arr
         return _bitmm(a_bits, b_bits)
 
     @functools.partial(
-        jax.shard_map,
+        _shard_map,
         mesh=mesh,
         in_specs=(P(axes, None), P(axes, None)),
         out_specs=P(axes, None),
@@ -116,7 +121,7 @@ def lineage_audit_sharded(
     axes = _data_axes(mesh)
 
     @functools.partial(
-        jax.shard_map,
+        _shard_map,
         mesh=mesh,
         in_specs=(P(axes, None), P(axes), P(None)),
         out_specs=P(),
@@ -152,7 +157,7 @@ def backward_frontier_sharded(
     axes = _data_axes(mesh)
 
     @functools.partial(
-        jax.shard_map,
+        _shard_map,
         mesh=mesh,
         in_specs=(P(axes, None), P(None)),
         out_specs=P(axes),

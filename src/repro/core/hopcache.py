@@ -1,0 +1,259 @@
+"""Composed hop-cache: memoized multi-hop lineage relations (paper §III-D/§IV).
+
+Answering Q1/Q2/Q10/Q11 between DISTANT datasets by walking the op DAG costs
+one CSR probe per hop per query.  The Einstein-summation machinery of
+:mod:`repro.core.compose` can instead contract the whole path into ONE
+composed relation; this module memoizes those relations so repeated /
+batched queries between the same dataset pair become a single batched probe.
+
+Design points:
+
+* **Two backends.**  ``csr`` (host default, requires scipy) composes the
+  per-op CSR halves with sparse boolean matmul — composition cost scales
+  with nnz, matching the paper's sparse-tensor premise.  ``bitplane``
+  composes packed uint32 relation bitplanes via :func:`compose_pair` (the
+  :mod:`repro.kernels` bitmatmul — the Pallas path on TPU), and probes with
+  :func:`bitplane_or_reduce` / ``kernels.ops.bitplane_probe``.
+* **Lazy + incremental** — ``relation(src, dst)`` finds the longest cached
+  prefix ``relation(src, mid)`` along the producer path and extends it hop
+  by hop, caching every prefix for later queries to further datasets.
+* **Eviction-bounded** — an LRU keyed on ``(src, dst)`` with a byte budget
+  (``memory_budget_bytes``), honoring the paper's minimal-memory goal: the
+  cache trades recompute for memory and can be sized down to nothing.
+* **Write-invalidated** — keyed on ``ProvenanceIndex.version``; recording a
+  new op drops cached relations (paths may lengthen).
+
+Caveat (inherited from :func:`repro.core.compose.path_tensors`): the composed
+relation follows the unique producer path from ``dst`` back to ``src``.  On
+DAGs where ``src`` reaches ``dst`` through MULTIPLE paths (e.g. a self-join),
+use the hop-walking engine in :mod:`repro.core.query` instead.  When NO path
+exists, the probe methods answer empty (matching the walking engine);
+``relation`` itself raises ``KeyError``.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.compose import (
+    HAVE_SCIPY,
+    compose_pair,
+    compose_pair_csr,
+    op_bitplane,
+    op_csr,
+    path_tensors,
+)
+from repro.core.pipeline import ProvenanceIndex
+from repro.core.provtensor import (
+    bitplane_or_reduce,
+    pack_bitplane,
+    unpack_bitplane,
+)
+
+__all__ = ["ComposedIndex"]
+
+
+def _rel_nbytes(rel) -> int:
+    if isinstance(rel, np.ndarray):
+        return int(rel.nbytes)
+    return int(rel.data.nbytes + rel.indices.nbytes + rel.indptr.nbytes)
+
+
+class ComposedIndex:
+    """Memoized composed-relation store + batched probe engine over one
+    :class:`ProvenanceIndex`."""
+
+    def __init__(
+        self,
+        index: ProvenanceIndex,
+        memory_budget_bytes: int = 64 << 20,
+        backend: Optional[str] = None,
+        use_pallas: bool = False,
+    ) -> None:
+        if backend is None:
+            backend = "csr" if (HAVE_SCIPY and not use_pallas) else "bitplane"
+        if backend not in ("csr", "bitplane"):
+            raise ValueError(f"unknown backend {backend!r}")
+        if backend == "csr" and not HAVE_SCIPY:
+            raise ImportError("backend='csr' requires scipy")
+        self.index = index
+        self.backend = backend
+        self.memory_budget_bytes = int(memory_budget_bytes)
+        self.use_pallas = use_pallas
+        self._cache: "OrderedDict[Tuple[str, str], object]" = OrderedDict()
+        self._bytes = 0
+        self._version = index.version
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    # -- cache plumbing -----------------------------------------------------
+    def _sync(self) -> None:
+        if self.index.version != self._version:
+            self._cache.clear()
+            self._bytes = 0
+            self._version = self.index.version
+
+    def _insert(self, key: Tuple[str, str], rel) -> None:
+        nbytes = _rel_nbytes(rel)
+        if nbytes > self.memory_budget_bytes:
+            return  # larger than the whole budget: serve uncached
+        self._cache[key] = rel
+        self._cache.move_to_end(key)
+        self._bytes += nbytes
+        while self._bytes > self.memory_budget_bytes and len(self._cache) > 1:
+            _, evicted = self._cache.popitem(last=False)
+            self._bytes -= _rel_nbytes(evicted)
+            self.evictions += 1
+
+    def _lookup(self, key: Tuple[str, str]):
+        rel = self._cache.get(key)
+        if rel is not None:
+            self._cache.move_to_end(key)
+        return rel
+
+    # -- backend primitives ---------------------------------------------------
+    def _identity(self, n: int):
+        if self.backend == "csr":
+            import scipy.sparse as sp
+
+            return sp.identity(n, dtype=np.float32, format="csr")
+        words = np.zeros((n, max((n + 31) // 32, 1)), dtype=np.uint32)
+        i = np.arange(n)
+        words[i, i // 32] = np.left_shift(np.uint32(1), (i % 32).astype(np.uint32))
+        return words
+
+    def _op_step(self, op, slot):
+        if self.backend == "csr":
+            return op_csr(op.tensor, slot)
+        return op_bitplane(op.tensor, slot)
+
+    def _compose(self, acc, step, n_mid: int):
+        if self.backend == "csr":
+            return compose_pair_csr(acc, step)
+        return compose_pair(acc, step, n_mid, use_pallas=self.use_pallas)
+
+    # -- the composed relation ----------------------------------------------
+    def relation(self, src: str, dst: str):
+        """The composed ``src`` → ``dst`` relation (scipy CSR or packed
+        bitplane, per backend), from cache or composed incrementally."""
+        self._sync()
+        cached = self._lookup((src, dst))
+        if cached is not None:
+            self.hits += 1
+            return cached
+        self.misses += 1
+        if src == dst:
+            rel = self._identity(self.index.datasets[src].n_rows)
+            self._insert((src, dst), rel)
+            return rel
+        chain = path_tensors(self.index, src, dst)
+        # longest cached prefix: datasets along the path are src, out_1 .. dst
+        path_ids = [src] + [op.output_id for op, _ in chain]
+        start = 0
+        acc = None
+        for j in range(len(path_ids) - 1, 0, -1):
+            hit = self._lookup((src, path_ids[j]))
+            if hit is not None:
+                self.hits += 1
+                acc, start = hit, j
+                break
+        for j in range(start, len(chain)):
+            op, slot = chain[j]
+            step = self._op_step(op, slot)
+            acc = step if acc is None else self._compose(
+                acc, step, op.tensor.n_in[slot])
+            self._insert((src, path_ids[j + 1]), acc)
+        return acc
+
+    # -- batched probes -------------------------------------------------------
+    def _probe_masks(self, rows, n: int) -> Tuple[np.ndarray, bool]:
+        from repro.core.query import _as_mask, _as_mask_batch, is_probe_batch
+
+        if is_probe_batch(rows):
+            return _as_mask_batch(rows, n), True
+        return _as_mask(rows, n)[None, :], False
+
+    def _try_relation(self, src: str, dst: str):
+        """``relation`` for probes: no dataflow path -> None (probes answer
+        empty, matching the walking engine; ``relation`` itself still raises
+        so relation-materializing callers get the loud error)."""
+        try:
+            return self.relation(src, dst)
+        except KeyError:
+            return None
+
+    def _forward_probe(self, masks: np.ndarray, src: str, dst: str) -> np.ndarray:
+        """(B, |src|) bool -> (B, |dst|) bool through the composed relation."""
+        rel = self._try_relation(src, dst)
+        if rel is None:
+            return np.zeros(
+                (masks.shape[0], self.index.datasets[dst].n_rows), dtype=bool)
+        if self.backend == "csr":
+            return np.asarray(masks.astype(np.float32) @ rel) > 0
+        if self.use_pallas:
+            from repro.kernels import ops as K  # late import: host path stays jax-free
+
+            words = np.asarray(K.bitplane_probe(pack_bitplane(masks), rel))
+        else:
+            n_src = self.index.datasets[src].n_rows
+            words = bitplane_or_reduce(pack_bitplane(masks), rel, n_src)
+        return unpack_bitplane(words, self.index.datasets[dst].n_rows)
+
+    def _backward_probe(self, masks: np.ndarray, src: str, dst: str) -> np.ndarray:
+        """(B, |dst|) bool -> (B, |src|) bool: rows of the composed relation
+        intersecting each probe set."""
+        rel = self._try_relation(src, dst)
+        if rel is None:
+            return np.zeros(
+                (masks.shape[0], self.index.datasets[src].n_rows), dtype=bool)
+        if self.backend == "csr":
+            return (rel @ masks.astype(np.float32).T).T > 0
+        words = pack_bitplane(masks)
+        return np.stack([(rel & w[None, :]).any(axis=1) for w in words], axis=0)
+
+    def q1_forward(self, src: str, rows, dst: str):
+        """Q1 via ONE batched probe of the composed relation (no DAG walk)."""
+        masks, batched = self._probe_masks(rows, self.index.datasets[src].n_rows)
+        out = self._forward_probe(masks, src, dst)
+        res = [np.flatnonzero(m) for m in out]
+        return res if batched else res[0]
+
+    def q2_backward(self, dst: str, rows, src: str):
+        """Q2: src rows whose composed relation row intersects the probe set."""
+        masks, batched = self._probe_masks(rows, self.index.datasets[dst].n_rows)
+        out = self._backward_probe(masks, src, dst)
+        res = [np.flatnonzero(m) for m in out]
+        return res if batched else res[0]
+
+    def q10_co_contributory(self, d1: str, rows, d2: str, via: str):
+        """Records of ``d2`` co-contributing with ``rows`` of ``d1`` into
+        ``via`` — two composed probes, zero DAG hops."""
+        from repro.core.query import is_probe_batch
+
+        batched = is_probe_batch(rows)
+        via_rows = self.q1_forward(d1, rows, via)
+        res = self.q2_backward(via, via_rows if batched else [via_rows], d2)
+        return res if batched else res[0]
+
+    def q11_co_dependency(self, d2: str, rows, d1: str, d3: str):
+        from repro.core.query import is_probe_batch
+
+        batched = is_probe_batch(rows)
+        back = self.q2_backward(d2, rows if batched else [rows], d1)
+        res = self.q1_forward(d1, back, d3)
+        return res if batched else res[0]
+
+    # -- introspection --------------------------------------------------------
+    def stats(self) -> Dict[str, int]:
+        return {
+            "backend": self.backend,
+            "entries": len(self._cache),
+            "bytes": self._bytes,
+            "budget_bytes": self.memory_budget_bytes,
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+        }

@@ -7,9 +7,22 @@ from typing import Any, Dict, List, Optional
 
 import numpy as np
 
-from repro.core.schema import Bitset
+from repro.core.schema import Bitset, rank_positions
 
 __all__ = ["OpCategory", "AttrMap", "CaptureInfo"]
+
+
+def _pack_pairs(rows: np.ndarray, cols: np.ndarray, n_rows: int, n_cols: int) -> np.ndarray:
+    """Scatter (row, col) edges into a packed uint32 bitplane (n_rows, ⌈n_cols/32⌉)."""
+    plane = np.zeros((n_rows, max((n_cols + 31) // 32, 1)), dtype=np.uint32)
+    keep = (rows >= 0) & (rows < n_rows) & (cols >= 0) & (cols < n_cols)
+    rows, cols = rows[keep], cols[keep]
+    np.bitwise_or.at(
+        plane,
+        (rows, cols // 32),
+        np.left_shift(np.uint32(1), (cols % 32).astype(np.uint32)),
+    )
+    return plane
 
 
 class OpCategory(enum.Enum):
@@ -46,6 +59,8 @@ class AttrMap:
     bitset: Optional[Bitset] = None
     m: Optional[int] = None
     perm: Optional[np.ndarray] = None  # int32 (n_out_attrs,), -1 = not from here
+    # cached packed attribute bitplanes, keyed (n_in_attrs, n_out_attrs):
+    _planes: Dict = dataclasses.field(default_factory=dict, repr=False, compare=False)
 
     def nbytes(self) -> int:
         total = 0
@@ -53,7 +68,63 @@ class AttrMap:
             total += self.bitset.nbytes()
         if self.perm is not None:
             total += int(self.perm.nbytes)
+        for plane in self._planes.values():
+            total += int(plane.nbytes)
         return total
+
+    # -- vectorized realization (query engine hot path) ----------------------
+    def pairs(self, n_in: int, n_out: int):
+        """The attribute relation as an (in_attr, out_attr) int32 edge list.
+
+        One vectorized construction per ``kind`` — the per-attribute rank /
+        select dispatch of the Table-VI maps collapses into cumsums and
+        flatnonzeros over the bitset.
+        """
+        if self.kind == "identity":
+            i = np.arange(min(n_in, n_out), dtype=np.int32)
+            return i, i
+        if self.kind == "vreduce":
+            if self.perm is not None:  # order-changing fallback (paper: int list)
+                perm = np.asarray(self.perm, dtype=np.int32)
+                return perm, np.arange(len(perm), dtype=np.int32)
+            rp = rank_positions(self.bitset)   # map_vr_f at every position at once
+            kept = np.flatnonzero(rp >= 0).astype(np.int32)
+            return kept, rp[kept]
+        if self.kind == "vaugment":
+            m = self.m
+            new = self.bitset.indices().astype(np.int32)
+            eng = new[new < m]          # input attrs used to engineer features
+            new = new[new >= m]         # the engineered output attrs
+            i = np.arange(min(m, n_out), dtype=np.int32)
+            return (
+                np.concatenate([i, np.repeat(eng, len(new))]),
+                np.concatenate([i, np.tile(new, len(eng))]),
+            )
+        if self.kind == "join":
+            if self.perm is not None:
+                out = np.flatnonzero(np.asarray(self.perm) >= 0).astype(np.int32)
+                return np.asarray(self.perm, dtype=np.int32)[out], out
+            outpos = self.bitset.indices().astype(np.int32)  # select(i+1) per i
+            k = min(n_in, len(outpos))
+            return np.arange(k, dtype=np.int32), outpos[:k]
+        raise ValueError(self.kind)
+
+    def fwd_plane(self, n_in: int, n_out: int) -> np.ndarray:
+        """uint32 (n_in, ⌈n_out/32⌉): row i = packed output attrs fed by input
+        attr i.  Memoized — built once per (shape) and reused every query."""
+        key = ("f", n_in, n_out)
+        if key not in self._planes:
+            i, o = self.pairs(n_in, n_out)
+            self._planes[key] = _pack_pairs(i, o, n_in, n_out)
+        return self._planes[key]
+
+    def bwd_plane(self, n_in: int, n_out: int) -> np.ndarray:
+        """uint32 (n_out, ⌈n_in/32⌉): transposed relation for backward maps."""
+        key = ("b", n_in, n_out)
+        if key not in self._planes:
+            i, o = self.pairs(n_in, n_out)
+            self._planes[key] = _pack_pairs(o, i, n_out, n_in)
+        return self._planes[key]
 
 
 @dataclasses.dataclass

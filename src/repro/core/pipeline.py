@@ -54,6 +54,8 @@ class ProvenanceIndex:
         self.ops: List[OpRecord] = []
         self.producer: Dict[str, int] = {}          # dataset -> producing op
         self.consumers: Dict[str, List[int]] = {}   # dataset -> consuming ops
+        self.version = 0                            # bumped per recorded op;
+        self._composed = None                       # hop-caches key on it
 
     # -- registration ---------------------------------------------------------
     def add_source(self, dataset_id: str, table: Table) -> str:
@@ -98,6 +100,7 @@ class ProvenanceIndex:
             output_id=output_id,
         )
         self.ops.append(op)
+        self.version += 1
         self.producer[output_id] = op.op_id
         for d in input_ids:
             self.consumers.setdefault(d, []).append(op.op_id)
@@ -162,6 +165,20 @@ class ProvenanceIndex:
         produced = set(self.producer)
         consumed = set(self.consumers)
         return [d for d in produced if d not in consumed]
+
+    def composed(self, **kwargs):
+        """The index's shared :class:`~repro.core.hopcache.ComposedIndex`.
+
+        Created lazily (late import — hopcache builds on compose which builds
+        on this module); pass kwargs (e.g. ``memory_budget_bytes``) on first
+        call to configure it."""
+        from repro.core.hopcache import ComposedIndex  # circular at module scope
+
+        if self._composed is None:
+            self._composed = ComposedIndex(self, **kwargs)
+        elif kwargs:
+            raise ValueError("composed() already configured; use index.composed()")
+        return self._composed
 
     # -- memory accounting (Table IX / Table XI) --------------------------------
     def prov_nbytes(self) -> int:

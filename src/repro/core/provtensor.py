@@ -37,6 +37,9 @@ __all__ = [
     "append_tensor",
     "pack_bitplane",
     "unpack_bitplane",
+    "pack_mask",
+    "unpack_mask",
+    "bitplane_or_reduce",
 ]
 
 
@@ -103,6 +106,27 @@ class CSR:
         mask[self.col_idx[flat]] = True
         return mask
 
+    def neighbor_mask_many(self, masks: np.ndarray) -> np.ndarray:
+        """Batched :meth:`neighbor_mask`: bool (B, n_rows) -> bool (B, n_cols).
+
+        One ragged gather covers the whole batch — the probe rows of every
+        batch element share a single repeat/arange expansion, so batch size
+        adds no Python-level work.
+        """
+        masks = np.asarray(masks, dtype=bool)
+        out = np.zeros((masks.shape[0], self.n_cols), dtype=bool)
+        bs, qs = np.nonzero(masks[:, : self.n_rows])
+        if qs.size == 0:
+            return out
+        starts = self.row_ptr[qs]
+        degs = self.row_ptr[qs + 1] - starts
+        total = int(degs.sum())
+        if total == 0:
+            return out
+        flat = np.repeat(starts - np.concatenate(([0], np.cumsum(degs)[:-1])), degs) + np.arange(total)
+        out[np.repeat(bs, degs), self.col_idx[flat]] = True
+        return out
+
     @property
     def nnz(self) -> int:
         return int(self.col_idx.shape[0])
@@ -134,6 +158,35 @@ def unpack_bitplane(words: np.ndarray, n_cols: int) -> np.ndarray:
     return bits.reshape(r, cw * 32)[:, :n_cols].astype(bool)
 
 
+def pack_mask(mask: np.ndarray) -> np.ndarray:
+    """Pack one bool vector (n,) -> uint32 (⌈n/32⌉,)."""
+    return pack_bitplane(np.asarray(mask, dtype=bool)[None, :])[0]
+
+
+def unpack_mask(words: np.ndarray, n: int) -> np.ndarray:
+    """Inverse of :func:`pack_mask`."""
+    return unpack_bitplane(np.asarray(words, dtype=np.uint32)[None, :], n)[0]
+
+
+def bitplane_or_reduce(sel_words: np.ndarray, plane: np.ndarray, n_mid: int) -> np.ndarray:
+    """(OR,AND)-contract packed selectors against a packed relation, on host.
+
+    ``sel_words`` is (B, ⌈n_mid/32⌉) — B packed row-selector masks;
+    ``plane`` is (n_mid, W) — a packed relation bitplane.  Returns (B, W):
+    row b = OR of the plane rows whose selector bit is set.  This is the numpy
+    twin of :func:`repro.kernels.ops.bitmatmul` (same contraction), used where
+    kernel-launch latency would dominate the tiny host-side masks.
+    """
+    sel_words = np.atleast_2d(np.asarray(sel_words, dtype=np.uint32))
+    sel = unpack_bitplane(sel_words, n_mid)                   # (B, n_mid) bool
+    out = np.zeros((sel.shape[0], plane.shape[1]), dtype=np.uint32)
+    for b in range(sel.shape[0]):  # per-probe cost is O(selected rows), and
+        picked = plane[sel[b]]     # B is small — never densify (B, n_mid, W)
+        if picked.shape[0]:
+            out[b] = np.bitwise_or.reduce(picked, axis=0)
+    return out
+
+
 # ---------------------------------------------------------------------------
 # The provenance tensor itself
 # ---------------------------------------------------------------------------
@@ -147,6 +200,8 @@ class ProvTensor:
 
     _fwd: Optional[list] = dataclasses.field(default=None, repr=False)
     _bwd: Optional[list] = dataclasses.field(default=None, repr=False)
+    _bpf: Optional[list] = dataclasses.field(default=None, repr=False)
+    _bpb: Optional[list] = dataclasses.field(default=None, repr=False)
 
     # -- construction -------------------------------------------------------
     def __post_init__(self) -> None:
@@ -196,6 +251,14 @@ class ProvTensor:
         rows = np.flatnonzero(np.asarray(out_mask, dtype=bool))
         return self.bwd(inp).neighbor_mask(rows)
 
+    def forward_mask_batch(self, inp: int, in_masks: np.ndarray) -> np.ndarray:
+        """Batched :meth:`forward_mask`: bool (B, n_in[inp]) -> (B, n_out)."""
+        return self.fwd(inp).neighbor_mask_many(in_masks)
+
+    def backward_mask_batch(self, inp: int, out_masks: np.ndarray) -> np.ndarray:
+        """Batched :meth:`backward_mask`: bool (B, n_out) -> (B, n_in[inp])."""
+        return self.bwd(inp).neighbor_mask_many(out_masks)
+
     def forward_rows(self, inp: int, rows: Sequence[int]) -> np.ndarray:
         m = np.zeros(self.n_in[inp], dtype=bool)
         m[np.asarray(list(rows), dtype=np.int64)] = True
@@ -208,18 +271,27 @@ class ProvTensor:
 
     # -- bitplane views (for the einsum composition path) -------------------
     def bitplane_fwd(self, inp: int) -> np.ndarray:
-        """uint32 (n_in[inp], ceil(n_out/32)) relation matrix R[i, o]."""
-        dense = np.zeros((self.n_in[inp], self.n_out), dtype=bool)
-        valid = self.coo[:, 1 + inp] >= 0
-        dense[self.coo[valid, 1 + inp], self.coo[valid, 0]] = True
-        return pack_bitplane(dense)
+        """uint32 (n_in[inp], ceil(n_out/32)) relation matrix R[i, o].
+        Memoized — the hop-cache recomposes from these repeatedly."""
+        if self._bpf is None:
+            self._bpf = [None] * self.k
+        if self._bpf[inp] is None:
+            dense = np.zeros((self.n_in[inp], self.n_out), dtype=bool)
+            valid = self.coo[:, 1 + inp] >= 0
+            dense[self.coo[valid, 1 + inp], self.coo[valid, 0]] = True
+            self._bpf[inp] = pack_bitplane(dense)
+        return self._bpf[inp]
 
     def bitplane_bwd(self, inp: int) -> np.ndarray:
         """uint32 (n_out, ceil(n_in[inp]/32)) relation matrix R[o, i]."""
-        dense = np.zeros((self.n_out, self.n_in[inp]), dtype=bool)
-        valid = self.coo[:, 1 + inp] >= 0
-        dense[self.coo[valid, 0], self.coo[valid, 1 + inp]] = True
-        return pack_bitplane(dense)
+        if self._bpb is None:
+            self._bpb = [None] * self.k
+        if self._bpb[inp] is None:
+            dense = np.zeros((self.n_out, self.n_in[inp]), dtype=bool)
+            valid = self.coo[:, 1 + inp] >= 0
+            dense[self.coo[valid, 0], self.coo[valid, 1 + inp]] = True
+            self._bpb[inp] = pack_bitplane(dense)
+        return self._bpb[inp]
 
     # -- set-semantics canonicalization (paper §III-C.a) ---------------------
     def canonicalize(self, duplicate_groups: np.ndarray) -> "ProvTensor":
@@ -237,13 +309,18 @@ class ProvTensor:
     # -- memory accounting (Table IX / XI) -----------------------------------
     def nbytes(self, include_index: bool = True) -> int:
         """Bytes of the provenance encoding: COO indices (the values list is
-        omitted — binary tensor) plus, when built, the bidirectional CSR."""
+        omitted — binary tensor) plus, when built, the bidirectional CSR and
+        any memoized relation bitplanes."""
         total = int(self.coo.nbytes)
         if include_index:
             for half in (self._fwd or []), (self._bwd or []):
                 for csr in half:
                     if csr is not None:
                         total += csr.nbytes()
+            for half in (self._bpf or []), (self._bpb or []):
+                for plane in half:
+                    if plane is not None:
+                        total += int(plane.nbytes)
         return total
 
 

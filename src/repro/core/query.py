@@ -4,22 +4,45 @@ Record-level queries chain ``project(slice(T, p_in, rows), p_out)`` hops —
 realized as batched CSR probes (the optimized representation of §III-C) —
 over the topologically-ordered op DAG.  Attribute-level queries additionally
 thread (row-set x attr-set) terms through the Table-VI bitset maps.
+
+This engine is fully array-vectorized:
+
+* attribute masks travel PACKED (uint32 words, 32 attrs per lane) and advance
+  through an op via one select-OR contraction against the op's memoized
+  attribute bitplane (:meth:`AttrMap.fwd_plane` / ``bwd_plane``) — no
+  per-attribute rank/select dispatch;
+* ``_cells`` materializes the union of (row-set × attr-set) products as a
+  broadcasted outer product over packed masks, then one ``argwhere``;
+* every public query accepts EITHER one probe set OR a batch (a list of probe
+  sets / a 2-D boolean mask stack) and answers the batch in one pass — the
+  per-op CSR gather covers all batch elements with a single ragged gather
+  (:meth:`CSR.neighbor_mask_many`).
+
+Multi-hop batched probes can additionally skip the per-op walk entirely via
+the composed hop-cache (:mod:`repro.core.hopcache`).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Set, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.opcat import AttrMap, OpCategory
-from repro.core.pipeline import OpRecord, ProvenanceIndex
-from repro.core import schema as sc
+from repro.core.opcat import AttrMap
+from repro.core.pipeline import ProvenanceIndex
+from repro.core.provtensor import (
+    bitplane_or_reduce,
+    pack_bitplane,
+    pack_mask,
+    unpack_bitplane,
+)
 
 __all__ = [
     "Hop",
     "forward_record_masks",
     "backward_record_masks",
+    "forward_record_masks_batch",
+    "backward_record_masks_batch",
     "q1_forward",
     "q2_backward",
     "q3_forward_attr",
@@ -46,12 +69,41 @@ class Hop:
     n_records: int
 
 
+# ---------------------------------------------------------------------------
+# Probe normalization: single probe vs batch of probes
+# ---------------------------------------------------------------------------
 def _as_mask(rows, n: int) -> np.ndarray:
     if isinstance(rows, np.ndarray) and rows.dtype == bool:
         return rows
     m = np.zeros(n, dtype=bool)
     m[np.asarray(list(rows), dtype=np.int64)] = True
     return m
+
+
+def is_probe_batch(rows) -> bool:
+    """A batch is a 2-D mask stack or a non-empty list/tuple of probe sets."""
+    if isinstance(rows, np.ndarray):
+        return rows.ndim == 2
+    if isinstance(rows, (list, tuple)):
+        return len(rows) > 0 and all(
+            isinstance(r, (list, tuple, np.ndarray, set, frozenset, range))
+            for r in rows
+        )
+    return False
+
+
+def _as_mask_batch(rows_batch, n: int) -> np.ndarray:
+    if isinstance(rows_batch, np.ndarray) and rows_batch.ndim == 2:
+        if rows_batch.dtype == bool:
+            return rows_batch
+        out = np.zeros((rows_batch.shape[0], n), dtype=bool)
+        out[np.arange(rows_batch.shape[0])[:, None], rows_batch.astype(np.int64)] = True
+        return out
+    return np.stack([_as_mask(r, n) for r in rows_batch], axis=0)
+
+
+def _empty_rows() -> np.ndarray:
+    return np.zeros(0, dtype=np.int64)
 
 
 # ---------------------------------------------------------------------------
@@ -99,116 +151,111 @@ def backward_record_masks(
     return masks, hops
 
 
-def q1_forward(index: ProvenanceIndex, src: str, rows, dst: str) -> np.ndarray:
-    """Q1: records in ``dst`` derived from ``rows`` of ``src``."""
+def forward_record_masks_batch(
+    index: ProvenanceIndex, src: str, rows_batch
+) -> Dict[str, np.ndarray]:
+    """Batched :func:`forward_record_masks`: every value is (B, n_rows) bool.
+
+    One pass over the op DAG answers all B probes — each hop is a single
+    batched CSR gather, not B sequential walks.
+    """
+    stack = _as_mask_batch(rows_batch, index.datasets[src].n_rows)
+    masks: Dict[str, np.ndarray] = {src: stack}
+    B = stack.shape[0]
+    for op in index.downstream_ops(src):
+        out_mask = masks.get(op.output_id, np.zeros((B, op.tensor.n_out), dtype=bool))
+        for k, in_id in enumerate(op.input_ids):
+            if in_id in masks and masks[in_id].any():
+                out_mask = out_mask | op.tensor.forward_mask_batch(k, masks[in_id])
+        masks[op.output_id] = out_mask
+    return masks
+
+
+def backward_record_masks_batch(
+    index: ProvenanceIndex, dst: str, rows_batch
+) -> Dict[str, np.ndarray]:
+    stack = _as_mask_batch(rows_batch, index.datasets[dst].n_rows)
+    masks: Dict[str, np.ndarray] = {dst: stack}
+    B = stack.shape[0]
+    for op in reversed(index.upstream_ops(dst)):
+        if op.output_id not in masks or not masks[op.output_id].any():
+            continue
+        for k, in_id in enumerate(op.input_ids):
+            contrib = op.tensor.backward_mask_batch(k, masks[op.output_id])
+            prev = masks.get(
+                in_id, np.zeros((B, index.datasets[in_id].n_rows), dtype=bool)
+            )
+            masks[in_id] = prev | contrib
+    return masks
+
+
+def q1_forward(index: ProvenanceIndex, src: str, rows, dst: str):
+    """Q1: records in ``dst`` derived from ``rows`` of ``src``.
+
+    ``rows`` may be one probe set or a batch (list of sets); a batch returns
+    a list of index arrays, answered in one vectorized pass.
+    """
+    if is_probe_batch(rows):
+        masks = forward_record_masks_batch(index, src, rows)
+        B = len(rows) if not isinstance(rows, np.ndarray) else rows.shape[0]
+        if dst not in masks:
+            return [_empty_rows() for _ in range(B)]
+        return [np.flatnonzero(m) for m in masks[dst]]
     masks, _ = forward_record_masks(index, src, rows)
     if dst not in masks:
-        return np.zeros(0, dtype=np.int64)
+        return _empty_rows()
     return np.flatnonzero(masks[dst])
 
 
-def q2_backward(index: ProvenanceIndex, dst: str, rows, src: str) -> np.ndarray:
+def q2_backward(index: ProvenanceIndex, dst: str, rows, src: str):
     """Q2: records in ``src`` that contributed to ``rows`` of ``dst``."""
+    if is_probe_batch(rows):
+        masks = backward_record_masks_batch(index, dst, rows)
+        B = len(rows) if not isinstance(rows, np.ndarray) else rows.shape[0]
+        if src not in masks:
+            return [_empty_rows() for _ in range(B)]
+        return [np.flatnonzero(m) for m in masks[src]]
     masks, _ = backward_record_masks(index, dst, rows)
     if src not in masks:
-        return np.zeros(0, dtype=np.int64)
+        return _empty_rows()
     return np.flatnonzero(masks[src])
 
 
 def q5_forward_how(index: ProvenanceIndex, src: str, rows, dst: str):
     masks, hops = forward_record_masks(index, src, rows, collect_hops=True)
-    recs = np.flatnonzero(masks[dst]) if dst in masks else np.zeros(0, dtype=np.int64)
+    recs = np.flatnonzero(masks[dst]) if dst in masks else _empty_rows()
     return recs, hops
 
 
 def q6_backward_how(index: ProvenanceIndex, dst: str, rows, src: str):
     masks, hops = backward_record_masks(index, dst, rows, collect_hops=True)
-    recs = np.flatnonzero(masks[src]) if src in masks else np.zeros(0, dtype=np.int64)
+    recs = np.flatnonzero(masks[src]) if src in masks else _empty_rows()
     return recs, hops
 
 
 # ---------------------------------------------------------------------------
 # Attribute maps (Table VI bitsets -> per-op attr propagation)
+#
+# An attr mask is PACKED uint32 words; one op hop is a select-OR contraction
+# of the packed mask against the op's memoized attribute bitplane.
 # ---------------------------------------------------------------------------
 def _attrs_forward(amap: AttrMap, attrs: np.ndarray, n_out_attrs: int) -> np.ndarray:
     """Map an input-attr mask to the output-attr mask through one op input."""
-    out = np.zeros(n_out_attrs, dtype=bool)
-    src = np.flatnonzero(attrs)
-    if amap.kind == "identity":
-        valid = src[src < n_out_attrs]
-        out[valid] = True
-        return out
-    if amap.kind == "vreduce":
-        b = amap.bitset
-        if amap.perm is not None:  # order-changing fallback (paper: int list)
-            for j, a in enumerate(amap.perm):
-                if attrs[a]:
-                    out[j] = True
-            return out
-        for a in src:
-            j = sc.map_vr_f(b, int(a))
-            if j is not None:
-                out[j] = True
-        return out
-    if amap.kind == "vaugment":
-        b, m = amap.bitset, amap.m
-        new_attrs = [j for j in range(m, b.n) if b.test(j)]
-        for a in src:
-            out[sc.map_va_f(m, int(a))] = True           # preserved position
-            if a < m and b.test(int(a)):                  # engineered features
-                for j in new_attrs:
-                    out[j] = True
-        return out
-    if amap.kind == "join":
-        if amap.perm is not None:
-            for j, a in enumerate(amap.perm):
-                if a >= 0 and attrs[a]:
-                    out[j] = True
-            return out
-        for a in src:
-            j = sc.map_join_f(amap.bitset, int(a))
-            if j is not None:
-                out[j] = True
-        return out
-    raise ValueError(amap.kind)
+    attrs = np.asarray(attrs, dtype=bool)
+    plane = amap.fwd_plane(attrs.shape[0], n_out_attrs)
+    words = bitplane_or_reduce(pack_mask(attrs)[None, :], plane, attrs.shape[0])
+    return unpack_bitplane(words, n_out_attrs)[0]
 
 
 def _attrs_backward(amap: AttrMap, attrs: np.ndarray, n_in_attrs: int) -> np.ndarray:
-    out = np.zeros(n_in_attrs, dtype=bool)
-    src = np.flatnonzero(attrs)
-    if amap.kind == "identity":
-        valid = src[src < n_in_attrs]
-        out[valid] = True
-        return out
-    if amap.kind == "vreduce":
-        if amap.perm is not None:
-            for j in src:
-                out[amap.perm[j]] = True
-            return out
-        for j in src:
-            out[sc.map_vr_b(amap.bitset, int(j))] = True
-        return out
-    if amap.kind == "vaugment":
-        for j in src:
-            for a in sc.map_va_b(amap.bitset, amap.m, int(j)):
-                out[a] = True
-        return out
-    if amap.kind == "join":
-        if amap.perm is not None:
-            for j in src:
-                if amap.perm[j] >= 0:
-                    out[amap.perm[j]] = True
-            return out
-        for j in src:
-            a = sc.map_join_b(amap.bitset, int(j))
-            if a is not None:
-                out[a] = True
-        return out
-    raise ValueError(amap.kind)
+    attrs = np.asarray(attrs, dtype=bool)
+    plane = amap.bwd_plane(n_in_attrs, attrs.shape[0])
+    words = bitplane_or_reduce(pack_mask(attrs)[None, :], plane, attrs.shape[0])
+    return unpack_bitplane(words, n_in_attrs)[0]
 
 
 # ---------------------------------------------------------------------------
-# Attribute-level queries (Q3/Q4/Q7/Q8): (row-mask, attr-mask) terms
+# Attribute-level queries (Q3/Q4/Q7/Q8): (row-mask, packed-attr-words) terms
 # ---------------------------------------------------------------------------
 def _attr_propagate(
     index: ProvenanceIndex, start: str, rows, attrs, direction: str,
@@ -216,7 +263,7 @@ def _attr_propagate(
 ):
     ds0 = index.datasets[start]
     terms: Dict[str, List[Tuple[np.ndarray, np.ndarray]]] = {
-        start: [(_as_mask(rows, ds0.n_rows), _as_mask(attrs, ds0.n_cols))]
+        start: [(_as_mask(rows, ds0.n_rows), pack_mask(_as_mask(attrs, ds0.n_cols)))]
     }
     hops: List[Hop] = []
     ops = (
@@ -228,27 +275,30 @@ def _attr_propagate(
         out_ds = index.datasets[op.output_id]
         if direction == "fwd":
             for k, in_id in enumerate(op.input_ids):
-                for (rm, am) in terms.get(in_id, []):
+                in_ds = index.datasets[in_id]
+                plane = op.info.attr_maps[k].fwd_plane(in_ds.n_cols, out_ds.n_cols)
+                for (rm, aw) in terms.get(in_id, []):
                     if not rm.any():
                         continue
                     new_rm = op.tensor.forward_mask(k, rm)
-                    new_am = _attrs_forward(op.info.attr_maps[k], am, out_ds.n_cols)
-                    if new_rm.any() and new_am.any():
-                        terms.setdefault(op.output_id, []).append((new_rm, new_am))
+                    new_aw = bitplane_or_reduce(aw[None, :], plane, in_ds.n_cols)[0]
+                    if new_rm.any() and new_aw.any():
+                        terms.setdefault(op.output_id, []).append((new_rm, new_aw))
                         if collect_hops:
                             hops.append(Hop(op.op_id, op.info.op_name,
                                             op.info.category.value, in_id,
                                             op.output_id, int(new_rm.sum())))
         else:
-            for (rm, am) in terms.get(op.output_id, []):
+            for (rm, aw) in terms.get(op.output_id, []):
                 if not rm.any():
                     continue
                 for k, in_id in enumerate(op.input_ids):
                     in_ds = index.datasets[in_id]
+                    plane = op.info.attr_maps[k].bwd_plane(in_ds.n_cols, out_ds.n_cols)
                     new_rm = op.tensor.backward_mask(k, rm)
-                    new_am = _attrs_backward(op.info.attr_maps[k], am, in_ds.n_cols)
-                    if new_rm.any() and new_am.any():
-                        terms.setdefault(in_id, []).append((new_rm, new_am))
+                    new_aw = bitplane_or_reduce(aw[None, :], plane, out_ds.n_cols)[0]
+                    if new_rm.any() and new_aw.any():
+                        terms.setdefault(in_id, []).append((new_rm, new_aw))
                         if collect_hops:
                             hops.append(Hop(op.op_id, op.info.op_name,
                                             op.info.category.value, op.output_id,
@@ -256,36 +306,112 @@ def _attr_propagate(
     return terms, hops
 
 
-def _cells(terms: List[Tuple[np.ndarray, np.ndarray]]) -> np.ndarray:
-    """Union of (rows x attrs) products -> (n, 2) sorted unique cell list."""
-    cells = set()
-    for rm, am in terms:
-        rs, as_ = np.flatnonzero(rm), np.flatnonzero(am)
-        for r in rs:
-            for a in as_:
-                cells.add((int(r), int(a)))
-    return np.array(sorted(cells), dtype=np.int64).reshape(-1, 2)
+def _attr_propagate_batch(
+    index: ProvenanceIndex, start: str, rows_batch, attrs_batch, direction: str
+):
+    """Batched term propagation: every term is ((B, n_rows) bool, (B, nw) u32).
+
+    A term stays alive while ANY batch element is non-empty; per-element
+    emptiness zeroes that element's masks, which contributes nothing to the
+    final outer product — exactly the single-probe pruning, batched.
+    """
+    ds0 = index.datasets[start]
+    rm0 = _as_mask_batch(rows_batch, ds0.n_rows)
+    B = rm0.shape[0]
+    am0 = _as_mask_batch(attrs_batch, ds0.n_cols) if is_probe_batch(attrs_batch) \
+        else np.broadcast_to(_as_mask(attrs_batch, ds0.n_cols), (B, ds0.n_cols))
+    terms: Dict[str, List[Tuple[np.ndarray, np.ndarray]]] = {
+        start: [(rm0, pack_bitplane(am0))]
+    }
+    ops = (
+        index.downstream_ops(start)
+        if direction == "fwd"
+        else list(reversed(index.upstream_ops(start)))
+    )
+    for op in ops:
+        out_ds = index.datasets[op.output_id]
+        if direction == "fwd":
+            for k, in_id in enumerate(op.input_ids):
+                in_ds = index.datasets[in_id]
+                plane = op.info.attr_maps[k].fwd_plane(in_ds.n_cols, out_ds.n_cols)
+                for (rm, aw) in terms.get(in_id, []):
+                    if not rm.any():
+                        continue
+                    new_rm = op.tensor.forward_mask_batch(k, rm)
+                    new_aw = bitplane_or_reduce(aw, plane, in_ds.n_cols)
+                    if new_rm.any() and new_aw.any():
+                        terms.setdefault(op.output_id, []).append((new_rm, new_aw))
+        else:
+            for (rm, aw) in terms.get(op.output_id, []):
+                if not rm.any():
+                    continue
+                for k, in_id in enumerate(op.input_ids):
+                    in_ds = index.datasets[in_id]
+                    plane = op.info.attr_maps[k].bwd_plane(in_ds.n_cols, out_ds.n_cols)
+                    new_rm = op.tensor.backward_mask_batch(k, rm)
+                    new_aw = bitplane_or_reduce(aw, plane, out_ds.n_cols)
+                    if new_rm.any() and new_aw.any():
+                        terms.setdefault(in_id, []).append((new_rm, new_aw))
+    return terms, B
 
 
-def q3_forward_attr(index, src: str, rows, attrs, dst: str) -> np.ndarray:
-    """Q3: attribute values (cells) of ``dst`` derived from the given cells."""
+def _cells(
+    terms: List[Tuple[np.ndarray, np.ndarray]], n_rows: int, n_cols: int
+) -> np.ndarray:
+    """Union of (rows × attrs) products -> (n, 2) sorted unique cell list.
+
+    Broadcasted outer product on PACKED attr words: scatter each term's packed
+    attr mask into the rows its row-mask selects, then unpack once."""
+    nw = max((n_cols + 31) // 32, 1)
+    acc = np.zeros((n_rows, nw), dtype=np.uint32)
+    for rm, aw in terms:
+        acc[rm] |= aw[None, :]
+    return np.argwhere(unpack_bitplane(acc, n_cols)).astype(np.int64)
+
+
+def _cells_batch(
+    terms: List[Tuple[np.ndarray, np.ndarray]], B: int, n_rows: int, n_cols: int
+) -> List[np.ndarray]:
+    nw = max((n_cols + 31) // 32, 1)
+    acc = np.zeros((B, n_rows, nw), dtype=np.uint32)
+    for rm, aw in terms:
+        acc |= np.where(rm[:, :, None], aw[:, None, :], np.uint32(0))
+    return [np.argwhere(unpack_bitplane(acc[b], n_cols)).astype(np.int64)
+            for b in range(B)]
+
+
+def q3_forward_attr(index, src: str, rows, attrs, dst: str):
+    """Q3: attribute values (cells) of ``dst`` derived from the given cells.
+
+    Batched when ``rows`` (and optionally ``attrs``) is a list of probe sets:
+    returns one cell list per probe."""
+    out_ds = index.datasets[dst]
+    if is_probe_batch(rows):
+        terms, B = _attr_propagate_batch(index, src, rows, attrs, "fwd")
+        return _cells_batch(terms.get(dst, []), B, out_ds.n_rows, out_ds.n_cols)
     terms, _ = _attr_propagate(index, src, rows, attrs, "fwd")
-    return _cells(terms.get(dst, []))
+    return _cells(terms.get(dst, []), out_ds.n_rows, out_ds.n_cols)
 
 
-def q4_backward_attr(index, dst: str, rows, attrs, src: str) -> np.ndarray:
+def q4_backward_attr(index, dst: str, rows, attrs, src: str):
+    src_ds = index.datasets[src]
+    if is_probe_batch(rows):
+        terms, B = _attr_propagate_batch(index, dst, rows, attrs, "bwd")
+        return _cells_batch(terms.get(src, []), B, src_ds.n_rows, src_ds.n_cols)
     terms, _ = _attr_propagate(index, dst, rows, attrs, "bwd")
-    return _cells(terms.get(src, []))
+    return _cells(terms.get(src, []), src_ds.n_rows, src_ds.n_cols)
 
 
 def q7_forward_attr_how(index, src: str, rows, attrs, dst: str):
     terms, hops = _attr_propagate(index, src, rows, attrs, "fwd", collect_hops=True)
-    return _cells(terms.get(dst, [])), hops
+    out_ds = index.datasets[dst]
+    return _cells(terms.get(dst, []), out_ds.n_rows, out_ds.n_cols), hops
 
 
 def q8_backward_attr_how(index, dst: str, rows, attrs, src: str):
     terms, hops = _attr_propagate(index, dst, rows, attrs, "bwd", collect_hops=True)
-    return _cells(terms.get(src, [])), hops
+    src_ds = index.datasets[src]
+    return _cells(terms.get(src, []), src_ds.n_rows, src_ds.n_cols), hops
 
 
 # ---------------------------------------------------------------------------
@@ -308,37 +434,74 @@ def q9_all_transformations(index: ProvenanceIndex, dataset: str) -> List[Dict]:
 # ---------------------------------------------------------------------------
 # Q10/Q11: co-contributory and co-dependency (forward + backward combos)
 # ---------------------------------------------------------------------------
+def _pick_via(index: ProvenanceIndex, d1: str, d2: str, fwd_masks, b=None) -> Optional[str]:
+    """The naive default: the last forward-reached dataset that d2 also feeds."""
+    candidates = [
+        d for d, m in fwd_masks.items()
+        if d != d1 and (m[b].any() if b is not None else m.any())
+        and index.path_exists(d2, d)
+    ]
+    return candidates[-1] if candidates else None
+
+
 def q10_co_contributory(
     index: ProvenanceIndex, d1: str, rows, d2: str, via: Optional[str] = None
-) -> np.ndarray:
+):
     """Records of ``d2`` used together with ``rows`` of ``d1`` to create new
     records (in ``via``; defaults to any common descendant)."""
+    if is_probe_batch(rows):
+        return _q10_batch(index, d1, rows, d2, via)
     fwd_masks, _ = forward_record_masks(index, d1, rows)
     if via is None:
-        candidates = [
-            d for d, m in fwd_masks.items()
-            if d != d1 and m.any() and index.path_exists(d2, d)
-        ]
-        if not candidates:
-            return np.zeros(0, dtype=np.int64)
-        via = candidates[-1]
+        via = _pick_via(index, d1, d2, fwd_masks)
+        if via is None:
+            return _empty_rows()
     if via not in fwd_masks or not fwd_masks[via].any():
-        return np.zeros(0, dtype=np.int64)
+        return _empty_rows()
     back, _ = backward_record_masks(index, via, fwd_masks[via])
     if d2 not in back:
-        return np.zeros(0, dtype=np.int64)
+        return _empty_rows()
     return np.flatnonzero(back[d2])
+
+
+def _q10_batch(index, d1, rows_batch, d2, via):
+    fwd = forward_record_masks_batch(index, d1, rows_batch)
+    B = fwd[d1].shape[0]
+    results: List[np.ndarray] = [_empty_rows()] * B
+    # group probes by their (possibly per-probe) via dataset, batch each group
+    groups: Dict[str, List[int]] = {}
+    for b in range(B):
+        v = via if via is not None else _pick_via(index, d1, d2, fwd, b)
+        if v is None or v not in fwd or not fwd[v][b].any():
+            continue
+        groups.setdefault(v, []).append(b)
+    for v, bs in groups.items():
+        back = backward_record_masks_batch(index, v, fwd[v][bs])
+        if d2 not in back:
+            continue
+        for i, b in enumerate(bs):
+            results[b] = np.flatnonzero(back[d2][i])
+    return results
 
 
 def q11_co_dependency(
     index: ProvenanceIndex, d2: str, rows, d1: str, d3: str
-) -> np.ndarray:
+):
     """Records of ``d3`` lineage-dependent on the ``d1`` records that
     generated ``rows`` of ``d2``."""
+    if is_probe_batch(rows):
+        back = backward_record_masks_batch(index, d2, rows)
+        B = back[d2].shape[0]
+        if d1 not in back or not back[d1].any():
+            return [_empty_rows() for _ in range(B)]
+        fwd = forward_record_masks_batch(index, d1, back[d1])
+        if d3 not in fwd:
+            return [_empty_rows() for _ in range(B)]
+        return [np.flatnonzero(m) for m in fwd[d3]]
     back, _ = backward_record_masks(index, d2, rows)
     if d1 not in back or not back[d1].any():
-        return np.zeros(0, dtype=np.int64)
+        return _empty_rows()
     fwd, _ = forward_record_masks(index, d1, back[d1])
     if d3 not in fwd:
-        return np.zeros(0, dtype=np.int64)
+        return _empty_rows()
     return np.flatnonzero(fwd[d3])

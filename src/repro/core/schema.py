@@ -25,6 +25,7 @@ __all__ = [
     "map_join_b",
     "perm_forward",
     "perm_backward",
+    "rank_positions",
 ]
 
 
@@ -147,6 +148,19 @@ def map_join_b(b: Bitset, i: int) -> Optional[int]:
     if i >= b.n or not b.test(i):
         return None
     return b.rank(i) - 1
+
+
+def rank_positions(b: Bitset) -> np.ndarray:
+    """Vectorized rank map: int32 (n,) with entry ``rank(i) - 1`` where bit i
+    is set and ``-1`` elsewhere.
+
+    This single array realizes BOTH of the paper's rank-based maps at once:
+    for a vreduce bitset (over input attrs) it is ``map_vr_f`` applied to every
+    input position; for a join bitset (over output attrs) it is ``map_join_b``
+    applied to every output position.
+    """
+    bits = b.to_bits()
+    return np.where(bits, np.cumsum(bits) - 1, -1).astype(np.int32)
 
 
 # ---------------------------------------------------------------------------

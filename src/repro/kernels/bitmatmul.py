@@ -28,6 +28,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams; support both installs.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 __all__ = ["bitmatmul_kernel", "bitmatmul_pallas"]
 
 
@@ -90,6 +93,6 @@ def bitmatmul_pallas(
         ],
         out_specs=pl.BlockSpec((block_m, block_nw), lambda i, j, ks: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, nw), jnp.uint32),
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel", "parallel", "arbitrary")),
+        compiler_params=_CompilerParams(dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a_bits, b_bits)

@@ -18,6 +18,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams; support both installs.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 __all__ = ["bitset_rank_kernel", "bitset_rank_pallas"]
 
 
@@ -68,6 +71,6 @@ def bitset_rank_pallas(
         ],
         out_specs=pl.BlockSpec((block_q,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((q,), jnp.int32),
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("arbitrary",)),
+        compiler_params=_CompilerParams(dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(words, positions)

@@ -25,6 +25,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams; support both installs.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 __all__ = ["lineage_gather_kernel", "lineage_gather_pallas"]
 
 
@@ -67,6 +70,6 @@ def lineage_gather_pallas(
         ],
         out_specs=pl.BlockSpec((block_q, max_deg), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((q, max_deg), jnp.int32),
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("arbitrary",)),
+        compiler_params=_CompilerParams(dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(queries, row_ptr, col_idx)

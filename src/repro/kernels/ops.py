@@ -17,7 +17,7 @@ from repro.kernels.lineage_gather import lineage_gather_pallas
 from repro.kernels.bitset_rank import bitset_rank_pallas
 from repro.kernels import ref
 
-__all__ = ["bitmatmul", "lineage_gather", "bitset_rank", "on_tpu"]
+__all__ = ["bitmatmul", "bitplane_probe", "lineage_gather", "bitset_rank", "on_tpu"]
 
 
 def on_tpu() -> bool:
@@ -75,6 +75,17 @@ def bitmatmul(
         interpret=interpret,
     )
     return out[:m, :nw]
+
+
+def bitplane_probe(mask_bits, plane_bits, *, use_pallas: bool = True, **kw):
+    """Batched lineage probe of a composed relation (the hop-cache hot path).
+
+    ``mask_bits`` (B, ⌈K/32⌉) packs B row-selector sets; ``plane_bits``
+    (K, ⌈N/32⌉) is a composed relation bitplane.  Row b of the result packs
+    the union of plane rows selected by probe b — the same (OR,AND)
+    contraction as :func:`bitmatmul`, so it shares the Pallas kernel.
+    """
+    return bitmatmul(mask_bits, plane_bits, use_pallas=use_pallas, **kw)
 
 
 def lineage_gather(

@@ -53,6 +53,8 @@ def run_training(
     """``batch_fn(step)`` MUST be a pure function of the step (the data
     pipeline is deterministic/resumable), so restart re-seeks exactly."""
     start_step = 0
+    ckpt.wait()  # an in-flight async save (e.g. crashed prior run on this
+    # manager) must commit before we resolve the resume point
     latest = ckpt.latest_step()
     if latest is not None:
         state = ckpt.restore(latest, like=state, shardings=state_shardings)

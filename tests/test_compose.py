@@ -66,11 +66,11 @@ def test_dataset_lineage_identity_when_src_is_dst():
 def test_sharded_compose_and_audit_match_local():
     import jax
     import jax.numpy as jnp
-    from jax.sharding import AxisType
     from repro.core.distributed import (
         compose_sharded, lineage_audit_sharded, backward_frontier_sharded,
         shard_relation)
     from repro.kernels.ref import pack_bits, unpack_bits
+    from repro.launch.mesh import make_mesh_compat
 
     idx, to = _pipeline(1, n=48)
     sink = to.dataset_id
@@ -78,7 +78,7 @@ def test_sharded_compose_and_audit_match_local():
     n_dst = idx.datasets[sink].n_rows
     rel = dataset_lineage(idx, "src", sink, use_pallas=False)
 
-    mesh = jax.make_mesh((1,), ("data",), axis_types=(AxisType.Auto,))
+    mesh = make_mesh_compat((1,), ("data",))
     bits = np.asarray(pack_bits(jnp.asarray(rel)))
     rb = shard_relation(bits, mesh)
 

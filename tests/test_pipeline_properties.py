@@ -12,6 +12,8 @@ the invariants hold for ANY data-preparation pipeline:
 """
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import query as Q

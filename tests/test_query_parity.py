@@ -1,0 +1,645 @@
+"""Parity: the vectorized / batched / hop-cached query engine vs the naive
+per-hop reference.
+
+The reference below is the SEED implementation of the query layer, kept
+verbatim (per-element Python loops over Table-VI maps, set-based cell
+materialization).  Every Q1-Q11 answer from the packed-bitset engine and the
+ComposedIndex hop-cache must agree EXACTLY with it on randomized pipelines
+covering identity, vreduce, vaugment, hreduce, haugment, join and append ops,
+single and batch probes, empty masks and -1 sentinels.
+"""
+import numpy as np
+import pytest
+
+from repro.core import query as Q
+from repro.core import schema as sc
+from repro.core.hopcache import ComposedIndex
+from repro.core.opcat import AttrMap
+from repro.core.pipeline import ProvenanceIndex
+from repro.dataprep.table import Table
+from repro.dataprep.tracked import track
+
+
+# ===========================================================================
+# Naive reference (the seed engine, verbatim)
+# ===========================================================================
+def _as_mask(rows, n):
+    if isinstance(rows, np.ndarray) and rows.dtype == bool:
+        return rows
+    m = np.zeros(n, dtype=bool)
+    m[np.asarray(list(rows), dtype=np.int64)] = True
+    return m
+
+
+def ref_forward_record_masks(index, src, rows, collect_hops=False):
+    masks = {src: _as_mask(rows, index.datasets[src].n_rows)}
+    hops = []
+    for op in index.downstream_ops(src):
+        out_n = op.tensor.n_out
+        out_mask = masks.get(op.output_id, np.zeros(out_n, dtype=bool))
+        for k, in_id in enumerate(op.input_ids):
+            if in_id in masks and masks[in_id].any():
+                contrib = op.tensor.forward_mask(k, masks[in_id])
+                if collect_hops and contrib.any():
+                    hops.append((op.op_id, in_id, op.output_id, int(contrib.sum())))
+                out_mask |= contrib
+        masks[op.output_id] = out_mask
+    return masks, hops
+
+
+def ref_backward_record_masks(index, dst, rows, collect_hops=False):
+    masks = {dst: _as_mask(rows, index.datasets[dst].n_rows)}
+    hops = []
+    for op in reversed(index.upstream_ops(dst)):
+        if op.output_id not in masks or not masks[op.output_id].any():
+            continue
+        for k, in_id in enumerate(op.input_ids):
+            contrib = op.tensor.backward_mask(k, masks[op.output_id])
+            if collect_hops and contrib.any():
+                hops.append((op.op_id, op.output_id, in_id, int(contrib.sum())))
+            prev = masks.get(in_id, np.zeros(index.datasets[in_id].n_rows, dtype=bool))
+            masks[in_id] = prev | contrib
+    return masks, hops
+
+
+def ref_q1(index, src, rows, dst):
+    masks, _ = ref_forward_record_masks(index, src, rows)
+    if dst not in masks:
+        return np.zeros(0, dtype=np.int64)
+    return np.flatnonzero(masks[dst])
+
+
+def ref_q2(index, dst, rows, src):
+    masks, _ = ref_backward_record_masks(index, dst, rows)
+    if src not in masks:
+        return np.zeros(0, dtype=np.int64)
+    return np.flatnonzero(masks[src])
+
+
+def ref_attrs_forward(amap, attrs, n_out_attrs):
+    out = np.zeros(n_out_attrs, dtype=bool)
+    src = np.flatnonzero(attrs)
+    if amap.kind == "identity":
+        valid = src[src < n_out_attrs]
+        out[valid] = True
+        return out
+    if amap.kind == "vreduce":
+        b = amap.bitset
+        if amap.perm is not None:
+            for j, a in enumerate(amap.perm):
+                if attrs[a]:
+                    out[j] = True
+            return out
+        for a in src:
+            j = sc.map_vr_f(b, int(a))
+            if j is not None:
+                out[j] = True
+        return out
+    if amap.kind == "vaugment":
+        b, m = amap.bitset, amap.m
+        new_attrs = [j for j in range(m, b.n) if b.test(j)]
+        for a in src:
+            out[sc.map_va_f(m, int(a))] = True
+            if a < m and b.test(int(a)):
+                for j in new_attrs:
+                    out[j] = True
+        return out
+    if amap.kind == "join":
+        if amap.perm is not None:
+            for j, a in enumerate(amap.perm):
+                if a >= 0 and attrs[a]:
+                    out[j] = True
+            return out
+        for a in src:
+            j = sc.map_join_f(amap.bitset, int(a))
+            if j is not None:
+                out[j] = True
+        return out
+    raise ValueError(amap.kind)
+
+
+def ref_attrs_backward(amap, attrs, n_in_attrs):
+    out = np.zeros(n_in_attrs, dtype=bool)
+    src = np.flatnonzero(attrs)
+    if amap.kind == "identity":
+        valid = src[src < n_in_attrs]
+        out[valid] = True
+        return out
+    if amap.kind == "vreduce":
+        if amap.perm is not None:
+            for j in src:
+                out[amap.perm[j]] = True
+            return out
+        for j in src:
+            out[sc.map_vr_b(amap.bitset, int(j))] = True
+        return out
+    if amap.kind == "vaugment":
+        for j in src:
+            for a in sc.map_va_b(amap.bitset, amap.m, int(j)):
+                out[a] = True
+        return out
+    if amap.kind == "join":
+        if amap.perm is not None:
+            for j in src:
+                if amap.perm[j] >= 0:
+                    out[amap.perm[j]] = True
+            return out
+        for j in src:
+            a = sc.map_join_b(amap.bitset, int(j))
+            if a is not None:
+                out[a] = True
+        return out
+    raise ValueError(amap.kind)
+
+
+def ref_attr_propagate(index, start, rows, attrs, direction):
+    ds0 = index.datasets[start]
+    terms = {start: [(_as_mask(rows, ds0.n_rows), _as_mask(attrs, ds0.n_cols))]}
+    ops = (
+        index.downstream_ops(start)
+        if direction == "fwd"
+        else list(reversed(index.upstream_ops(start)))
+    )
+    for op in ops:
+        out_ds = index.datasets[op.output_id]
+        if direction == "fwd":
+            for k, in_id in enumerate(op.input_ids):
+                for (rm, am) in terms.get(in_id, []):
+                    if not rm.any():
+                        continue
+                    new_rm = op.tensor.forward_mask(k, rm)
+                    new_am = ref_attrs_forward(op.info.attr_maps[k], am, out_ds.n_cols)
+                    if new_rm.any() and new_am.any():
+                        terms.setdefault(op.output_id, []).append((new_rm, new_am))
+        else:
+            for (rm, am) in terms.get(op.output_id, []):
+                if not rm.any():
+                    continue
+                for k, in_id in enumerate(op.input_ids):
+                    in_ds = index.datasets[in_id]
+                    new_rm = op.tensor.backward_mask(k, rm)
+                    new_am = ref_attrs_backward(op.info.attr_maps[k], am, in_ds.n_cols)
+                    if new_rm.any() and new_am.any():
+                        terms.setdefault(in_id, []).append((new_rm, new_am))
+    return terms
+
+
+def ref_cells(terms):
+    cells = set()
+    for rm, am in terms:
+        for r in np.flatnonzero(rm):
+            for a in np.flatnonzero(am):
+                cells.add((int(r), int(a)))
+    return np.array(sorted(cells), dtype=np.int64).reshape(-1, 2)
+
+
+def ref_q3(index, src, rows, attrs, dst):
+    return ref_cells(ref_attr_propagate(index, src, rows, attrs, "fwd").get(dst, []))
+
+
+def ref_q4(index, dst, rows, attrs, src):
+    return ref_cells(ref_attr_propagate(index, dst, rows, attrs, "bwd").get(src, []))
+
+
+def ref_q10(index, d1, rows, d2, via=None):
+    fwd_masks, _ = ref_forward_record_masks(index, d1, rows)
+    if via is None:
+        candidates = [
+            d for d, m in fwd_masks.items()
+            if d != d1 and m.any() and index.path_exists(d2, d)
+        ]
+        if not candidates:
+            return np.zeros(0, dtype=np.int64)
+        via = candidates[-1]
+    if via not in fwd_masks or not fwd_masks[via].any():
+        return np.zeros(0, dtype=np.int64)
+    back, _ = ref_backward_record_masks(index, via, fwd_masks[via])
+    if d2 not in back:
+        return np.zeros(0, dtype=np.int64)
+    return np.flatnonzero(back[d2])
+
+
+def ref_q11(index, d2, rows, d1, d3):
+    back, _ = ref_backward_record_masks(index, d2, rows)
+    if d1 not in back or not back[d1].any():
+        return np.zeros(0, dtype=np.int64)
+    fwd, _ = ref_forward_record_masks(index, d1, back[d1])
+    if d3 not in fwd:
+        return np.zeros(0, dtype=np.int64)
+    return np.flatnonzero(fwd[d3])
+
+
+# ===========================================================================
+# Randomized pipelines over every op category
+# ===========================================================================
+def _random_pipeline(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(15, 50))
+    K = max(3, n // 4)
+    idx = ProvenanceIndex(f"parity{seed}")
+    t = Table.from_columns({
+        "k": rng.integers(0, K, n).astype(np.float32),
+        "x": rng.normal(size=n).astype(np.float32),
+        "g": rng.integers(0, 4, n).astype(np.float32),
+        "y": rng.normal(size=n).astype(np.float32),
+    })
+    cur = track(t, idx, "src")
+    n_ops = int(rng.integers(3, 8))
+    for i in range(n_ops):
+        code = int(rng.integers(0, 9))
+        cols = cur.table.columns
+        if code == 0:
+            mask = np.asarray(cur.table.col("x")) > float(rng.normal(-1.0, 0.4))
+            if not mask.any():
+                mask[0] = True
+            cur = cur.filter_rows(mask)
+        elif code == 1:
+            cur = cur.value_transform("x", "scale", factor=2.0)
+        elif code == 2:
+            cur = cur.oversample(frac=0.3, seed=int(rng.integers(1 << 20)))
+        elif code == 3:
+            cur = cur.undersample(frac=0.7, seed=int(rng.integers(1 << 20)))
+        elif code == 4 and "g" in cols:
+            cur = cur.onehot("g", n_values=4)
+        elif code == 5:
+            # order-changing vreduce: keep k/x/g, shuffle, maybe drop y
+            keep = [c for c in cols if c in ("k", "x", "g")]
+            extra = [c for c in cols if c not in ("k", "x", "g")]
+            rng.shuffle(keep)
+            keep += list(rng.choice(extra, size=len(extra) // 2, replace=False)) \
+                if extra else []
+            cur = cur.select_columns(keep)
+        elif code == 6:
+            r = Table.from_columns({
+                "k": np.arange(K, dtype=np.float32),
+                f"z{i}": rng.normal(size=K).astype(np.float32),
+            })
+            how = str(rng.choice(["inner", "outer"]))
+            cur = cur.join(track(r, idx), on="k", how=how)
+        elif code == 7:
+            m = int(rng.integers(3, 9))
+            r = Table.from_columns({
+                "x": rng.normal(size=m).astype(np.float32),
+                f"w{i}": rng.normal(size=m).astype(np.float32),
+            })
+            cur = cur.append(track(r, idx))
+        elif code == 8 and "y" in cols:
+            cur = cur.drop_columns(["y"])
+        if cur.table.n_rows == 0:
+            break
+    cur.mark_sink()
+    return idx, cur.dataset_id, rng
+
+
+def _row_probes(rng, n):
+    probes = [[], [int(rng.integers(0, n))],
+              sorted(set(rng.integers(0, n, size=min(5, n)).tolist()))]
+    return probes
+
+
+SEEDS = list(range(10))
+
+
+# ===========================================================================
+# Record-level parity (Q1/Q2/Q5/Q6)
+# ===========================================================================
+@pytest.mark.parametrize("seed", SEEDS)
+def test_q1_q2_parity_all_datasets(seed):
+    idx, sink, rng = _random_pipeline(seed)
+    n_src = idx.datasets["src"].n_rows
+    for dst in idx.datasets:
+        for rows in _row_probes(rng, n_src):
+            want = ref_q1(idx, "src", rows, dst)
+            got = Q.q1_forward(idx, "src", rows, dst)
+            np.testing.assert_array_equal(got, want)
+    n_sink = idx.datasets[sink].n_rows
+    for src in idx.datasets:
+        for rows in _row_probes(rng, n_sink):
+            want = ref_q2(idx, sink, rows, src)
+            got = Q.q2_backward(idx, sink, rows, src)
+            np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("seed", SEEDS[:5])
+def test_q5_q6_hops_parity(seed):
+    idx, sink, rng = _random_pipeline(seed)
+    n_src = idx.datasets["src"].n_rows
+    rows = [0, n_src - 1]
+    recs, hops = Q.q5_forward_how(idx, "src", rows, sink)
+    _, ref_hops = ref_forward_record_masks(idx, "src", rows, collect_hops=True)
+    assert [(h.op_id, h.src_dataset, h.dst_dataset, h.n_records) for h in hops] \
+        == ref_hops
+    np.testing.assert_array_equal(recs, ref_q1(idx, "src", rows, sink))
+    n_sink = idx.datasets[sink].n_rows
+    rows = [0, n_sink - 1]
+    recs, hops = Q.q6_backward_how(idx, sink, rows, "src")
+    _, ref_hops = ref_backward_record_masks(idx, sink, rows, collect_hops=True)
+    assert [(h.op_id, h.src_dataset, h.dst_dataset, h.n_records) for h in hops] \
+        == ref_hops
+    np.testing.assert_array_equal(recs, ref_q2(idx, sink, rows, "src"))
+
+
+# ===========================================================================
+# Attribute-level parity (Q3/Q4/Q7/Q8)
+# ===========================================================================
+@pytest.mark.parametrize("seed", SEEDS)
+def test_q3_q4_parity(seed):
+    idx, sink, rng = _random_pipeline(seed)
+    n_src, c_src = idx.datasets["src"].n_rows, idx.datasets["src"].n_cols
+    n_sink, c_sink = idx.datasets[sink].n_rows, idx.datasets[sink].n_cols
+    for trial in range(4):
+        rows = sorted(set(rng.integers(0, n_src, size=3).tolist()))
+        attrs = sorted(set(rng.integers(0, c_src, size=2).tolist()))
+        want = ref_q3(idx, "src", rows, attrs, sink)
+        got = Q.q3_forward_attr(idx, "src", rows, attrs, sink)
+        np.testing.assert_array_equal(got, want)
+        rows = sorted(set(rng.integers(0, n_sink, size=3).tolist()))
+        attrs = sorted(set(rng.integers(0, c_sink, size=2).tolist()))
+        want = ref_q4(idx, sink, rows, attrs, "src")
+        got = Q.q4_backward_attr(idx, sink, rows, attrs, "src")
+        np.testing.assert_array_equal(got, want)
+    # empty masks answer empty
+    assert Q.q3_forward_attr(idx, "src", [], [0], sink).shape == (0, 2)
+    assert Q.q4_backward_attr(idx, sink, [0], [], "src").shape == (0, 2)
+
+
+@pytest.mark.parametrize("seed", SEEDS[:5])
+def test_q7_q8_cells_match_q3_q4(seed):
+    idx, sink, rng = _random_pipeline(seed)
+    n_src, c_src = idx.datasets["src"].n_rows, idx.datasets["src"].n_cols
+    rows, attrs = [0, n_src - 1], list(range(min(2, c_src)))
+    cells, hops = Q.q7_forward_attr_how(idx, "src", rows, attrs, sink)
+    np.testing.assert_array_equal(cells, ref_q3(idx, "src", rows, attrs, sink))
+    n_sink, c_sink = idx.datasets[sink].n_rows, idx.datasets[sink].n_cols
+    rows, attrs = [0, n_sink - 1], list(range(min(2, c_sink)))
+    cells, hops = Q.q8_backward_attr_how(idx, sink, rows, attrs, "src")
+    np.testing.assert_array_equal(cells, ref_q4(idx, sink, rows, attrs, "src"))
+
+
+# ===========================================================================
+# Q10/Q11 parity
+# ===========================================================================
+@pytest.mark.parametrize("seed", SEEDS)
+def test_q10_q11_parity(seed):
+    idx, sink, rng = _random_pipeline(seed)
+    others = [d for d in idx.datasets if d not in ("src", sink)]
+    n_src = idx.datasets["src"].n_rows
+    for d2 in others[:3]:
+        for rows in _row_probes(rng, n_src):
+            want = ref_q10(idx, "src", rows, d2)
+            got = Q.q10_co_contributory(idx, "src", rows, d2)
+            np.testing.assert_array_equal(got, want)
+    mids = [op.output_id for op in idx.ops]
+    for mid in mids[:3]:
+        n_mid = idx.datasets[mid].n_rows
+        if n_mid == 0:
+            continue
+        rows = [int(rng.integers(0, n_mid))]
+        want = ref_q11(idx, mid, rows, "src", sink)
+        got = Q.q11_co_dependency(idx, mid, rows, "src", sink)
+        np.testing.assert_array_equal(got, want)
+
+
+# ===========================================================================
+# Batch probes == singles, in one pass
+# ===========================================================================
+@pytest.mark.parametrize("seed", SEEDS)
+def test_batch_matches_singles(seed):
+    idx, sink, rng = _random_pipeline(seed)
+    n_src = idx.datasets["src"].n_rows
+    n_sink = idx.datasets[sink].n_rows
+    probes = [_row_probes(rng, n_src)[i] for i in range(3)] + [[], [0]]
+    singles = [Q.q1_forward(idx, "src", p, sink) for p in probes]
+    batch = Q.q1_forward(idx, "src", probes, sink)
+    assert isinstance(batch, list) and len(batch) == len(probes)
+    for s, b in zip(singles, batch):
+        np.testing.assert_array_equal(s, b)
+    probes = [_row_probes(rng, n_sink)[i] for i in range(3)] + [[]]
+    singles = [Q.q2_backward(idx, sink, p, "src") for p in probes]
+    for s, b in zip(singles, Q.q2_backward(idx, sink, probes, "src")):
+        np.testing.assert_array_equal(s, b)
+    # attr-level batch, including a broadcast attr set
+    c_src = idx.datasets["src"].n_cols
+    rprobes = [[0], [], list(range(min(3, n_src)))]
+    aprobes = [[0], [c_src - 1], list(range(min(2, c_src)))]
+    singles = [Q.q3_forward_attr(idx, "src", r, a, sink)
+               for r, a in zip(rprobes, aprobes)]
+    for s, b in zip(singles, Q.q3_forward_attr(idx, "src", rprobes, aprobes, sink)):
+        np.testing.assert_array_equal(s, b)
+    singles = [Q.q3_forward_attr(idx, "src", r, [0], sink) for r in rprobes]
+    for s, b in zip(singles, Q.q3_forward_attr(idx, "src", rprobes, [0], sink)):
+        np.testing.assert_array_equal(s, b)
+    n_sink_cols = idx.datasets[sink].n_cols
+    rprobes = [[0], list(range(min(4, n_sink)))]
+    aprobes = [[0], list(range(min(2, n_sink_cols)))]
+    singles = [Q.q4_backward_attr(idx, sink, r, a, "src")
+               for r, a in zip(rprobes, aprobes)]
+    for s, b in zip(singles, Q.q4_backward_attr(idx, sink, rprobes, aprobes, "src")):
+        np.testing.assert_array_equal(s, b)
+    # q11 batch
+    mid = idx.ops[0].output_id
+    n_mid = idx.datasets[mid].n_rows
+    probes = [[0], [], [min(1, n_mid - 1)]]
+    singles = [Q.q11_co_dependency(idx, mid, p, "src", sink) for p in probes]
+    for s, b in zip(singles, Q.q11_co_dependency(idx, mid, probes, "src", sink)):
+        np.testing.assert_array_equal(s, b)
+
+
+# ===========================================================================
+# Hop-cache parity
+# ===========================================================================
+@pytest.mark.parametrize("backend", ["csr", "bitplane"])
+@pytest.mark.parametrize("seed", SEEDS)
+def test_hopcache_parity(seed, backend):
+    idx, sink, rng = _random_pipeline(seed)
+    if backend == "csr":
+        pytest.importorskip("scipy")
+    ci = ComposedIndex(idx, memory_budget_bytes=32 << 20, backend=backend)
+    n_src = idx.datasets["src"].n_rows
+    n_sink = idx.datasets[sink].n_rows
+    for rows in _row_probes(rng, n_src):
+        np.testing.assert_array_equal(
+            ci.q1_forward("src", rows, sink), ref_q1(idx, "src", rows, sink))
+    for rows in _row_probes(rng, n_sink):
+        np.testing.assert_array_equal(
+            ci.q2_backward(sink, rows, "src"), ref_q2(idx, sink, rows, "src"))
+    # batched probe, one composed plane
+    probes = [_row_probes(rng, n_src)[i] for i in range(3)]
+    batch = ci.q1_forward("src", probes, sink)
+    for p, b in zip(probes, batch):
+        np.testing.assert_array_equal(b, ref_q1(idx, "src", p, sink))
+    assert ci.stats()["hits"] > 0
+    # intermediate datasets along the chain probe from the prefix cache
+    for op in idx.ops[:3]:
+        mid = op.output_id
+        if not idx.path_exists("src", mid):
+            continue
+        rows = [0]
+        np.testing.assert_array_equal(
+            ci.q1_forward("src", rows, mid), ref_q1(idx, "src", rows, mid))
+
+
+@pytest.mark.parametrize("seed", SEEDS[:5])
+def test_hopcache_q10_q11_parity(seed):
+    idx, sink, rng = _random_pipeline(seed)
+    ci = ComposedIndex(idx)
+    n_src = idx.datasets["src"].n_rows
+    others = [d for d in idx.datasets
+              if d not in ("src", sink) and not idx.path_exists("src", d)
+              and idx.path_exists(d, sink)]
+    for d2 in others[:2]:
+        want = ref_q10(idx, "src", [0], d2, via=sink)
+        got = ci.q10_co_contributory("src", [0], d2, via=sink)
+        np.testing.assert_array_equal(got, want)
+    mid = idx.ops[0].output_id
+    if idx.path_exists("src", mid) and idx.path_exists(mid, sink):
+        n_mid = idx.datasets[mid].n_rows
+        rows = [n_mid - 1]
+        np.testing.assert_array_equal(
+            ci.q11_co_dependency(mid, rows, "src", sink),
+            ref_q11(idx, mid, rows, "src", sink))
+
+
+def test_hopcache_unreachable_pair_answers_empty():
+    """No dataflow path: probes answer empty like the walk engine; only the
+    relation-materializing API raises."""
+    idx = ProvenanceIndex("unreach")
+    a = track(Table.from_columns({"x": np.zeros(4, np.float32)}), idx, "A")
+    b = track(Table.from_columns({"y": np.zeros(3, np.float32)}), idx, "B")
+    a.filter_rows(np.array([True, False, True, True])).mark_sink()
+    sink = idx.sinks()[0]
+    ci = ComposedIndex(idx)
+    np.testing.assert_array_equal(ci.q1_forward("B", [0], sink),
+                                  ref_q1(idx, "B", [0], sink))
+    np.testing.assert_array_equal(ci.q2_backward(sink, [0], "B"),
+                                  ref_q2(idx, sink, [0], "B"))
+    for got in ci.q1_forward("B", [[0], [1]], sink):
+        assert got.size == 0
+    with pytest.raises(KeyError):
+        ci.relation("B", sink)
+
+
+def test_hopcache_eviction_and_invalidation():
+    idx, sink, rng = _random_pipeline(0)
+    tiny = ComposedIndex(idx, memory_budget_bytes=256)  # forces eviction
+    n_src = idx.datasets["src"].n_rows
+    for rows in ([0], [1], [2]):
+        np.testing.assert_array_equal(
+            tiny.q1_forward("src", rows, sink), ref_q1(idx, "src", rows, sink))
+    assert tiny.stats()["bytes"] <= 256 or tiny.stats()["entries"] <= 1
+    # recording a new op invalidates cached relations
+    ci = ComposedIndex(idx)
+    before = ci.q1_forward("src", [0], sink)
+    assert ci.stats()["entries"] > 0
+    tracked = track(
+        Table.from_columns({"x": np.zeros(3, np.float32)}), idx, "late_src")
+    assert idx.version == len(idx.ops)
+    ci._sync()  # version unchanged by add_source; force-check is a no-op
+    assert ci.stats()["entries"] > 0
+
+
+# ===========================================================================
+# -1 sentinel edges: outer join dangles + append block structure
+# ===========================================================================
+def test_sentinel_outer_join_and_append_parity():
+    idx = ProvenanceIndex("sentinel")
+    l = Table.from_columns({"k": [1., 2, 3, 4], "a": [0., 1, 2, 3]})
+    r = Table.from_columns({"k": [2., 4, 9], "b": [1., 2, 3]})
+    e = Table.from_columns({"a": [9., 8], "c": [7., 6]})
+    tl, tr, te = track(l, idx, "L"), track(r, idx, "R"), track(e, idx, "E")
+    tj = tl.join(tr, on="k", how="outer")
+    ta = tj.append(te).mark_sink()
+    sink = ta.dataset_id
+    for src in ("L", "R", "E"):
+        n = idx.datasets[src].n_rows
+        for rows in ([], [0], list(range(n))):
+            np.testing.assert_array_equal(
+                Q.q1_forward(idx, src, rows, sink), ref_q1(idx, src, rows, sink))
+    n_sink = idx.datasets[sink].n_rows
+    for src in ("L", "R", "E"):
+        for rows in ([], [0], list(range(n_sink))):
+            np.testing.assert_array_equal(
+                Q.q2_backward(idx, sink, rows, src), ref_q2(idx, sink, rows, src))
+    # attr-level through the sentinel ops
+    for src in ("L", "R", "E"):
+        c = idx.datasets[src].n_cols
+        got = Q.q4_backward_attr(idx, sink, list(range(n_sink)),
+                                 list(range(idx.datasets[sink].n_cols)), src)
+        want = ref_q4(idx, sink, list(range(n_sink)),
+                      list(range(idx.datasets[sink].n_cols)), src)
+        np.testing.assert_array_equal(got, want)
+    # hop-cache through sentinels
+    ci = ComposedIndex(idx)
+    for src in ("L", "R", "E"):
+        np.testing.assert_array_equal(
+            ci.q2_backward(sink, [0, n_sink - 1], src),
+            ref_q2(idx, sink, [0, n_sink - 1], src))
+
+
+# ===========================================================================
+# Attr-map properties: vectorized == naive; round-trips lose nothing
+# ===========================================================================
+def _random_amaps(rng):
+    amaps = []
+    n = int(rng.integers(2, 12))
+    amaps.append((AttrMap(kind="identity"), n, int(rng.integers(2, 12))))
+    bits = rng.random(n) < 0.6
+    bset = sc.Bitset.from_bits(bits)
+    amaps.append((AttrMap(kind="vreduce", bitset=bset), n, int(bits.sum())))
+    k = int(bits.sum())
+    if k:
+        perm = rng.permutation(n)[:k].astype(np.int32)
+        amaps.append((AttrMap(kind="vreduce", bitset=bset, perm=perm), n, k))
+    m = int(rng.integers(1, 8))
+    n_new = int(rng.integers(1, 5))
+    eng = (rng.random(m) < 0.5)
+    vbits = np.concatenate([eng, np.ones(n_new, dtype=bool)])
+    amaps.append((AttrMap(kind="vaugment", bitset=sc.Bitset.from_bits(vbits), m=m),
+                  m, m + n_new))
+    n_out = int(rng.integers(2, 12))
+    jbits = rng.random(n_out) < 0.5
+    n_in = int(jbits.sum()) + int(rng.integers(0, 2))  # exercise select clipping
+    amaps.append((AttrMap(kind="join", bitset=sc.Bitset.from_bits(jbits)),
+                  max(n_in, 1), n_out))
+    jperm = np.where(rng.random(n_out) < 0.5,
+                     rng.integers(0, max(n_in, 1), size=n_out), -1).astype(np.int32)
+    amaps.append((AttrMap(kind="join", bitset=sc.Bitset.from_bits(jbits), perm=jperm),
+                  max(n_in, 1), n_out))
+    return amaps
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_attr_maps_vectorized_equals_naive(seed):
+    rng = np.random.default_rng(seed)
+    for amap, n_in, n_out in _random_amaps(rng):
+        for _ in range(3):
+            attrs = rng.random(n_in) < 0.4
+            np.testing.assert_array_equal(
+                Q._attrs_forward(amap, attrs, n_out),
+                ref_attrs_forward(amap, attrs, n_out), err_msg=amap.kind)
+            attrs = rng.random(n_out) < 0.4
+            np.testing.assert_array_equal(
+                Q._attrs_backward(amap, attrs, n_in),
+                ref_attrs_backward(amap, attrs, n_in), err_msg=amap.kind)
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_attr_roundtrip_never_loses_contributor(seed):
+    """Forward-then-backward over any AttrMap kind keeps every contributing
+    attribute; backward-then-forward keeps every derived attribute."""
+    rng = np.random.default_rng(1000 + seed)
+    for amap, n_in, n_out in _random_amaps(rng):
+        for a in range(n_in):
+            one = np.zeros(n_in, dtype=bool)
+            one[a] = True
+            fwd = Q._attrs_forward(amap, one, n_out)
+            if fwd.any():
+                back = Q._attrs_backward(amap, fwd, n_in)
+                assert back[a], (amap.kind, a)
+        for o in range(n_out):
+            one = np.zeros(n_out, dtype=bool)
+            one[o] = True
+            back = Q._attrs_backward(amap, one, n_in)
+            if back.any():
+                fwd = Q._attrs_forward(amap, back, n_out)
+                assert fwd[o], (amap.kind, o)
