@@ -16,4 +16,7 @@ test-fast:
 bench-query:
 	env PYTHONPATH=src $(PY) benchmarks/bench_query.py
 
-ci: test
+# mirrors .github/workflows/ci.yml
+ci:
+	$(PY) -m compileall -q src
+	$(MAKE) test

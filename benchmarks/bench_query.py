@@ -1,16 +1,24 @@
 """Fig 4 + Fig 5: query latency Q1-Q11 on the Census pipeline, plus the
 batched multi-hop comparison (per-hop walk vs batch walk vs composed
-hop-cache) on a deep chain.
+hop-cache) on a deep chain, plus the FUSED-BATCH scenario (N mixed
+Q1/Q2/Q4 plans submitted to one ``QuerySession.run_many`` vs the legacy
+per-query loop).
 
 Fig 4: all queries against MATERIALIZED endpoints (the default policy keeps
 source + sink).  Fig 5: the same queries when the answer must RETURN values
 from a NON-materialized intermediate -> per-record recomputation (§III-E).
 
 Census is extended with a join (as the paper does) so Q10/Q11 are defined.
+
+Run as a script this also writes ``BENCH_query.json`` at the repo root —
+the perf-trajectory artifact.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
+import warnings
 
 import numpy as np
 
@@ -21,6 +29,7 @@ from repro.core.recompute import recompute_rows
 from repro.dataprep.table import Table
 from repro.dataprep.tracked import track
 from repro.dataprep.usecases import make_census
+from repro.provenance import QuerySession, prov
 
 
 def build_census_with_join(seed=0):
@@ -109,7 +118,9 @@ def run(quick: bool = False):
     print("== Fig 5: query latency with recomputation (ms) ==")
     print("  " + "  ".join(f"{k}={v:.2f}" for k, v in fig5.items()))
     batch = run_batch_vs_walk(quick=quick)
-    return {"table": "Fig4/5", "fig4_ms": fig4, "fig5_ms": fig5, "batch": batch}
+    fused = run_fused_batch(quick=quick)
+    return {"table": "Fig4/5", "fig4_ms": fig4, "fig5_ms": fig5, "batch": batch,
+            "fused_batch": fused}
 
 
 # ---------------------------------------------------------------------------
@@ -154,25 +165,39 @@ def run_batch_vs_walk(quick: bool = False, n_probes: int = 64):
                 for _ in range(8 if quick else n_probes)]
     reps = 1 if quick else 3
 
-    # warm the CSR halves so every contender measures probe cost, not build
-    Q.q1_forward(idx, src, probes_f[0], sink)
-    Q.q2_backward(idx, sink, probes_b[0], src)
+    # strategy-PINNED session so each contender measures its own engine (the
+    # adaptive planner would otherwise route batches through the hop-cache)
+    walk_sess = QuerySession(idx, ComposedIndex(idx), use_hopcache=False)
 
-    walk_f = _time_ms(lambda: [Q.q1_forward(idx, src, p, sink) for p in probes_f], reps)
-    batch_f = _time_ms(lambda: Q.q1_forward(idx, src, probes_f, sink), reps)
+    def q1_walk(p, batched=False):
+        qb = prov(idx).source(src)
+        qb = qb.rows_batch(p) if batched else qb.rows(p)
+        return walk_sess.run(qb.forward().to(sink).plan())
+
+    def q2_walk(p, batched=False):
+        qb = prov(idx).source(sink)
+        qb = qb.rows_batch(p) if batched else qb.rows(p)
+        return walk_sess.run(qb.backward().to(src).plan())
+
+    # warm the CSR halves so every contender measures probe cost, not build
+    q1_walk(probes_f[0])
+    q2_walk(probes_b[0])
+
+    walk_f = _time_ms(lambda: [q1_walk(p) for p in probes_f], reps)
+    batch_f = _time_ms(lambda: q1_walk(probes_f, batched=True), reps)
     ci = ComposedIndex(idx, memory_budget_bytes=256 << 20)
     t0 = time.perf_counter()
     ci.q1_forward(src, probes_f[:1], sink)            # composes the relation
     compose_ms = (time.perf_counter() - t0) * 1e3
     cache_f = _time_ms(lambda: ci.q1_forward(src, probes_f, sink), reps)
 
-    walk_b = _time_ms(lambda: [Q.q2_backward(idx, sink, p, src) for p in probes_b], reps)
-    batch_b = _time_ms(lambda: Q.q2_backward(idx, sink, probes_b, src), reps)
+    walk_b = _time_ms(lambda: [q2_walk(p) for p in probes_b], reps)
+    batch_b = _time_ms(lambda: q2_walk(probes_b, batched=True), reps)
     cache_b = _time_ms(lambda: ci.q2_backward(sink, probes_b, src), reps)
 
     # sanity: all three contenders answer identically
-    walk = [Q.q1_forward(idx, src, p, sink) for p in probes_f]
-    for a, b, c in zip(walk, Q.q1_forward(idx, src, probes_f, sink),
+    walk = [q1_walk(p) for p in probes_f]
+    for a, b, c in zip(walk, q1_walk(probes_f, batched=True),
                        ci.q1_forward(src, probes_f, sink)):
         assert (a == b).all() and (a == c).all()
 
@@ -199,5 +224,103 @@ def run_batch_vs_walk(quick: bool = False, n_probes: int = 64):
     return out
 
 
+# ---------------------------------------------------------------------------
+# Fused batch: N mixed Q1/Q2/Q4 plans, session.run_many vs legacy loop
+# ---------------------------------------------------------------------------
+def run_fused_batch(quick: bool = False, n_plans: int = 60):
+    """The query-plan API's headline scenario: a mixed workload of Q1, Q2
+    and Q4 plans over the same deep chain.  The legacy loop answers them one
+    free-function call at a time; ``run_many`` fuses the plans sharing a
+    (kind, src, dst) key into one packed pass each — Q1s become one
+    composed-relation probe, Q2s another, Q4s one batched bitplane walk."""
+    idx, sink = build_deep_chain(n=1000 if quick else 4000,
+                                 n_ops=10 if quick else 14)
+    src = "chain_src"
+    n_src = idx.datasets[src].n_rows
+    n_sink = idx.datasets[sink].n_rows
+    c_sink = idx.datasets[sink].n_cols
+    rng = np.random.default_rng(11)
+    n_plans = 12 if quick else n_plans
+    reps = 1 if quick else 3
+
+    specs = []
+    for i in range(n_plans):
+        kind = i % 3
+        if kind == 0:       # Q1 forward record
+            p = sorted(rng.choice(n_src, size=4, replace=False).tolist())
+            specs.append(("q1", p, None))
+        elif kind == 1:     # Q2 backward record
+            p = sorted(rng.choice(n_sink, size=4, replace=False).tolist())
+            specs.append(("q2", p, None))
+        else:               # Q4 backward attr (cells)
+            p = sorted(rng.choice(n_sink, size=2, replace=False).tolist())
+            a = sorted(rng.choice(c_sink, size=2, replace=False).tolist())
+            specs.append(("q4", p, a))
+
+    def make_plans():
+        plans = []
+        for kind, p, a in specs:
+            if kind == "q1":
+                plans.append(prov(idx).source(src).rows(p).forward().to(sink).plan())
+            elif kind == "q2":
+                plans.append(prov(idx).source(sink).rows(p).backward().to(src).plan())
+            else:
+                plans.append(prov(idx).source(sink).rows(p).attrs(a)
+                             .backward().to(src).plan())
+        return plans
+
+    def legacy_loop():
+        out = []
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            for kind, p, a in specs:
+                if kind == "q1":
+                    out.append(Q.q1_forward(idx, src, p, sink))
+                elif kind == "q2":
+                    out.append(Q.q2_backward(idx, sink, p, src))
+                else:
+                    out.append(Q.q4_backward_attr(idx, sink, p, a, src))
+        return out
+
+    # warm the CSR halves + tensors so both contenders measure query cost
+    legacy_loop()
+    legacy_ms = _time_ms(legacy_loop, reps)
+
+    session = QuerySession(idx, ComposedIndex(idx, memory_budget_bytes=256 << 20))
+    plans = make_plans()
+    t0 = time.perf_counter()
+    fused_first = session.run_many(plans)     # includes cold relation compose
+    fused_cold_ms = (time.perf_counter() - t0) * 1e3
+    fused_ms = _time_ms(lambda: session.run_many(make_plans()), reps)
+
+    # sanity: fused results == the legacy loop's, element for element
+    for a, b in zip(legacy_loop(), fused_first):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    out = {
+        "n_plans": n_plans, "n_ops": len(idx.ops),
+        "legacy_loop_ms": legacy_ms,
+        "session_run_many_ms": fused_ms,
+        "session_run_many_cold_ms": fused_cold_ms,
+        "speedup_fused": legacy_ms / max(fused_ms, 1e-9),
+        "speedup_fused_cold": legacy_ms / max(fused_cold_ms, 1e-9),
+        "session_stats": session.stats(),
+    }
+    print(f"\n== fused batch: {n_plans} mixed Q1/Q2/Q4 plans "
+          f"({len(idx.ops)}-op chain) ==")
+    print(f"  legacy per-query loop {legacy_ms:8.2f} ms | session.run_many "
+          f"{fused_ms:8.2f} ms ({out['speedup_fused']:.1f}x; cold "
+          f"{fused_cold_ms:.2f} ms, {out['speedup_fused_cold']:.1f}x)")
+    return out
+
+
+def _write_trajectory(results: dict) -> None:
+    path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        os.pardir, "BENCH_query.json")
+    with open(os.path.abspath(path), "w") as f:
+        json.dump(results, f, indent=1, default=float)
+    print(f"wrote {os.path.abspath(path)}")
+
+
 if __name__ == "__main__":
-    run()
+    _write_trajectory(run())

@@ -9,7 +9,8 @@ queries; the paper instead CONTRACTS the per-op tensors into one
 src -> sink relation (Einstein summation).  We run it three ways and show
 they agree:
 
-  1. hop-by-hop Q2 per output record (the slow reference);
+  1. one backward record plan through the unified query API
+     (``prov(idx)...backward()``, the walking reference);
   2. composed relation via boolean-semiring matmul (matrix-chain-ordered);
   3. the MESH-SHARDED audit (rows of the relation sharded over 'data';
      one psum crosses the mesh) — the pod-scale path.
@@ -20,8 +21,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import query as Q
 from repro.core.compose import compose_chain, dataset_lineage
+from repro.provenance import prov
 from repro.core.distributed import lineage_audit_sharded, shard_relation
 from repro.core.pipeline import ProvenanceIndex
 from repro.dataprep.table import Table
@@ -53,10 +54,10 @@ print(f"pipeline: {N} applicants -> {n_out} selected+augmented records "
 
 gender = src.col("gender").astype(int)
 
-# --- 1. hop-by-hop reference --------------------------------------------------
+# --- 1. hop-by-hop reference (one lazy backward plan) --------------------------
 t0 = time.perf_counter()
-back, _ = Q.backward_record_masks(idx, sink, np.arange(n_out))
-contributors = np.flatnonzero(back["applicants"])
+contributors = (prov(idx).source(sink).rows(np.arange(n_out))
+                .backward().to("applicants").run())
 ref_counts = np.bincount(gender[contributors], minlength=2)
 t_ref = time.perf_counter() - t0
 

@@ -3,14 +3,18 @@
     PYTHONPATH=src python examples/quickstart.py
 
 Builds the join of D^l and D^r, tracks a small preparation pipeline through
-the decorator front-end, and answers Q1/Q2/Q4/Q9 against the index.
+the decorator front-end, and answers the Table-VII queries through the
+unified lazy query API (``repro.provenance``): a fluent builder compiles
+each query to a ``QueryPlan``, and the index's shared ``QuerySession``
+picks the physical strategy (vectorized walk vs composed hop-cache probe)
+and fuses batches that share endpoints into one pass.
 """
 import numpy as np
 
-from repro.core import query as Q
 from repro.core.pipeline import ProvenanceIndex
 from repro.dataprep.table import Table
 from repro.dataprep.tracked import track
+from repro.provenance import prov
 
 # --- the paper's datasets (Tables II and III) -------------------------------
 dl = Table.from_columns({
@@ -28,46 +32,60 @@ tr = track(dr, index, "D_r")
 tj = tl.join(tr, on="ID", how="inner")          # Table IV
 tf = tj.filter_rows(np.asarray(tj.table.col("Gender")) > 0.5)
 to = tf.onehot("Gender", n_values=2).mark_sink()
+sink = to.dataset_id
 
 print("join result rows:", tj.table.n_rows, "| final rows:", to.table.n_rows)
 print("provenance stats:", index.stats())
 
 # --- Q2: backward why-provenance ---------------------------------------------
 print("\nQ2  output record 0 derives from:")
-print("    D_l rows:", Q.q2_backward(index, to.dataset_id, [0], "D_l"))
-print("    D_r rows:", Q.q2_backward(index, to.dataset_id, [0], "D_r"))
+print("    D_l rows:", prov(index).source(sink).rows([0]).backward().to("D_l").run())
+print("    D_r rows:", prov(index).source(sink).rows([0]).backward().to("D_r").run())
 
 # --- Q1: forward — which outputs did D_l record 1 (ID=20) reach? -------------
 print("\nQ1  D_l record 1 reaches output rows:",
-      Q.q1_forward(index, "D_l", [1], to.dataset_id))
+      prov(index).source("D_l").rows([1]).forward().to(sink).run())
 print("Q1  D_l record 0 (ID=10, dangling) reaches:",
-      Q.q1_forward(index, "D_l", [0], to.dataset_id))
+      prov(index).source("D_l").rows([0]).forward().to(sink).run())
 
 # --- Q4: attribute-value backward --------------------------------------------
 gcol = to.table.columns.index("Gender=1")
-cells = Q.q4_backward_attr(index, to.dataset_id, [0], [gcol], "D_l")
+cells = prov(index).source(sink).rows([0]).attrs([gcol]).backward().to("D_l").run()
 print(f"\nQ4  cell (row 0, '{to.table.columns[gcol]}') derives from D_l cells:",
       [tuple(c) for c in cells], "(row, attr) =",
       [(int(r), dl.columns[int(a)]) for r, a in cells])
 
-# --- Q9: how-provenance (all transformations) ---------------------------------
+# --- Q6: how-provenance — the same backward trace, plus the per-op hops -------
+recs, hops = prov(index).source(sink).rows([0]).backward().to("D_l").how().run()
+print("\nQ6  row 0 <- D_l rows", recs.tolist(), "via",
+      " -> ".join(h.op_name for h in reversed(hops)))
+
+# --- Q9: all transformations ---------------------------------------------------
 print("\nQ9  transformations applied:",
-      [o["op"] for o in Q.q9_all_transformations(index, to.dataset_id)])
+      [o["op"] for o in prov(index).source(sink).transformations().run()])
 
 # --- dataset-level composition (einsum path) ----------------------------------
 from repro.core.compose import dataset_lineage
-rel = dataset_lineage(index, "D_l", to.dataset_id, use_pallas=False)
+rel = dataset_lineage(index, "D_l", sink, use_pallas=False)
 print("\nwhole-dataset lineage relation D_l -> sink (the einsum path):")
 print(rel.astype(int))
 
-# --- batch queries: many probe sets, one vectorized pass ----------------------
+# --- batch queries: one explicit .rows_batch, one vectorized pass --------------
 probes = [[0], [1], [2, 3]]
 print("\nbatched Q1 (one pass over the DAG, all probe sets at once):")
-for p, res in zip(probes, Q.q1_forward(index, "D_l", probes, to.dataset_id)):
+for p, res in zip(probes, prov(index).source("D_l").rows_batch(probes)
+                  .forward().to(sink).run()):
     print(f"    D_l rows {p} -> output rows {res.tolist()}")
 
-# --- the composed hop-cache: multi-hop queries as one probe -------------------
-ci = index.composed(memory_budget_bytes=16 << 20)   # LRU byte budget
-print("\nhop-cached Q2 (single probe of the composed D_l -> sink relation):")
-print("    output row 0 <-", ci.q2_backward(to.dataset_id, [0], "D_l").tolist())
-print("    hop-cache stats:", ci.stats())
+# --- run_many: mixed plans, fused by (source, target) into shared passes -------
+session = index.session()
+plans = [
+    prov(index).source("D_l").rows([0]).forward().to(sink).plan(),
+    prov(index).source("D_l").rows([1]).forward().to(sink).plan(),   # fuses w/ ^
+    prov(index).source(sink).rows([0]).backward().to("D_r").plan(),
+]
+res = session.run_many(plans)
+print("\nrun_many fused", session.stats()["planner"]["fused_plans"],
+      "plans into", session.stats()["planner"]["fused_groups"], "group(s):",
+      [r.tolist() for r in res])
+print("session stats:", session.stats())

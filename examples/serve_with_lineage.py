@@ -4,19 +4,19 @@
 
 Serves a small decoder LM (smoke-size gemma3 family: exercises the
 local:global interleave + ring caches on the decode path) over a batch of
-requests, then records the (response -> request) why-provenance with the
-same ProvTensor machinery and answers backward queries over it.
+requests.  The engine now records the (response -> request) why-provenance
+itself (``generate(..., record_provenance=True)``) and answers lineage
+through its shared ``QuerySession`` — per-request backward queries probe
+ONE composed relation instead of walking the serving op per request, and
+the same session serves forward (request -> responses) plans.
 """
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 from repro.configs.registry import get_smoke_config
-from repro.core.opcat import AttrMap, CaptureInfo, OpCategory
-from repro.core.pipeline import ProvenanceIndex
-from repro.core.query import q1_forward, q2_backward
-from repro.dataprep.table import Table
 from repro.models.registry import get_model
+from repro.provenance import prov
 from repro.serve.engine import ServeEngine
 
 cfg = get_smoke_config("gemma3-1b")
@@ -28,34 +28,29 @@ rng = np.random.default_rng(1)
 prompts = rng.integers(1, cfg.vocab, (B, SP)).astype(np.int32)
 
 engine = ServeEngine(cfg, params, max_seq=SP + NEW, dtype=jnp.float32)
+# first session() call configures the planner: compose+cache the relation
+# as soon as a probe batch has >= 2 elements (serving batches are small here)
+engine.prov.session(hopcache_min_batch=2)
 result = engine.generate(prompts, n_new=NEW,
-                         request_ids=np.array([101, 102, 103, 104]))
+                         request_ids=np.array([101, 102, 103, 104]),
+                         record_provenance=True)
 print("generated tokens:\n", result.tokens)
+print("recorded:", result.request_dataset, "->", result.response_dataset)
 
-# --- capture serving provenance: one response row per request row -------------
-idx = ProvenanceIndex("serving")
-req_table = Table.from_columns({
-    "request_id": result.request_ids.astype(np.float32),
-    "prompt_len": np.full(B, SP, np.float32),
-})
-idx.add_source("requests", req_table)
-resp_table = Table.from_columns({
-    "request_id": result.request_ids.astype(np.float32),
-    "n_tokens": np.full(B, NEW, np.float32),
-})
-idx.record(
-    ["requests"], "responses", resp_table,
-    CaptureInfo(op_name="generate", category=OpCategory.HAUGMENT,
-                contextual=False, n_out=B, n_in=[B],
-                src_rows=np.arange(B, dtype=np.int32),
-                attr_maps=[AttrMap(kind="identity")],
-                params={"n_new": NEW}),
-    keep_output=True,
-)
-
+# --- per-request lineage through the shared session ----------------------------
 print("\nQ2: response row 2 derives from request row:",
-      q2_backward(idx, "responses", [2], "requests"),
+      engine.response_lineage(result, rows=[2]),
       "(request_id", int(result.request_ids[2]), ")")
+
+# batched per-request lineage: every response row traced in ONE fused probe
+per_request = engine.response_lineage_batch(result, [[i] for i in range(B)])
+print("Q2 batch: response row -> request row:",
+      {i: r.tolist() for i, r in enumerate(per_request)})
+
+# forward plans run through the same session/composed relations
 print("Q1: request row 0 produced response rows:",
-      q1_forward(idx, "requests", [0], "responses"))
-print("\nprovenance bytes for the serving path:", idx.prov_nbytes())
+      prov(engine.prov).source(result.request_dataset).rows([0])
+      .forward().to(result.response_dataset).run(engine.session))
+
+print("\nsession stats (shared composed relations):", engine.session.stats())
+print("provenance bytes for the serving path:", engine.prov.prov_nbytes())

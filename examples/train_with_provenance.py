@@ -12,7 +12,8 @@ What it demonstrates (the paper's technique as a training-framework feature):
   3. DURING training, lineage queries answer development-time questions:
      'which raw documents fed the worst-loss batch?' (Q2 backward) and
      'which batches did a flagged document reach?' (Q1 forward) — the
-     in-memory, query-while-developing use case the paper argues for;
+     in-memory, query-while-developing use case the paper argues for
+     (both route through the unified repro.provenance query API);
   4. a consent audit over the einsum-composed relation (paper §IV).
 """
 import argparse

@@ -14,21 +14,26 @@ Design points:
   composes packed uint32 relation bitplanes via :func:`compose_pair` (the
   :mod:`repro.kernels` bitmatmul — the Pallas path on TPU), and probes with
   :func:`bitplane_or_reduce` / ``kernels.ops.bitplane_probe``.
-* **Lazy + incremental** — ``relation(src, dst)`` finds the longest cached
-  prefix ``relation(src, mid)`` along the producer path and extends it hop
-  by hop, caching every prefix for later queries to further datasets.
+* **Multi-path exact** — ``relation(src, dst)`` accumulates over the op DAG
+  in topological order, UNIONING the contributions of every input slot whose
+  dataset is reachable from ``src``.  On DAGs where ``src`` reaches ``dst``
+  through multiple paths (a diamond: one source feeding two branches
+  re-joined downstream) the composed relation sums over ALL paths, exactly
+  matching the hop-walking engine — not just the unique producer chain.
+* **Lazy + incremental** — every intermediate ``(src, mid)`` accumulation is
+  cached, so a later query to a further dataset reuses the cached prefix and
+  composes only the new suffix.
 * **Eviction-bounded** — an LRU keyed on ``(src, dst)`` with a byte budget
   (``memory_budget_bytes``), honoring the paper's minimal-memory goal: the
   cache trades recompute for memory and can be sized down to nothing.
-* **Write-invalidated** — keyed on ``ProvenanceIndex.version``; recording a
-  new op drops cached relations (paths may lengthen).
+* **Append-safe** — the op DAG is append-only (one producer per dataset,
+  enforced by ``ProvenanceIndex.record``), so composed relations between
+  existing datasets stay exact when new ops are recorded and the cache is
+  kept across version bumps — continuous serving reuses its lineage
+  relations instead of recomposing per generation.
 
-Caveat (inherited from :func:`repro.core.compose.path_tensors`): the composed
-relation follows the unique producer path from ``dst`` back to ``src``.  On
-DAGs where ``src`` reaches ``dst`` through MULTIPLE paths (e.g. a self-join),
-use the hop-walking engine in :mod:`repro.core.query` instead.  When NO path
-exists, the probe methods answer empty (matching the walking engine);
-``relation`` itself raises ``KeyError``.
+When NO path exists, the probe methods answer empty (matching the walking
+engine); ``relation`` itself raises ``KeyError``.
 """
 from __future__ import annotations
 
@@ -43,7 +48,6 @@ from repro.core.compose import (
     compose_pair_csr,
     op_bitplane,
     op_csr,
-    path_tensors,
 )
 from repro.core.pipeline import ProvenanceIndex
 from repro.core.provtensor import (
@@ -91,10 +95,17 @@ class ComposedIndex:
 
     # -- cache plumbing -----------------------------------------------------
     def _sync(self) -> None:
-        if self.index.version != self._version:
-            self._cache.clear()
-            self._bytes = 0
-            self._version = self.index.version
+        """Reconcile with the index after writes.
+
+        The op DAG is APPEND-ONLY (every dataset has exactly one producer —
+        ``ProvenanceIndex.record`` rejects duplicate output ids — and a new
+        op can only produce a NEW dataset, never splice a path between two
+        existing ones), so composed relations between existing datasets stay
+        exact across version bumps and the cache is KEPT.  Continuous
+        serving (one recorded op per request batch) therefore reuses its
+        composed lineage relations instead of recomposing per generation.
+        """
+        self._version = self.index.version
 
     def _insert(self, key: Tuple[str, str], rel) -> None:
         nbytes = _rel_nbytes(rel)
@@ -135,10 +146,26 @@ class ComposedIndex:
             return compose_pair_csr(acc, step)
         return compose_pair(acc, step, n_mid, use_pallas=self.use_pallas)
 
+    def _union(self, a, b):
+        """(OR)-union two relations — the sum over parallel DAG paths."""
+        if self.backend == "csr":
+            c = (a + b).tocsr()
+            c.data = np.ones_like(c.data)
+            return c
+        return np.bitwise_or(a, b)
+
     # -- the composed relation ----------------------------------------------
     def relation(self, src: str, dst: str):
         """The composed ``src`` → ``dst`` relation (scipy CSR or packed
-        bitplane, per backend), from cache or composed incrementally."""
+        bitplane, per backend), from cache or composed incrementally.
+
+        Accumulates over the op DAG in topological order restricted to ops
+        that lie on some ``src`` → ``dst`` path: each op's output relation is
+        the UNION over its input slots of (input relation ∘ slot step), so
+        multi-path DAGs (diamonds, self-joins) compose exactly.  Every
+        intermediate ``(src, mid)`` accumulation is cached — later queries
+        to further datasets reuse the prefix.
+        """
         self._sync()
         cached = self._lookup((src, dst))
         if cached is not None:
@@ -149,24 +176,40 @@ class ComposedIndex:
             rel = self._identity(self.index.datasets[src].n_rows)
             self._insert((src, dst), rel)
             return rel
-        chain = path_tensors(self.index, src, dst)
-        # longest cached prefix: datasets along the path are src, out_1 .. dst
-        path_ids = [src] + [op.output_id for op, _ in chain]
-        start = 0
-        acc = None
-        for j in range(len(path_ids) - 1, 0, -1):
-            hit = self._lookup((src, path_ids[j]))
+        # ops on a src ~> dst path: downstream of src AND upstream of dst.
+        # (Reachable-from-src ancestors of any such op are themselves in the
+        # set, so the accumulation below never misses a contribution.)
+        up_ids = {op.op_id for op in self.index.upstream_ops(dst)}
+        chain = [
+            op for op in self.index.downstream_ops(src) if op.op_id in up_ids
+        ]
+        rels: Dict[str, object] = {src: None}  # None = the implicit identity
+        for op in chain:
+            out = op.output_id
+            hit = self._lookup((src, out))
             if hit is not None:
                 self.hits += 1
-                acc, start = hit, j
-                break
-        for j in range(start, len(chain)):
-            op, slot = chain[j]
-            step = self._op_step(op, slot)
-            acc = step if acc is None else self._compose(
-                acc, step, op.tensor.n_in[slot])
-            self._insert((src, path_ids[j + 1]), acc)
-        return acc
+                rels[out] = hit
+                continue
+            acc = None
+            for k, in_id in enumerate(op.input_ids):
+                if in_id not in rels:
+                    continue  # input unreachable from src: contributes nothing
+                step = self._op_step(op, k)
+                prefix = rels[in_id]
+                contrib = (
+                    step
+                    if prefix is None
+                    else self._compose(prefix, step, op.tensor.n_in[k])
+                )
+                acc = contrib if acc is None else self._union(acc, contrib)
+            if acc is None:
+                continue
+            rels[out] = acc
+            self._insert((src, out), acc)
+        if dst not in rels or rels[dst] is None:
+            raise KeyError(f"no dataflow path {src} -> {dst}")
+        return rels[dst]
 
     # -- batched probes -------------------------------------------------------
     def _probe_masks(self, rows, n: int) -> Tuple[np.ndarray, bool]:
@@ -213,6 +256,23 @@ class ComposedIndex:
             return (rel @ masks.astype(np.float32).T).T > 0
         words = pack_bitplane(masks)
         return np.stack([(rel & w[None, :]).any(axis=1) for w in words], axis=0)
+
+    # -- mask-stack probes (the QuerySession entry points) ---------------------
+    def contains(self, src: str, dst: str) -> bool:
+        """Whether the ``src`` → ``dst`` relation is already composed (no LRU
+        touch, no composition) — the planner's routing test."""
+        self._sync()
+        return (src, dst) in self._cache
+
+    def probe_forward(self, masks, src: str, dst: str) -> np.ndarray:
+        """(B, |src|) bool mask stack -> (B, |dst|) bool via the composed
+        relation.  No path -> all-empty (matching the walking engine)."""
+        return self._forward_probe(np.asarray(masks, dtype=bool), src, dst)
+
+    def probe_backward(self, masks, dst: str, src: str) -> np.ndarray:
+        """(B, |dst|) bool mask stack -> (B, |src|) bool: relation rows
+        intersecting each probe set."""
+        return self._backward_probe(np.asarray(masks, dtype=bool), src, dst)
 
     def q1_forward(self, src: str, rows, dst: str):
         """Q1 via ONE batched probe of the composed relation (no DAG walk)."""

@@ -56,6 +56,7 @@ class ProvenanceIndex:
         self.consumers: Dict[str, List[int]] = {}   # dataset -> consuming ops
         self.version = 0                            # bumped per recorded op;
         self._composed = None                       # hop-caches key on it
+        self._session = None                        # shared QuerySession
 
     # -- registration ---------------------------------------------------------
     def add_source(self, dataset_id: str, table: Table) -> str:
@@ -83,6 +84,13 @@ class ProvenanceIndex:
         sinks (always materialized).  ``input_tables`` lets the caller hand
         over inputs so the §III-E policy can materialize them for contextual
         ops (TrackedTable always passes them)."""
+        if output_id in self.datasets:
+            # every dataset has exactly ONE producer; silently overwriting
+            # would leave both ops in the DAG and corrupt every walk (and the
+            # hop-cache's keep-on-append invalidation policy relies on it)
+            raise ValueError(
+                f"{info.op_name}: output dataset {output_id!r} already exists"
+            )
         for k, d in enumerate(input_ids):
             if d not in self.datasets:
                 raise KeyError(f"unknown input dataset {d}")
@@ -179,6 +187,21 @@ class ProvenanceIndex:
         elif kwargs:
             raise ValueError("composed() already configured; use index.composed()")
         return self._composed
+
+    def session(self, **kwargs):
+        """The index's shared :class:`~repro.provenance.session.QuerySession`
+        — the planner/executor behind ``repro.provenance.prov(index)`` and
+        the legacy ``q1``-``q11`` shims.  It wraps :meth:`composed`, so every
+        caller (examples, serving tier, benchmarks) probes the same composed
+        relations.  Pass kwargs (e.g. ``hopcache_min_batch``) on first call
+        to configure it."""
+        from repro.provenance import QuerySession  # circular at module scope
+
+        if self._session is None:
+            self._session = QuerySession(self, **kwargs)
+        elif kwargs:
+            raise ValueError("session() already configured; use index.session()")
+        return self._session
 
     # -- memory accounting (Table IX / Table XI) --------------------------------
     def prov_nbytes(self) -> int:

@@ -1,11 +1,13 @@
 """Provenance query processing (paper Section IV, Table VII: Q1-Q11).
 
-Record-level queries chain ``project(slice(T, p_in, rows), p_out)`` hops —
-realized as batched CSR probes (the optimized representation of §III-C) —
-over the topologically-ordered op DAG.  Attribute-level queries additionally
-thread (row-set x attr-set) terms through the Table-VI bitset maps.
+This module is now two layers:
 
-This engine is fully array-vectorized:
+**The physical layer** (kept public, used by :mod:`repro.provenance`):
+record-level queries chain ``project(slice(T, p_in, rows), p_out)`` hops —
+realized as batched CSR probes (the optimized representation of §III-C) —
+over the topologically-ordered op DAG; attribute-level queries additionally
+thread (row-set x attr-set) terms through the Table-VI bitset maps.  It is
+fully array-vectorized:
 
 * attribute masks travel PACKED (uint32 words, 32 attrs per lane) and advance
   through an op via one select-OR contraction against the op's memoized
@@ -13,18 +15,30 @@ This engine is fully array-vectorized:
   per-attribute rank/select dispatch;
 * ``_cells`` materializes the union of (row-set × attr-set) products as a
   broadcasted outer product over packed masks, then one ``argwhere``;
-* every public query accepts EITHER one probe set OR a batch (a list of probe
-  sets / a 2-D boolean mask stack) and answers the batch in one pass — the
-  per-op CSR gather covers all batch elements with a single ragged gather
-  (:meth:`CSR.neighbor_mask_many`).
+* the batch walkers answer a whole probe batch in one pass — the per-op CSR
+  gather covers all batch elements with a single ragged gather
+  (:meth:`CSR.neighbor_mask_many`) — and can collect per-probe ``Hop``
+  traces (``collect_hops=True``), so how-provenance (Q5-Q8) batches too.
 
-Multi-hop batched probes can additionally skip the per-op walk entirely via
-the composed hop-cache (:mod:`repro.core.hopcache`).
+**The legacy shims**: ``q1_forward`` … ``q11_co_dependency`` are THIN
+DEPRECATION SHIMS over :mod:`repro.provenance` — each compiles its arguments
+to a :class:`~repro.provenance.plan.QueryPlan` and executes it through the
+index's shared :class:`~repro.provenance.session.QuerySession`, which owns
+the hop-cache routing.  Prefer the builder::
+
+    from repro.provenance import prov
+    prov(index).source(src).rows([...]).forward().to(dst).run()
+
+The shims keep the old single-vs-batch *guess* (:func:`is_probe_batch`) and
+warn with :class:`~repro.provenance.plan.AmbiguousProbeWarning` on the
+inputs where the guess is ambiguous (an empty list; a 1-D integer ndarray):
+the builder's explicit ``.rows(...)`` / ``.rows_batch(...)`` never guesses.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+import warnings
+from typing import Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
@@ -102,10 +116,6 @@ def _as_mask_batch(rows_batch, n: int) -> np.ndarray:
     return np.stack([_as_mask(r, n) for r in rows_batch], axis=0)
 
 
-def _empty_rows() -> np.ndarray:
-    return np.zeros(0, dtype=np.int64)
-
-
 # ---------------------------------------------------------------------------
 # Record-level propagation (Q1/Q2 cores)
 # ---------------------------------------------------------------------------
@@ -152,85 +162,176 @@ def backward_record_masks(
 
 
 def forward_record_masks_batch(
-    index: ProvenanceIndex, src: str, rows_batch
-) -> Dict[str, np.ndarray]:
+    index: ProvenanceIndex, src: str, rows_batch, collect_hops: bool = False
+):
     """Batched :func:`forward_record_masks`: every value is (B, n_rows) bool.
 
     One pass over the op DAG answers all B probes — each hop is a single
-    batched CSR gather, not B sequential walks.
+    batched CSR gather, not B sequential walks.  With ``collect_hops`` the
+    return is ``(masks, hops)`` where ``hops[b]`` is probe b's :class:`Hop`
+    trace, identical to the single-probe trace (a hop is recorded for probe
+    b iff that probe's contribution through the op is non-empty).
     """
     stack = _as_mask_batch(rows_batch, index.datasets[src].n_rows)
     masks: Dict[str, np.ndarray] = {src: stack}
     B = stack.shape[0]
+    hops: List[List[Hop]] = [[] for _ in range(B)]
     for op in index.downstream_ops(src):
         out_mask = masks.get(op.output_id, np.zeros((B, op.tensor.n_out), dtype=bool))
         for k, in_id in enumerate(op.input_ids):
             if in_id in masks and masks[in_id].any():
-                out_mask = out_mask | op.tensor.forward_mask_batch(k, masks[in_id])
+                contrib = op.tensor.forward_mask_batch(k, masks[in_id])
+                if collect_hops:
+                    counts = contrib.sum(axis=1)
+                    for b in np.flatnonzero(counts):
+                        hops[b].append(
+                            Hop(op.op_id, op.info.op_name, op.info.category.value,
+                                in_id, op.output_id, int(counts[b]))
+                        )
+                out_mask = out_mask | contrib
         masks[op.output_id] = out_mask
+    if collect_hops:
+        return masks, hops
     return masks
 
 
 def backward_record_masks_batch(
-    index: ProvenanceIndex, dst: str, rows_batch
-) -> Dict[str, np.ndarray]:
+    index: ProvenanceIndex, dst: str, rows_batch, collect_hops: bool = False
+):
     stack = _as_mask_batch(rows_batch, index.datasets[dst].n_rows)
     masks: Dict[str, np.ndarray] = {dst: stack}
     B = stack.shape[0]
+    hops: List[List[Hop]] = [[] for _ in range(B)]
     for op in reversed(index.upstream_ops(dst)):
         if op.output_id not in masks or not masks[op.output_id].any():
             continue
         for k, in_id in enumerate(op.input_ids):
             contrib = op.tensor.backward_mask_batch(k, masks[op.output_id])
+            if collect_hops:
+                counts = contrib.sum(axis=1)
+                for b in np.flatnonzero(counts):
+                    hops[b].append(
+                        Hop(op.op_id, op.info.op_name, op.info.category.value,
+                            op.output_id, in_id, int(counts[b]))
+                    )
             prev = masks.get(
                 in_id, np.zeros((B, index.datasets[in_id].n_rows), dtype=bool)
             )
             masks[in_id] = prev | contrib
+    if collect_hops:
+        return masks, hops
     return masks
+
+
+# ---------------------------------------------------------------------------
+# Legacy Table-VII shims over repro.provenance (deprecated spellings)
+# ---------------------------------------------------------------------------
+_DEPRECATION_WARNED: Set[str] = set()
+
+
+def _warn_deprecated(name: str, spelling: str) -> None:
+    if name in _DEPRECATION_WARNED:
+        return
+    _DEPRECATION_WARNED.add(name)
+    warnings.warn(
+        f"repro.core.query.{name} is deprecated; use "
+        f"repro.provenance.prov(index){spelling}",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+
+
+def _legacy_probe_is_batch(name: str, rows) -> bool:
+    """The old :func:`is_probe_batch` guess, with an
+    :class:`AmbiguousProbeWarning` on the spellings it cannot distinguish."""
+    from repro.provenance import AmbiguousProbeWarning
+
+    if isinstance(rows, (list, tuple)) and len(rows) == 0:
+        warnings.warn(
+            f"{name}: an empty probe [] is ambiguous (one empty probe set vs "
+            "an empty batch) and takes the single-probe path; spell it "
+            "prov(index)...rows([]) or .rows_batch([]) instead",
+            AmbiguousProbeWarning,
+            stacklevel=3,
+        )
+        return False
+    if isinstance(rows, np.ndarray) and rows.ndim == 1 and rows.dtype != bool:
+        warnings.warn(
+            f"{name}: a 1-D integer ndarray probe is ambiguous (row indices "
+            "vs a length-1 batch) and takes the single-probe (row-index) "
+            "path; spell it prov(index)...rows(...) or .rows_batch(...) "
+            "instead",
+            AmbiguousProbeWarning,
+            stacklevel=3,
+        )
+        return False
+    return is_probe_batch(rows)
+
+
+def _record_shim(index, name, spelling, start, rows, target, direction, how):
+    from repro.provenance import prov
+
+    _warn_deprecated(name, spelling)
+    qb = prov(index).source(start)
+    qb = qb.rows_batch(rows) if _legacy_probe_is_batch(name, rows) else qb.rows(rows)
+    qb = qb.forward() if direction == "fwd" else qb.backward()
+    if how:
+        qb = qb.how()
+    return qb.to(target).run()
+
+
+def _cells_shim(index, name, spelling, start, rows, attrs, target, direction, how):
+    from repro.provenance import prov
+
+    _warn_deprecated(name, spelling)
+    qb = prov(index).source(start)
+    batched = _legacy_probe_is_batch(name, rows)
+    qb = qb.rows_batch(rows) if batched else qb.rows(rows)
+    if batched and is_probe_batch(attrs):
+        qb = qb.attrs_batch(attrs)
+    else:
+        qb = qb.attrs(attrs)
+    qb = qb.forward() if direction == "fwd" else qb.backward()
+    if how:
+        qb = qb.how()
+    return qb.to(target).run()
 
 
 def q1_forward(index: ProvenanceIndex, src: str, rows, dst: str):
     """Q1: records in ``dst`` derived from ``rows`` of ``src``.
 
+    Deprecated shim — ``prov(index).source(src).rows(...).forward().to(dst)``.
     ``rows`` may be one probe set or a batch (list of sets); a batch returns
     a list of index arrays, answered in one vectorized pass.
     """
-    if is_probe_batch(rows):
-        masks = forward_record_masks_batch(index, src, rows)
-        B = len(rows) if not isinstance(rows, np.ndarray) else rows.shape[0]
-        if dst not in masks:
-            return [_empty_rows() for _ in range(B)]
-        return [np.flatnonzero(m) for m in masks[dst]]
-    masks, _ = forward_record_masks(index, src, rows)
-    if dst not in masks:
-        return _empty_rows()
-    return np.flatnonzero(masks[dst])
+    return _record_shim(index, "q1_forward", ".source(src).rows(...).forward().to(dst)",
+                        src, rows, dst, "fwd", how=False)
 
 
 def q2_backward(index: ProvenanceIndex, dst: str, rows, src: str):
-    """Q2: records in ``src`` that contributed to ``rows`` of ``dst``."""
-    if is_probe_batch(rows):
-        masks = backward_record_masks_batch(index, dst, rows)
-        B = len(rows) if not isinstance(rows, np.ndarray) else rows.shape[0]
-        if src not in masks:
-            return [_empty_rows() for _ in range(B)]
-        return [np.flatnonzero(m) for m in masks[src]]
-    masks, _ = backward_record_masks(index, dst, rows)
-    if src not in masks:
-        return _empty_rows()
-    return np.flatnonzero(masks[src])
+    """Q2: records in ``src`` that contributed to ``rows`` of ``dst``.
+
+    Deprecated shim — ``prov(index).source(dst).rows(...).backward().to(src)``.
+    """
+    return _record_shim(index, "q2_backward", ".source(dst).rows(...).backward().to(src)",
+                        dst, rows, src, "bwd", how=False)
 
 
 def q5_forward_how(index: ProvenanceIndex, src: str, rows, dst: str):
-    masks, hops = forward_record_masks(index, src, rows, collect_hops=True)
-    recs = np.flatnonzero(masks[dst]) if dst in masks else _empty_rows()
-    return recs, hops
+    """Q5: Q1 plus the per-op :class:`Hop` trace.  Deprecated shim —
+    ``prov(index).source(src).rows(...).forward().to(dst).how()``.  Batch
+    probes (new) return one ``(records, hops)`` pair per probe."""
+    return _record_shim(index, "q5_forward_how",
+                        ".source(src).rows(...).forward().to(dst).how()",
+                        src, rows, dst, "fwd", how=True)
 
 
 def q6_backward_how(index: ProvenanceIndex, dst: str, rows, src: str):
-    masks, hops = backward_record_masks(index, dst, rows, collect_hops=True)
-    recs = np.flatnonzero(masks[src]) if src in masks else _empty_rows()
-    return recs, hops
+    """Q6: Q2 plus the hop trace.  Deprecated shim —
+    ``prov(index).source(dst).rows(...).backward().to(src).how()``."""
+    return _record_shim(index, "q6_backward_how",
+                        ".source(dst).rows(...).backward().to(src).how()",
+                        dst, rows, src, "bwd", how=True)
 
 
 # ---------------------------------------------------------------------------
@@ -307,13 +408,19 @@ def _attr_propagate(
 
 
 def _attr_propagate_batch(
-    index: ProvenanceIndex, start: str, rows_batch, attrs_batch, direction: str
+    index: ProvenanceIndex, start: str, rows_batch, attrs_batch, direction: str,
+    collect_hops: bool = False,
 ):
     """Batched term propagation: every term is ((B, n_rows) bool, (B, nw) u32).
 
     A term stays alive while ANY batch element is non-empty; per-element
     emptiness zeroes that element's masks, which contributes nothing to the
     final outer product — exactly the single-probe pruning, batched.
+
+    With ``collect_hops`` the return gains a per-probe :class:`Hop` trace
+    (``hops[b]``): a hop is recorded for probe b iff probe b's term survives
+    the op with non-empty row AND attr masks — matching the single-probe
+    :func:`_attr_propagate` trace exactly.
     """
     ds0 = index.datasets[start]
     rm0 = _as_mask_batch(rows_batch, ds0.n_rows)
@@ -323,6 +430,15 @@ def _attr_propagate_batch(
     terms: Dict[str, List[Tuple[np.ndarray, np.ndarray]]] = {
         start: [(rm0, pack_bitplane(am0))]
     }
+    hops: List[List[Hop]] = [[] for _ in range(B)]
+
+    def _trace(op, src_id, dst_id, new_rm, new_aw):
+        counts = new_rm.sum(axis=1)
+        live = counts.astype(bool) & new_aw.any(axis=1)
+        for b in np.flatnonzero(live):
+            hops[b].append(Hop(op.op_id, op.info.op_name, op.info.category.value,
+                               src_id, dst_id, int(counts[b])))
+
     ops = (
         index.downstream_ops(start)
         if direction == "fwd"
@@ -341,6 +457,8 @@ def _attr_propagate_batch(
                     new_aw = bitplane_or_reduce(aw, plane, in_ds.n_cols)
                     if new_rm.any() and new_aw.any():
                         terms.setdefault(op.output_id, []).append((new_rm, new_aw))
+                        if collect_hops:
+                            _trace(op, in_id, op.output_id, new_rm, new_aw)
         else:
             for (rm, aw) in terms.get(op.output_id, []):
                 if not rm.any():
@@ -352,6 +470,10 @@ def _attr_propagate_batch(
                     new_aw = bitplane_or_reduce(aw, plane, out_ds.n_cols)
                     if new_rm.any() and new_aw.any():
                         terms.setdefault(in_id, []).append((new_rm, new_aw))
+                        if collect_hops:
+                            _trace(op, op.output_id, in_id, new_rm, new_aw)
+    if collect_hops:
+        return terms, B, hops
     return terms, B
 
 
@@ -383,52 +505,47 @@ def _cells_batch(
 def q3_forward_attr(index, src: str, rows, attrs, dst: str):
     """Q3: attribute values (cells) of ``dst`` derived from the given cells.
 
+    Deprecated shim —
+    ``prov(index).source(src).rows(...).attrs(...).forward().to(dst)``.
     Batched when ``rows`` (and optionally ``attrs``) is a list of probe sets:
     returns one cell list per probe."""
-    out_ds = index.datasets[dst]
-    if is_probe_batch(rows):
-        terms, B = _attr_propagate_batch(index, src, rows, attrs, "fwd")
-        return _cells_batch(terms.get(dst, []), B, out_ds.n_rows, out_ds.n_cols)
-    terms, _ = _attr_propagate(index, src, rows, attrs, "fwd")
-    return _cells(terms.get(dst, []), out_ds.n_rows, out_ds.n_cols)
+    return _cells_shim(index, "q3_forward_attr",
+                       ".source(src).rows(...).attrs(...).forward().to(dst)",
+                       src, rows, attrs, dst, "fwd", how=False)
 
 
 def q4_backward_attr(index, dst: str, rows, attrs, src: str):
-    src_ds = index.datasets[src]
-    if is_probe_batch(rows):
-        terms, B = _attr_propagate_batch(index, dst, rows, attrs, "bwd")
-        return _cells_batch(terms.get(src, []), B, src_ds.n_rows, src_ds.n_cols)
-    terms, _ = _attr_propagate(index, dst, rows, attrs, "bwd")
-    return _cells(terms.get(src, []), src_ds.n_rows, src_ds.n_cols)
+    """Q4: source cells the given ``dst`` cells derive from.  Deprecated shim
+    — ``prov(index).source(dst).rows(...).attrs(...).backward().to(src)``."""
+    return _cells_shim(index, "q4_backward_attr",
+                       ".source(dst).rows(...).attrs(...).backward().to(src)",
+                       dst, rows, attrs, src, "bwd", how=False)
 
 
 def q7_forward_attr_how(index, src: str, rows, attrs, dst: str):
-    terms, hops = _attr_propagate(index, src, rows, attrs, "fwd", collect_hops=True)
-    out_ds = index.datasets[dst]
-    return _cells(terms.get(dst, []), out_ds.n_rows, out_ds.n_cols), hops
+    """Q7: Q3 plus the hop trace.  Deprecated shim — Q3's spelling + ``.how()``.
+    Batch probes (new) return one ``(cells, hops)`` pair per probe."""
+    return _cells_shim(index, "q7_forward_attr_how",
+                       ".source(src).rows(...).attrs(...).forward().to(dst).how()",
+                       src, rows, attrs, dst, "fwd", how=True)
 
 
 def q8_backward_attr_how(index, dst: str, rows, attrs, src: str):
-    terms, hops = _attr_propagate(index, dst, rows, attrs, "bwd", collect_hops=True)
-    src_ds = index.datasets[src]
-    return _cells(terms.get(src, []), src_ds.n_rows, src_ds.n_cols), hops
+    """Q8: Q4 plus the hop trace.  Deprecated shim — Q4's spelling + ``.how()``."""
+    return _cells_shim(index, "q8_backward_attr_how",
+                       ".source(dst).rows(...).attrs(...).backward().to(src).how()",
+                       dst, rows, attrs, src, "bwd", how=True)
 
 
 # ---------------------------------------------------------------------------
 # Q9: all transformations applied to a dataset (metadata only — no tensors)
 # ---------------------------------------------------------------------------
 def q9_all_transformations(index: ProvenanceIndex, dataset: str) -> List[Dict]:
-    return [
-        {
-            "op_id": op.op_id,
-            "op": op.info.op_name,
-            "category": op.info.category.value,
-            "contextual": op.info.contextual,
-            "inputs": op.input_ids,
-            "output": op.output_id,
-        }
-        for op in index.upstream_ops(dataset)
-    ]
+    """Deprecated shim — ``prov(index).source(dataset).transformations()``."""
+    from repro.provenance import prov
+
+    _warn_deprecated("q9_all_transformations", ".source(dataset).transformations()")
+    return prov(index).source(dataset).transformations().run()
 
 
 # ---------------------------------------------------------------------------
@@ -448,60 +565,28 @@ def q10_co_contributory(
     index: ProvenanceIndex, d1: str, rows, d2: str, via: Optional[str] = None
 ):
     """Records of ``d2`` used together with ``rows`` of ``d1`` to create new
-    records (in ``via``; defaults to any common descendant)."""
-    if is_probe_batch(rows):
-        return _q10_batch(index, d1, rows, d2, via)
-    fwd_masks, _ = forward_record_masks(index, d1, rows)
-    if via is None:
-        via = _pick_via(index, d1, d2, fwd_masks)
-        if via is None:
-            return _empty_rows()
-    if via not in fwd_masks or not fwd_masks[via].any():
-        return _empty_rows()
-    back, _ = backward_record_masks(index, via, fwd_masks[via])
-    if d2 not in back:
-        return _empty_rows()
-    return np.flatnonzero(back[d2])
+    records (in ``via``; defaults to any common descendant).  Deprecated shim
+    — ``prov(index).source(d1).rows(...).co_contributory(d2, via=via)``."""
+    from repro.provenance import prov
 
-
-def _q10_batch(index, d1, rows_batch, d2, via):
-    fwd = forward_record_masks_batch(index, d1, rows_batch)
-    B = fwd[d1].shape[0]
-    results: List[np.ndarray] = [_empty_rows()] * B
-    # group probes by their (possibly per-probe) via dataset, batch each group
-    groups: Dict[str, List[int]] = {}
-    for b in range(B):
-        v = via if via is not None else _pick_via(index, d1, d2, fwd, b)
-        if v is None or v not in fwd or not fwd[v][b].any():
-            continue
-        groups.setdefault(v, []).append(b)
-    for v, bs in groups.items():
-        back = backward_record_masks_batch(index, v, fwd[v][bs])
-        if d2 not in back:
-            continue
-        for i, b in enumerate(bs):
-            results[b] = np.flatnonzero(back[d2][i])
-    return results
+    _warn_deprecated("q10_co_contributory",
+                     ".source(d1).rows(...).co_contributory(d2, via=via)")
+    qb = prov(index).source(d1)
+    qb = (qb.rows_batch(rows)
+          if _legacy_probe_is_batch("q10_co_contributory", rows) else qb.rows(rows))
+    return qb.co_contributory(d2, via=via).run()
 
 
 def q11_co_dependency(
     index: ProvenanceIndex, d2: str, rows, d1: str, d3: str
 ):
     """Records of ``d3`` lineage-dependent on the ``d1`` records that
-    generated ``rows`` of ``d2``."""
-    if is_probe_batch(rows):
-        back = backward_record_masks_batch(index, d2, rows)
-        B = back[d2].shape[0]
-        if d1 not in back or not back[d1].any():
-            return [_empty_rows() for _ in range(B)]
-        fwd = forward_record_masks_batch(index, d1, back[d1])
-        if d3 not in fwd:
-            return [_empty_rows() for _ in range(B)]
-        return [np.flatnonzero(m) for m in fwd[d3]]
-    back, _ = backward_record_masks(index, d2, rows)
-    if d1 not in back or not back[d1].any():
-        return _empty_rows()
-    fwd, _ = forward_record_masks(index, d1, back[d1])
-    if d3 not in fwd:
-        return _empty_rows()
-    return np.flatnonzero(fwd[d3])
+    generated ``rows`` of ``d2``.  Deprecated shim —
+    ``prov(index).source(d2).rows(...).co_dependency(d1, d3)``."""
+    from repro.provenance import prov
+
+    _warn_deprecated("q11_co_dependency", ".source(d2).rows(...).co_dependency(d1, d3)")
+    qb = prov(index).source(d2)
+    qb = (qb.rows_batch(rows)
+          if _legacy_probe_is_batch("q11_co_dependency", rows) else qb.rows(rows))
+    return qb.co_dependency(d1, d3).run()

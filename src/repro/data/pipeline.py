@@ -198,10 +198,11 @@ class TokenPipeline:
     # -- the paper's queries, specialized --------------------------------------
     def batch_to_documents(self, step: int) -> np.ndarray:
         """Q2: corpus rows that fed the batch at ``step``."""
-        from repro.core.query import q2_backward
+        from repro.provenance import prov
         ds = f"batch@{step}"
         n = self.index.datasets[ds].n_rows
-        return q2_backward(self.index, ds, np.arange(n), "corpus")
+        return (prov(self.index).source(ds).rows(np.arange(n))
+                .backward().to("corpus").run())
 
     def document_to_batches(self, corpus_row: int) -> List[int]:
         """Q1: steps whose batches a raw document reached."""

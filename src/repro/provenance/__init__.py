@@ -1,0 +1,24 @@
+"""repro.provenance — the unified lazy query-plan API over a ProvenanceIndex.
+
+The public surface is three names:
+
+* :func:`prov` — fluent lazy builder,
+  ``prov(index).source("D_l").rows([...]).forward().to(sink).run()``;
+* :class:`QueryPlan` — the explicit IR a builder compiles to;
+* :class:`QuerySession` — planner/executor; owns the hop-cache routing and
+  fuses ``run_many`` batches that share endpoints into one packed pass.
+
+The legacy Table-VII free functions (``repro.core.query.q1_forward`` …)
+are thin deprecation shims over this package.
+"""
+from repro.provenance.builder import ProvQuery, prov
+from repro.provenance.plan import AmbiguousProbeWarning, QueryPlan
+from repro.provenance.session import QuerySession
+
+__all__ = [
+    "prov",
+    "ProvQuery",
+    "QueryPlan",
+    "QuerySession",
+    "AmbiguousProbeWarning",
+]

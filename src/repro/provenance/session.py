@@ -1,0 +1,265 @@
+"""QuerySession — the planner/executor behind the lazy builder.
+
+A session owns the physical machinery for one :class:`ProvenanceIndex`:
+
+* the **per-op vectorized walk** (:mod:`repro.core.query` — packed-bitset
+  attr propagation, one ragged CSR gather per hop covering a whole probe
+  batch);
+* the **composed hop-cache** (:class:`repro.core.hopcache.ComposedIndex`,
+  shared with every other session on the index via
+  ``ProvenanceIndex.composed()``) whose relations now sum over *all*
+  producer paths of the DAG, not just the unique chain;
+
+and picks between them per :class:`QueryPlan`:
+
+====================  ====================================================
+plan shape            strategy
+====================  ====================================================
+``transformations``   metadata scan (no tensors touched)
+``cells`` / ``how``   vectorized walk (attr bitplanes / hop traces live
+                      on the per-op pass)
+record-level          composed-relation probe when the relation is already
+                      cached or the probe batch is large enough to amortize
+                      composition (``hopcache_min_batch``); walk otherwise
+====================  ====================================================
+
+``run_many`` additionally **fuses** submitted plans that share a fuse key
+(kind, direction, endpoints, via/anchor, how, attr-presence) into ONE packed
+pass: the probe mask stacks concatenate along the batch axis, a single
+physical execution answers the union, and results split back per plan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import query as Q
+from repro.provenance.plan import QueryPlan
+
+__all__ = ["QuerySession"]
+
+
+def _flatnonzeros(mask_stack: np.ndarray) -> List[np.ndarray]:
+    return [np.flatnonzero(m) for m in mask_stack]
+
+
+class QuerySession:
+    """Planner + executor over one index; share one per serving tier."""
+
+    def __init__(
+        self,
+        index,
+        composed=None,
+        *,
+        use_hopcache: bool = True,
+        hopcache_min_batch: int = 8,
+    ) -> None:
+        self.index = index
+        self.composed = composed if composed is not None else index.composed()
+        self.use_hopcache = use_hopcache
+        self.hopcache_min_batch = int(hopcache_min_batch)
+        self.counters: Dict[str, int] = {
+            "plans": 0,
+            "walk": 0,
+            "hopcache": 0,
+            "meta": 0,
+            "fused_groups": 0,
+            "fused_plans": 0,
+        }
+
+    # -- planning --------------------------------------------------------------
+    def _strategy(self, plan: QueryPlan) -> str:
+        if plan.kind == "transformations":
+            return "meta"
+        if plan.kind == "cells" or plan.how:
+            return "walk"  # attr bitplanes / hop traces live on the walk
+        if not self.use_hopcache:
+            return "walk"
+        if plan.kind == "record":
+            pair = (
+                (plan.source, plan.target)
+                if plan.direction == "fwd"
+                else (plan.target, plan.source)
+            )
+        elif plan.kind == "co_contributory":
+            if plan.via is None:
+                return "walk"  # per-probe via needs the walk's reach map
+            pair = (plan.source, plan.via)
+        else:  # co_dependency
+            pair = (plan.anchor, plan.source)
+        if self.composed.contains(*pair):
+            return "hopcache"  # relation already composed: probe it
+        if plan.n_probes >= self.hopcache_min_batch:
+            return "hopcache"  # batch large enough to amortize composition
+        return "walk"
+
+    def explain(self, plan: QueryPlan) -> Dict[str, str]:
+        """The planner's choice for ``plan``, without executing it."""
+        return {"plan": plan.describe(), "strategy": self._strategy(plan)}
+
+    # -- execution -------------------------------------------------------------
+    def run(self, plan: QueryPlan):
+        """Execute one plan.  Single-probe plans return legacy-shaped results
+        (one index array / cell list / ``(recs, hops)``); batched plans
+        return one such result per probe."""
+        self.counters["plans"] += 1
+        if plan.kind == "transformations":
+            self.counters["meta"] += 1
+            return self._exec_transformations(plan)
+        per = self._execute(plan)
+        return per if plan.batched else per[0]
+
+    def run_many(self, plans: Sequence) -> List:
+        """Execute a batch of plans, fusing same-fuse-key plans into one
+        physical pass each.  Results come back in submission order."""
+        plans = [p if isinstance(p, QueryPlan) else p.plan() for p in plans]
+        results: List = [None] * len(plans)
+        groups: Dict[tuple, List[int]] = {}
+        for i, p in enumerate(plans):
+            groups.setdefault(p.fuse_key(), []).append(i)
+        for key, idxs in groups.items():
+            if len(idxs) == 1 or key[0] == "transformations":
+                for i in idxs:
+                    results[i] = self.run(plans[i])
+                continue
+            sub = [plans[i] for i in idxs]
+            fused = dataclasses.replace(
+                sub[0],
+                rows=np.concatenate([p.rows for p in sub], axis=0),
+                attrs=(
+                    np.concatenate([p.attrs for p in sub], axis=0)
+                    if sub[0].attrs is not None
+                    else None
+                ),
+                batched=True,
+            )
+            self.counters["plans"] += len(idxs)
+            self.counters["fused_groups"] += 1
+            self.counters["fused_plans"] += len(idxs)
+            per = self._execute(fused)
+            off = 0
+            for i in idxs:
+                p = plans[i]
+                chunk = per[off : off + p.n_probes]
+                off += p.n_probes
+                results[i] = chunk if p.batched else chunk[0]
+        return results
+
+    # -- executors (each returns one payload per probe) -------------------------
+    def _execute(self, plan: QueryPlan) -> List:
+        strategy = self._strategy(plan)
+        self.counters[strategy] += 1
+        if plan.kind == "record":
+            return self._exec_record(plan, strategy)
+        if plan.kind == "cells":
+            return self._exec_cells(plan)
+        if plan.kind == "co_contributory":
+            return self._exec_co_contributory(plan, strategy)
+        if plan.kind == "co_dependency":
+            return self._exec_co_dependency(plan, strategy)
+        raise ValueError(f"unexpected plan kind {plan.kind!r}")
+
+    def _exec_record(self, plan: QueryPlan, strategy: str) -> List:
+        B = plan.n_probes
+        if strategy == "hopcache":
+            if plan.direction == "fwd":
+                out = self.composed.probe_forward(plan.rows, plan.source, plan.target)
+            else:
+                out = self.composed.probe_backward(plan.rows, plan.source, plan.target)
+            return _flatnonzeros(out)
+        # walk
+        walker = (
+            Q.forward_record_masks_batch
+            if plan.direction == "fwd"
+            else Q.backward_record_masks_batch
+        )
+        if plan.how:
+            masks, hops = walker(self.index, plan.source, plan.rows, collect_hops=True)
+        else:
+            masks, hops = walker(self.index, plan.source, plan.rows), None
+        out = masks.get(
+            plan.target,
+            np.zeros((B, self.index.datasets[plan.target].n_rows), dtype=bool),
+        )
+        recs = _flatnonzeros(out)
+        if plan.how:
+            return list(zip(recs, hops))
+        return recs
+
+    def _exec_cells(self, plan: QueryPlan) -> List:
+        B = plan.n_probes
+        ds = self.index.datasets[plan.target]
+        if plan.how:
+            terms, _, hops = Q._attr_propagate_batch(
+                self.index, plan.source, plan.rows, plan.attrs, plan.direction,
+                collect_hops=True,
+            )
+        else:
+            terms, _ = Q._attr_propagate_batch(
+                self.index, plan.source, plan.rows, plan.attrs, plan.direction
+            )
+        cells = Q._cells_batch(terms.get(plan.target, []), B, ds.n_rows, ds.n_cols)
+        if plan.how:
+            return list(zip(cells, hops))
+        return cells
+
+    def _exec_co_contributory(self, plan: QueryPlan, strategy: str) -> List:
+        d1, d2, via = plan.source, plan.target, plan.via
+        if strategy == "hopcache":
+            via_masks = self.composed.probe_forward(plan.rows, d1, via)
+            back = self.composed.probe_backward(via_masks, via, d2)
+            return _flatnonzeros(back)
+        B = plan.n_probes
+        fwd = Q.forward_record_masks_batch(self.index, d1, plan.rows)
+        results: List[np.ndarray] = [np.zeros(0, dtype=np.int64)] * B
+        groups: Dict[str, List[int]] = {}
+        for b in range(B):
+            v = via if via is not None else Q._pick_via(self.index, d1, d2, fwd, b)
+            if v is None or v not in fwd or not fwd[v][b].any():
+                continue
+            groups.setdefault(v, []).append(b)
+        for v, bs in groups.items():
+            back = Q.backward_record_masks_batch(self.index, v, fwd[v][bs])
+            if d2 not in back:
+                continue
+            for i, b in enumerate(bs):
+                results[b] = np.flatnonzero(back[d2][i])
+        return results
+
+    def _exec_co_dependency(self, plan: QueryPlan, strategy: str) -> List:
+        d2, d1, d3 = plan.source, plan.anchor, plan.target
+        B = plan.n_probes
+        if strategy == "hopcache":
+            anc = self.composed.probe_backward(plan.rows, d2, d1)
+            fwd = self.composed.probe_forward(anc, d1, d3)
+            return _flatnonzeros(fwd)
+        back = Q.backward_record_masks_batch(self.index, d2, plan.rows)
+        empty = [np.zeros(0, dtype=np.int64)] * B
+        if d1 not in back or not back[d1].any():
+            return list(empty)
+        fwd = Q.forward_record_masks_batch(self.index, d1, back[d1])
+        if d3 not in fwd:
+            return list(empty)
+        return _flatnonzeros(fwd[d3])
+
+    def _exec_transformations(self, plan: QueryPlan) -> List[Dict]:
+        return [
+            {
+                "op_id": op.op_id,
+                "op": op.info.op_name,
+                "category": op.info.category.value,
+                "contextual": op.info.contextual,
+                "inputs": op.input_ids,
+                "output": op.output_id,
+            }
+            for op in self.index.upstream_ops(plan.source)
+        ]
+
+    # -- introspection ----------------------------------------------------------
+    def stats(self) -> Dict:
+        """Planner counters + the shared hop-cache's counters
+        (hits/misses/evictions/bytes) — assert on these to catch
+        cache-routing regressions."""
+        return {"planner": dict(self.counters), "hopcache": self.composed.stats()}

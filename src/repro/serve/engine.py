@@ -6,6 +6,16 @@ and traces every emitted token back to its REQUEST RECORD — record-level
 why-provenance of the serving path, captured with the same ProvTensor
 machinery as the data pipeline (each generated token derives from its
 request row: an identity-tensor-per-step collapsed to one HAUGMENT link).
+
+The engine owns a :class:`ProvenanceIndex` and shares its
+:class:`~repro.provenance.session.QuerySession`: ``generate(...,
+record_provenance=True)`` registers the (response -> request) op, and the
+lineage helpers (:meth:`response_lineage`, :meth:`response_lineage_batch`)
+compile to :class:`QueryPlan`\\ s and route through the session — so
+per-request lineage at scale probes ONE shared composed relation instead of
+walking the op DAG per request, and an upstream data-preparation index can
+be handed in (``prov_index=...``) to trace responses all the way back to
+raw sources.
 """
 from __future__ import annotations
 
@@ -17,6 +27,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.opcat import AttrMap, CaptureInfo, OpCategory
+from repro.core.pipeline import ProvenanceIndex
+from repro.dataprep.table import Table
 from repro.models.registry import get_model
 
 __all__ = ["ServeEngine", "GenerationResult"]
@@ -26,20 +39,35 @@ __all__ = ["ServeEngine", "GenerationResult"]
 class GenerationResult:
     tokens: np.ndarray        # (B, n_new)
     request_ids: np.ndarray   # (B,) provenance: emitted row -> request row
+    # set when the generation was recorded into the engine's index:
+    request_dataset: Optional[str] = None
+    response_dataset: Optional[str] = None
 
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params: Any, max_seq: int,
-                 dtype=jnp.bfloat16):
+                 dtype=jnp.bfloat16,
+                 prov_index: Optional[ProvenanceIndex] = None):
         self.cfg = cfg
         self.params = params
         self.max_seq = max_seq
         self.dtype = dtype
         self.model = get_model(cfg)
+        # provenance of the serving path: shared index (hand in the data-prep
+        # pipeline's index to trace responses back to raw sources) + the
+        # index's shared QuerySession for composed-relation probes
+        self.prov = prov_index if prov_index is not None else ProvenanceIndex(
+            f"serve:{cfg.name}")
+        self._n_generations = 0
         self._decode = jax.jit(
             lambda p, tok, pos, cache: self.model.decode_step(cfg, p, tok, pos, cache,
                                                               dtype=dtype)
         )
+
+    @property
+    def session(self):
+        """The engine's (index-shared) provenance QuerySession."""
+        return self.prov.session()
 
     def generate(
         self,
@@ -48,6 +76,9 @@ class ServeEngine:
         request_ids: Optional[np.ndarray] = None,
         greedy: bool = True,
         frames: Optional[np.ndarray] = None,   # enc-dec: stub frontend output
+        record_provenance: bool = False,
+        request_source: Optional[str] = None,  # existing dataset the requests
+                                               # are rows of (else auto-added)
     ) -> GenerationResult:
         cfg = self.cfg
         b, sp = prompts.shape
@@ -74,7 +105,88 @@ class ServeEngine:
 
         if request_ids is None:
             request_ids = np.arange(b, dtype=np.int64)
-        return GenerationResult(
+        result = GenerationResult(
             tokens=np.stack(out, axis=1),
             request_ids=np.asarray(request_ids),
         )
+        if record_provenance:
+            self._record_generation(result, prompt_len=sp, n_new=n_new,
+                                    request_source=request_source)
+        return result
+
+    # -- provenance capture ----------------------------------------------------
+    def _record_generation(self, result: GenerationResult, prompt_len: int,
+                           n_new: int, request_source: Optional[str]) -> None:
+        """Register the (response row -> request row) HAUGMENT op.
+
+        With ``request_source`` the responses link to rows of an EXISTING
+        dataset (``request_ids`` are row indices into it) — lineage then
+        continues upstream through whatever pipeline produced it."""
+        b = result.tokens.shape[0]
+        # unique per INDEX, not per engine: several engines may share one
+        # prov_index (the documented pattern), or the index may already hold
+        # earlier generations
+        gid = self._n_generations
+        while (f"responses@{gid}" in self.prov.datasets
+               or f"requests@{gid}" in self.prov.datasets):
+            gid += 1
+        self._n_generations = gid + 1
+        if request_source is None:
+            req_ds = f"requests@{gid}"
+            self.prov.add_source(req_ds, Table.from_columns({
+                "request_id": np.asarray(result.request_ids, np.float32),
+                "prompt_len": np.full(b, prompt_len, np.float32),
+            }))
+            src_rows = np.arange(b, dtype=np.int32)
+        else:
+            if request_source not in self.prov.datasets:
+                raise KeyError(f"unknown request dataset {request_source!r}")
+            req_ds = request_source
+            src_rows = np.asarray(result.request_ids, dtype=np.int32)
+        resp_ds = f"responses@{gid}"
+        self.prov.record(
+            [req_ds], resp_ds,
+            Table.from_columns({
+                "request_id": np.asarray(result.request_ids, np.float32),
+                "n_tokens": np.full(b, n_new, np.float32),
+            }),
+            CaptureInfo(op_name="generate", category=OpCategory.HAUGMENT,
+                        contextual=False, n_out=b,
+                        n_in=[self.prov.datasets[req_ds].n_rows],
+                        src_rows=src_rows,
+                        attr_maps=[AttrMap(kind="identity")],
+                        params={"n_new": n_new, "prompt_len": prompt_len}),
+            keep_output=True,
+        )
+        result.request_dataset = req_ds
+        result.response_dataset = resp_ds
+
+    # -- lineage queries (route through the shared session) ---------------------
+    def response_lineage(self, result: GenerationResult, rows=None,
+                         upstream: Optional[str] = None) -> np.ndarray:
+        """Rows of ``upstream`` (default: the request dataset) that the given
+        response rows derive from — ONE composed-relation probe once the
+        relation is cached (shared across every request and session user)."""
+        if result.response_dataset is None:
+            raise ValueError("generation was not recorded "
+                             "(generate(..., record_provenance=True))")
+        from repro.provenance import prov
+
+        if rows is None:
+            rows = np.ones(result.tokens.shape[0], dtype=bool)
+        dst = upstream if upstream is not None else result.request_dataset
+        return (prov(self.prov).source(result.response_dataset)
+                .rows(rows).backward().to(dst).run(self.session))
+
+    def response_lineage_batch(self, result: GenerationResult, rows_batch,
+                               upstream: Optional[str] = None) -> List[np.ndarray]:
+        """Per-request lineage for MANY probe sets in one fused pass (one
+        plan, one packed-bitplane probe of the shared composed relation)."""
+        if result.response_dataset is None:
+            raise ValueError("generation was not recorded "
+                             "(generate(..., record_provenance=True))")
+        from repro.provenance import prov
+
+        dst = upstream if upstream is not None else result.request_dataset
+        return (prov(self.prov).source(result.response_dataset)
+                .rows_batch(rows_batch).backward().to(dst).run(self.session))

@@ -7,7 +7,16 @@ materialization).  Every Q1-Q11 answer from the packed-bitset engine and the
 ComposedIndex hop-cache must agree EXACTLY with it on randomized pipelines
 covering identity, vreduce, vaugment, hreduce, haugment, join and append ops,
 single and batch probes, empty masks and -1 sentinels.
+
+Since the query-plan redesign, ``q1_forward`` … ``q11_co_dependency`` are
+thin shims over :mod:`repro.provenance` — so every test in this file pins
+the NEW planner/executor stack against the seed reference exactly; the
+bottom section additionally pins shim-vs-QuerySession agreement under both
+physical strategies and the multi-path diamond DAG the old unique-chain
+hop-cache could not compose.
 """
+import warnings
+
 import numpy as np
 import pytest
 
@@ -18,6 +27,7 @@ from repro.core.opcat import AttrMap
 from repro.core.pipeline import ProvenanceIndex
 from repro.dataprep.table import Table
 from repro.dataprep.tracked import track
+from repro.provenance import QuerySession, prov
 
 
 # ===========================================================================
@@ -519,7 +529,7 @@ def test_hopcache_unreachable_pair_answers_empty():
         ci.relation("B", sink)
 
 
-def test_hopcache_eviction_and_invalidation():
+def test_hopcache_eviction_and_append_keeps_cache():
     idx, sink, rng = _random_pipeline(0)
     tiny = ComposedIndex(idx, memory_budget_bytes=256)  # forces eviction
     n_src = idx.datasets["src"].n_rows
@@ -527,15 +537,37 @@ def test_hopcache_eviction_and_invalidation():
         np.testing.assert_array_equal(
             tiny.q1_forward("src", rows, sink), ref_q1(idx, "src", rows, sink))
     assert tiny.stats()["bytes"] <= 256 or tiny.stats()["entries"] <= 1
-    # recording a new op invalidates cached relations
+    # the DAG is append-only (one producer per dataset), so recording a new
+    # op KEEPS cached relations — and queries to the new dataset stay exact
     ci = ComposedIndex(idx)
     before = ci.q1_forward("src", [0], sink)
-    assert ci.stats()["entries"] > 0
+    entries = ci.stats()["entries"]
+    assert entries > 0
     tracked = track(
         Table.from_columns({"x": np.zeros(3, np.float32)}), idx, "late_src")
-    assert idx.version == len(idx.ops)
-    ci._sync()  # version unchanged by add_source; force-check is a no-op
-    assert ci.stats()["entries"] > 0
+    assert idx.version == len(idx.ops)   # add_source does not bump the version
+    # extend the pipeline past the old sink: version bumps, cache survives
+    from repro.dataprep.tracked import TrackedTable
+    n_sink = idx.datasets[sink].n_rows
+    mask = np.zeros(n_sink, dtype=bool)
+    mask[0] = True
+    late = TrackedTable(idx.datasets[sink].table, idx, sink).filter_rows(mask)
+    np.testing.assert_array_equal(
+        ci.q1_forward("src", [0], sink), before)          # cache hit, still exact
+    assert ci.stats()["entries"] >= entries and ci.stats()["hits"] > 0
+    np.testing.assert_array_equal(                        # new suffix composes
+        ci.q1_forward("src", [0], late.dataset_id),
+        ref_q1(idx, "src", [0], late.dataset_id))
+
+
+def test_record_rejects_duplicate_output_dataset():
+    """One producer per dataset — the invariant the keep-on-append
+    hop-cache policy rests on."""
+    idx = ProvenanceIndex("dup")
+    t = track(Table.from_columns({"x": np.zeros(4, np.float32)}), idx, "A")
+    out = t.filter_rows(np.array([1, 0, 1, 1], bool))
+    with pytest.raises(ValueError, match="already exists"):
+        idx.record(["A"], out.dataset_id, out.table, idx.ops[0].info)
 
 
 # ===========================================================================
@@ -574,6 +606,77 @@ def test_sentinel_outer_join_and_append_parity():
         np.testing.assert_array_equal(
             ci.q2_backward(sink, [0, n_sink - 1], src),
             ref_q2(idx, sink, [0, n_sink - 1], src))
+
+
+# ===========================================================================
+# Legacy shims == QuerySession planner, both strategies, exact
+# ===========================================================================
+@pytest.mark.parametrize("seed", SEEDS[:6])
+def test_legacy_shims_match_session_everywhere(seed):
+    """The old q1/q2/q10/q11 spellings and the new plan API answer from the
+    same planner — pin them against each other AND the seed reference under
+    forced-walk and forced-hopcache sessions."""
+    idx, sink, rng = _random_pipeline(seed)
+    walk = QuerySession(idx, ComposedIndex(idx), use_hopcache=False)
+    cache = QuerySession(idx, ComposedIndex(idx), hopcache_min_batch=1)
+    n_src = idx.datasets["src"].n_rows
+    n_sink = idx.datasets[sink].n_rows
+    for rows in _row_probes(rng, n_src):
+        want = ref_q1(idx, "src", rows, sink)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            got_shim = Q.q1_forward(idx, "src", rows, sink)
+        plan = prov(idx).source("src").rows(rows).forward().to(sink).plan()
+        np.testing.assert_array_equal(got_shim, want)
+        np.testing.assert_array_equal(walk.run(plan), want)
+        np.testing.assert_array_equal(cache.run(plan), want)
+    # batch probes fuse identically
+    probes = [_row_probes(rng, n_sink)[i] for i in range(3)] + [[]]
+    plan = prov(idx).source(sink).rows_batch(probes).backward().to("src").plan()
+    for p, w, c in zip(probes, walk.run(plan), cache.run(plan)):
+        want = ref_q2(idx, sink, p, "src")
+        np.testing.assert_array_equal(w, want)
+        np.testing.assert_array_equal(c, want)
+
+
+def _diamond_pipeline(seed=0):
+    """src feeds two branches re-joined downstream — TWO producer paths, the
+    shape the old unique-chain hop-cache could not compose."""
+    rng = np.random.default_rng(seed)
+    idx = ProvenanceIndex(f"diamond{seed}")
+    n = int(rng.integers(8, 20))
+    t = Table.from_columns({
+        "k": np.arange(n, dtype=np.float32),
+        "x": rng.normal(size=n).astype(np.float32),
+    })
+    s = track(t, idx, "src")
+    a = s.filter_rows(rng.random(n) < 0.75)
+    b = s.value_transform("x", "scale", factor=2.0)
+    j = a.join(b, on="k", how="inner").mark_sink()
+    return idx, j.dataset_id
+
+
+@pytest.mark.parametrize("backend", ["csr", "bitplane"])
+@pytest.mark.parametrize("seed", SEEDS[:5])
+def test_multipath_diamond_parity(seed, backend):
+    if backend == "csr":
+        pytest.importorskip("scipy")
+    idx, sink = _diamond_pipeline(seed)
+    ci = ComposedIndex(idx, backend=backend)
+    sess = QuerySession(idx, ci, hopcache_min_batch=1)
+    n_src = idx.datasets["src"].n_rows
+    n_sink = idx.datasets[sink].n_rows
+    for rows in ([], [0], [n_src - 1], list(range(n_src))):
+        want = ref_q1(idx, "src", rows, sink)
+        got = sess.run(prov(idx).source("src").rows(rows)
+                       .forward().to(sink).plan())
+        np.testing.assert_array_equal(got, want)
+    for rows in ([], [0], list(range(n_sink))):
+        want = ref_q2(idx, sink, rows, "src")
+        got = sess.run(prov(idx).source(sink).rows(rows)
+                       .backward().to("src").plan())
+        np.testing.assert_array_equal(got, want)
+    assert sess.counters["hopcache"] > 0         # really probed the relation
 
 
 # ===========================================================================
