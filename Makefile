@@ -1,7 +1,7 @@
 PY ?= python
 TIMEOUT ?= 900
 
-.PHONY: test test-fast bench-query ci
+.PHONY: test test-fast bench-query bench-quick ci
 
 # tier-1 verify (ROADMAP.md): the whole suite, stop at first failure
 test:
@@ -15,6 +15,11 @@ test-fast:
 
 bench-query:
 	env PYTHONPATH=src $(PY) benchmarks/bench_query.py
+
+# reduced configuration (small chain, 1 rep) — the CI smoke step; still
+# exercises every section incl. cost-model routing and writes BENCH_query.json
+bench-quick:
+	env PYTHONPATH=src $(PY) benchmarks/bench_query.py --quick
 
 # mirrors .github/workflows/ci.yml
 ci:

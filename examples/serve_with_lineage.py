@@ -28,9 +28,11 @@ rng = np.random.default_rng(1)
 prompts = rng.integers(1, cfg.vocab, (B, SP)).astype(np.int32)
 
 engine = ServeEngine(cfg, params, max_seq=SP + NEW, dtype=jnp.float32)
-# first session() call configures the planner: compose+cache the relation
-# as soon as a probe batch has >= 2 elements (serving batches are small here)
-engine.prov.session(hopcache_min_batch=2)
+# the shared session's cost model routes per plan — no batch-size knob to
+# tune: cheap adjacent (response -> request) hops stay on the walk, and
+# sustained probe demand against a distant pair amortizes a composition
+# and flips to the hop-cache on its own
+engine.prov.session()
 result = engine.generate(prompts, n_new=NEW,
                          request_ids=np.array([101, 102, 103, 104]),
                          record_provenance=True)

@@ -55,7 +55,15 @@ def path_tensors(index: ProvenanceIndex, src: str, dst: str) -> List[Tuple[OpRec
     Follows the (unique-producer) dataflow backward from ``dst`` and keeps the
     ops on a path that reaches ``src``.  For multi-input ops the slot records
     WHICH input lies on the path.
+
+    The reachable-from-``src`` set is computed ONCE up front (one pass over
+    the op list) instead of re-running ``index.path_exists`` per visited op —
+    the old per-hop rescans made this O(depth²) in pipeline length.
     """
+    reach = {src}
+    for op in index.ops:
+        if any(d in reach for d in op.input_ids):
+            reach.add(op.output_id)
     chain: List[Tuple[OpRecord, int]] = []
     cur = dst
     while cur != src:
@@ -64,7 +72,7 @@ def path_tensors(index: ProvenanceIndex, src: str, dst: str) -> List[Tuple[OpRec
         op = index.ops[index.producer[cur]]
         slot = None
         for k, in_id in enumerate(op.input_ids):
-            if in_id == src or index.path_exists(src, in_id):
+            if in_id in reach:
                 slot = k
                 break
         if slot is None:
@@ -106,10 +114,13 @@ def compose_pair_csr(a, b):
     return c
 
 
-def compose_pair(a_bits: np.ndarray, b_bits: np.ndarray, n_mid: int, use_pallas: bool = True) -> np.ndarray:
+def compose_pair(a_bits: np.ndarray, b_bits: np.ndarray, n_mid: int,
+                 use_pallas: Optional[bool] = True) -> np.ndarray:
     """(OR,AND)-compose packed relations A (R×mid) · B (mid×C) -> (R×C) packed.
 
     ``a_bits`` packs its columns (mid dim); ``b_bits`` is (mid, C/32).
+    ``use_pallas=None`` lets :func:`repro.kernels.ops.bitmatmul` apply its
+    kernel-launch guard (Pallas on TPU, jnp oracle elsewhere).
     """
     from repro.kernels import ops as K  # late import: keeps numpy-only paths jax-free
 
@@ -117,9 +128,14 @@ def compose_pair(a_bits: np.ndarray, b_bits: np.ndarray, n_mid: int, use_pallas:
 
 
 def plan_chain(dims: Sequence[Tuple[int, int]]) -> List[Tuple[int, int]]:
-    """Matrix-chain-order DP over relation shapes [(r0,c0),(r1,c1)..] where
-    c_j == r_{j+1}.  Returns the multiplication order as (i, j) merges over a
-    working list — standard O(n^3) DP, n is tiny (pipeline length)."""
+    """DIMS-ONLY matrix-chain-order DP (legacy).  Kept for callers that only
+    know shapes; :func:`compose_chain` now plans with the nnz-aware DP in
+    :mod:`repro.core.costmodel` (``plan_chain_stats``), which costs merges by
+    sparse-matmul work instead of dense dims.
+
+    Input is relation shapes [(r0,c0),(r1,c1)..] where c_j == r_{j+1}.
+    Returns the multiplication order as (i, j) merges over a working list —
+    standard O(n^3) DP, n is tiny (pipeline length)."""
     n = len(dims)
     if n <= 1:
         return []
@@ -175,9 +191,16 @@ def compose_chain(
             acc = compose_pair(acc, planes[j], rowdims[j], use_pallas=use_pallas)
         return acc
 
-    # matrix-chain DP over (rows, cols)
-    dims = list(zip(rowdims, coldims))
-    order = plan_chain(dims)
+    # Stats-propagating matrix-chain DP from the cost model, priced in THIS
+    # executor's backend: the merges below run compose_pair (packed
+    # bitplane), whose word-op cost scales with dims, so bitplane pricing —
+    # which provably reduces to the classic dims DP — is the correct model
+    # here.  The nnz-scaled spmm pricing binds where CSR composition
+    # actually runs: CostModel.composed_estimate / the auto hop-cache.
+    from repro.core.costmodel import RelStats, plan_chain_stats
+
+    stats = [RelStats.from_slot(op.tensor, slot) for op, slot in chain]
+    order = plan_chain_stats(stats, backend="bitplane")
     # working list of (plane, n_rows, n_cols)
     work: List[Optional[Tuple[np.ndarray, int, int]]] = [
         (planes[i], rowdims[i], coldims[i]) for i in range(len(planes))

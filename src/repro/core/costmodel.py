@@ -1,0 +1,367 @@
+"""Cost model for provenance query planning (ROADMAP items (c)/(e)).
+
+The paper's einsum composition (§IV) only wins when its one-time cost is
+amortized; before this module the planner used a blind batch-size heuristic
+(``hopcache_min_batch``) and the chain DP costed merges by *dense* dims even
+though the CSR backend's real cost scales with nnz.  This module centralizes
+
+* **per-relation statistics** (:class:`RelStats`) — rows, cols, nnz, density,
+  read straight off each :class:`~repro.core.provtensor.ProvTensor`'s COO /
+  CSR without materializing anything new;
+* **composition cost estimates** per backend — sparse boolean matmul cost
+  scaling with nnz (:func:`spmm_cost`) vs packed-bitplane word ops
+  (:func:`bitplane_cost`) — and the density threshold where the packed
+  backend overtakes CSR (:func:`pick_backend`);
+* an **nnz-aware matrix-chain DP** (:func:`plan_chain_stats`) replacing the
+  dims-only DP for einsum chain ordering;
+* the **planner model** (:class:`CostModel`) comparing estimated walk cost
+  (hops × batched gather) against amortized compose-then-probe cost, with
+  per-pair demand tracking so repeated small-batch streams eventually
+  amortize a composition the old heuristic never attempted.
+
+Cost units are *estimated nanoseconds on the host*; only ratios matter, the
+constants below were calibrated once against ``benchmarks/bench_query.py``
+on the CPU container and are deliberately coarse.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+__all__ = [
+    "RelStats",
+    "DENSITY_THRESHOLD",
+    "compose_est",
+    "spmm_cost",
+    "bitplane_cost",
+    "pick_backend",
+    "plan_chain_stats",
+    "CostModel",
+]
+
+# -- calibration constants (estimated ns; ratios are what matters) -----------
+C_HOP_OVERHEAD = 20_000.0     # python/numpy dispatch per walk hop
+C_MASK_ELEM = 2.0             # per (B, n) mask-stack element scanned per hop
+C_GATHER = 40.0               # per (frontier row, neighbor) pair gathered
+C_SPMM_OVERHEAD = 45_000.0    # per scipy sparse matmul call
+C_SPMM_FLOP = 25.0            # per sparse boolean-semiring flop
+C_WORD_OP = 3.0               # per uint32 word op in a bitplane compose
+C_PROBE_OVERHEAD = 30_000.0   # per composed-relation probe call
+
+# Density above which the packed-bitplane backend out-costs CSR composition:
+# csr flops ≈ 32·d_a·d_b × bitplane word ops, and a sparse flop costs ~8 word
+# ops of indexing — the crossover sits near sqrt(1/(32·8)) ≈ 0.06 geometric-
+# mean operand density.  Kept as one named constant so tests/docs can pin it.
+DENSITY_THRESHOLD = 0.06
+
+
+@dataclasses.dataclass(frozen=True)
+class RelStats:
+    """Statistics of one binary relation (op step or composed accumulation)."""
+
+    rows: int
+    cols: int
+    nnz: int
+
+    @property
+    def density(self) -> float:
+        cells = self.rows * self.cols
+        return self.nnz / cells if cells else 0.0
+
+    @property
+    def out_degree(self) -> float:
+        return self.nnz / self.rows if self.rows else 0.0
+
+    def est_bytes(self) -> int:
+        """Estimated bytes of the cheaper materialization (CSR indices+ptr
+        vs packed bitplane) — the retention check against a cache budget."""
+        csr = 8 * self.nnz + 4 * (self.rows + 1)
+        bitplane = 4 * self.rows * max((self.cols + 31) // 32, 1)
+        return min(csr, bitplane)
+
+    @staticmethod
+    def from_slot(tensor, slot: int) -> "RelStats":
+        """Stats of one op tensor's forward relation for one input slot —
+        O(nnz) count off the COO, no CSR/bitplane materialization."""
+        return RelStats(
+            rows=int(tensor.n_in[slot]),
+            cols=int(tensor.n_out),
+            nnz=tensor.slot_nnz(slot),
+        )
+
+
+def compose_est(a: RelStats, b: RelStats) -> RelStats:
+    """Estimated stats of ``a ∘ b`` (boolean-semiring product).
+
+    Expected path count is ``a.nnz · b.out_degree``; the union over paths
+    saturates the binary relation, modeled as ``cells·(1 - exp(-paths/cells))``
+    (independent-placement approximation) so density never exceeds 1.
+    """
+    rows, cols = a.rows, b.cols
+    cells = rows * cols
+    if cells == 0:
+        return RelStats(rows, cols, 0)
+    paths = a.nnz * b.out_degree
+    nnz = cells * -math.expm1(-paths / cells)
+    return RelStats(rows, cols, int(round(nnz)))
+
+
+def spmm_cost(a: RelStats, b: RelStats) -> float:
+    """CSR (OR,AND) matmul cost: scales with nnz, not dims."""
+    return C_SPMM_OVERHEAD + C_SPMM_FLOP * a.nnz * b.out_degree
+
+
+def bitplane_cost(a: RelStats, b: RelStats) -> float:
+    """Packed-bitplane compose cost: dense word ops over (rows, mid, cols/32)."""
+    words = a.rows * b.rows * max((b.cols + 31) // 32, 1)
+    return C_WORD_OP * words
+
+
+def union_est(a: RelStats, b: RelStats) -> RelStats:
+    """Estimated stats of ``a ∪ b`` — the sum over parallel DAG paths,
+    capped at full."""
+    cells = a.rows * a.cols
+    return RelStats(a.rows, a.cols, min(cells, a.nnz + b.nnz))
+
+
+def compose_cost_pair(a: RelStats, b: RelStats, backend: str,
+                      have_scipy: bool = True) -> float:
+    """Cost of one ``a ∘ b`` merge.  ``backend="auto"`` prices the merge in
+    the representation :func:`pick_backend` would choose for its estimated
+    result — the adaptive backend the composed hop-cache actually runs."""
+    if backend == "auto":
+        backend = pick_backend(compose_est(a, b).density, have_scipy)
+    return spmm_cost(a, b) if backend == "csr" else bitplane_cost(a, b)
+
+
+def pick_backend(density: float, have_scipy: bool = True) -> str:
+    """Backend for a relation of the given density: CSR below
+    :data:`DENSITY_THRESHOLD`, packed bitplane above it."""
+    if not have_scipy:
+        return "bitplane"
+    return "bitplane" if density >= DENSITY_THRESHOLD else "csr"
+
+
+def plan_chain_stats(stats: Sequence[RelStats], backend: str = "csr",
+                     have_scipy: bool = True) -> List[Tuple[int, int]]:
+    """nnz-aware matrix-chain DP over relation statistics.
+
+    Same merge-order contract as :func:`repro.core.compose.plan_chain`
+    (``(i, k)`` merges over a working list, innermost first), but merge cost
+    is the *backend's* estimate — nnz-scaled sparse matmul for ``csr``,
+    per-merge :func:`pick_backend` pricing for ``auto`` — and intermediate
+    stats propagate through :func:`compose_est` instead of assuming dense
+    dims.  A filter-heavy 0.1%-dense segment is therefore nearly free to
+    merge early, where the dims-only DP saw it as square.  (A pure
+    ``bitplane`` backend prices by dims alone — its word ops are
+    nnz-independent — and reduces to the classic DP.)
+    """
+    n = len(stats)
+    if n <= 1:
+        return []
+    # Canonical per-segment stats: est[i][j] = left-to-right fold of the
+    # segment.  The true relation is associative; compose_est's saturation
+    # is not, so fixing one fold order keeps the DP's optimal substructure
+    # exact (segment stats must not depend on the split being considered).
+    est: List[List[Optional[RelStats]]] = [[None] * n for _ in range(n)]
+    for i in range(n):
+        est[i][i] = stats[i]
+        for j in range(i + 1, n):
+            est[i][j] = compose_est(est[i][j - 1], stats[j])
+    INF = float("inf")
+    cost = [[0.0] * n for _ in range(n)]
+    split = [[0] * n for _ in range(n)]
+    for length in range(2, n + 1):
+        for i in range(0, n - length + 1):
+            j = i + length - 1
+            cost[i][j] = INF
+            for k in range(i, j):
+                c = (cost[i][k] + cost[k + 1][j]
+                     + compose_cost_pair(est[i][k], est[k + 1][j], backend,
+                                         have_scipy))
+                if c < cost[i][j]:
+                    cost[i][j] = c
+                    split[i][j] = k
+    order: List[Tuple[int, int]] = []
+
+    def emit(i: int, j: int) -> None:
+        if i == j:
+            return
+        k = split[i][j]
+        emit(i, k)
+        emit(k + 1, j)
+        order.append((i, k))
+
+    emit(0, n - 1)
+    return order
+
+
+# ---------------------------------------------------------------------------
+# The planner model
+# ---------------------------------------------------------------------------
+class CostModel:
+    """Walk-vs-compose cost estimates over one :class:`ProvenanceIndex`.
+
+    Chains are append-only (one producer per dataset), so per-pair chain
+    statistics are computed once and cached forever.  ``choose`` additionally
+    tracks cumulative probe *demand* per pair: the one-time composition cost
+    is amortized over the probes seen so far, so a stream of tiny probes to
+    one far pair flips from walking to composing once enough demand
+    accumulates — the case the old ``hopcache_min_batch`` heuristic
+    mis-routed forever.
+    """
+
+    def __init__(self, index, have_scipy: Optional[bool] = None) -> None:
+        from repro.core.compose import HAVE_SCIPY
+
+        self.index = index
+        self.have_scipy = HAVE_SCIPY if have_scipy is None else have_scipy
+        self._chains: Dict[Tuple[str, str], Optional[List[RelStats]]] = {}
+        self._composed: Dict[Tuple[str, str],
+                             Tuple[Optional[RelStats], float]] = {}
+        self._demand: Dict[Tuple[str, str], int] = {}
+
+    # -- chain statistics ----------------------------------------------------
+    def chain_stats(self, src: str, dst: str) -> Optional[List[RelStats]]:
+        """Per-op relation stats along the ``src`` → ``dst`` DAG region, in
+        topological order; ``None`` when no dataflow path exists.  Multi-input
+        ops aggregate their on-path slots (nnz sums; rows sum — the walk
+        frontier spans every contributing input)."""
+        key = (src, dst)
+        if key in self._chains:
+            return self._chains[key]
+        if src == dst:
+            self._chains[key] = []
+            return []
+        up_ids = {op.op_id for op in self.index.upstream_ops(dst)}
+        reach = {src}
+        chain: List[RelStats] = []
+        found = False
+        for op in self.index.downstream_ops(src):
+            if op.op_id not in up_ids:
+                continue
+            slots = [k for k, d in enumerate(op.input_ids) if d in reach]
+            if not slots:
+                continue
+            reach.add(op.output_id)
+            per = [RelStats.from_slot(op.tensor, k) for k in slots]
+            chain.append(RelStats(
+                rows=sum(s.rows for s in per),
+                cols=int(op.tensor.n_out),
+                nnz=sum(s.nnz for s in per),
+            ))
+            if op.output_id == dst:
+                found = True
+        result = chain if found else None
+        self._chains[key] = result
+        return result
+
+    # -- cost terms ----------------------------------------------------------
+    def walk_cost(self, chain: List[RelStats], n_probes: int,
+                  probe_rows: float) -> float:
+        """Hops × batched-gather.  Per hop: one python dispatch, a scan over
+        the full (B, n_out) mask stack (``neighbor_mask_many`` allocates and
+        scatters it whole — the dominant term for large batches), and a
+        gather proportional to (batch × frontier × out-degree); the frontier
+        grows multiplicatively along the chain, clamped by each dataset
+        size."""
+        frontier = max(probe_rows, 1.0)
+        cost = 0.0
+        for s in chain:
+            cost += (C_HOP_OVERHEAD
+                     + C_MASK_ELEM * n_probes * s.cols
+                     + C_GATHER * n_probes * frontier * s.out_degree)
+            frontier = min(float(s.cols), frontier * max(s.out_degree, 1e-9))
+            frontier = max(frontier, 1.0)
+        return cost
+
+    def composed_estimate(self, src: str, dst: str
+                          ) -> Tuple[Optional[RelStats], float]:
+        """(estimated composed ``src`` → ``dst`` relation stats, estimated
+        one-time composition cost), accumulated over the op DAG exactly the
+        way :class:`~repro.core.hopcache.ComposedIndex` composes it:
+        compose along each edge, UNION sibling-branch contributions at
+        multi-input ops.  Linearizing parallel branches into one chain would
+        multiply stats of relations whose dims don't even touch.  Cached per
+        pair (append-only DAG).  ``(None, 0.0)`` when no path."""
+        key = (src, dst)
+        cached = self._composed.get(key)
+        if cached is not None:
+            return cached
+        up_ids = {op.op_id for op in self.index.upstream_ops(dst)}
+        rels: Dict[str, Optional[RelStats]] = {src: None}  # None = identity
+        cost = 0.0
+        for op in self.index.downstream_ops(src):
+            if op.op_id not in up_ids:
+                continue
+            acc: Optional[RelStats] = None
+            for k, in_id in enumerate(op.input_ids):
+                if in_id not in rels:
+                    continue
+                step = RelStats.from_slot(op.tensor, k)
+                prefix = rels[in_id]
+                if prefix is None:
+                    contrib = step   # the op's own relation: no compose work
+                else:
+                    cost += compose_cost_pair(prefix, step, "auto",
+                                              self.have_scipy)
+                    contrib = compose_est(prefix, step)
+                acc = contrib if acc is None else union_est(acc, contrib)
+            if acc is not None:
+                rels[op.output_id] = acc
+        rel = rels.get(dst)
+        result = (rel, cost) if rel is not None else (None, 0.0)
+        self._composed[key] = result
+        return result
+
+    def probe_cost(self, rel: Optional[RelStats], n_probes: int,
+                   probe_rows: float) -> float:
+        """One batched probe of the composed relation: mask stacks in and
+        out, plus the selected-row gather."""
+        if rel is None:
+            return C_PROBE_OVERHEAD
+        return (C_PROBE_OVERHEAD
+                + C_MASK_ELEM * n_probes * (rel.rows + rel.cols)
+                + C_GATHER * n_probes * max(probe_rows, 1.0) * rel.out_degree)
+
+    # -- the decision ---------------------------------------------------------
+    def choose(self, src: str, dst: str, n_probes: int,
+               probe_rows: float = 1.0, note: bool = True,
+               budget_bytes: Optional[int] = None) -> Dict[str, object]:
+        """Walk or compose-then-probe for one plan against pair (src, dst).
+
+        Returns ``{"strategy", "walk_ns", "hopcache_ns", "compose_ns",
+        "demand", "retainable"}``.  ``note=False`` (EXPLAIN) leaves demand
+        untouched.  ``budget_bytes`` is the hop-cache's byte budget: a
+        composed relation estimated NOT to fit is served uncached and
+        recomposed on EVERY probe, so its composition cost is charged per
+        plan instead of amortized over demand — without this check a
+        too-small cache would flip to "hopcache" on accumulated demand and
+        then recompose the whole chain per query, forever.
+        """
+        chain = self.chain_stats(src, dst)
+        if chain is None or not chain:
+            return {"strategy": "walk", "walk_ns": 0.0, "hopcache_ns": 0.0,
+                    "compose_ns": 0.0, "demand": 0, "retainable": True}
+        pair = (src, dst)
+        demand = self._demand.get(pair, 0) + n_probes
+        if note:
+            self._demand[pair] = demand
+        walk = self.walk_cost(chain, n_probes, probe_rows)
+        rel, compose = self.composed_estimate(src, dst)
+        probe = self.probe_cost(rel, n_probes, probe_rows)
+        retainable = (budget_bytes is None or rel is None
+                      or rel.est_bytes() <= budget_bytes)
+        # amortize the one-time compose over the demand observed so far —
+        # but an unretainable relation is recomposed per plan: no amortization
+        amortize = max(demand, 1) if retainable else max(n_probes, 1)
+        hopcache = probe + compose * (n_probes / amortize)
+        return {
+            "strategy": "hopcache" if hopcache < walk else "walk",
+            "walk_ns": walk,
+            "hopcache_ns": hopcache,
+            "compose_ns": compose,
+            "demand": demand,
+            "retainable": retainable,
+        }

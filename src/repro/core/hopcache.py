@@ -8,12 +8,16 @@ batched queries between the same dataset pair become a single batched probe.
 
 Design points:
 
-* **Two backends.**  ``csr`` (host default, requires scipy) composes the
-  per-op CSR halves with sparse boolean matmul — composition cost scales
-  with nnz, matching the paper's sparse-tensor premise.  ``bitplane``
-  composes packed uint32 relation bitplanes via :func:`compose_pair` (the
-  :mod:`repro.kernels` bitmatmul — the Pallas path on TPU), and probes with
-  :func:`bitplane_or_reduce` / ``kernels.ops.bitplane_probe``.
+* **Per-entry backends.**  Every cached relation carries its own
+  representation tag (:class:`_Entry`): ``csr`` (scipy sparse boolean
+  matmul — composition cost scales with nnz) or ``bitplane`` (packed uint32
+  planes through :func:`compose_pair` — the :mod:`repro.kernels` bitmatmul,
+  Pallas on TPU).  ``backend="auto"`` (the host default) picks per pair by
+  the cost model's density threshold
+  (:data:`repro.core.costmodel.DENSITY_THRESHOLD`) and CONVERTS an
+  accumulation that densifies past it — a filter-heavy 0.1%-dense path stays
+  CSR while a join blow-up rides the packed planes, in one cache.
+  ``backend="csr"`` / ``backend="bitplane"`` force a uniform representation.
 * **Multi-path exact** — ``relation(src, dst)`` accumulates over the op DAG
   in topological order, UNIONING the contributions of every input slot whose
   dataset is reachable from ``src``.  On DAGs where ``src`` reaches ``dst``
@@ -26,6 +30,13 @@ Design points:
 * **Eviction-bounded** — an LRU keyed on ``(src, dst)`` with a byte budget
   (``memory_budget_bytes``), honoring the paper's minimal-memory goal: the
   cache trades recompute for memory and can be sized down to nothing.
+  Overwriting an existing key first releases the old entry's bytes.
+* **Fast backward probes** — bitplane entries lazily materialize a
+  TRANSPOSED plane (bytes accounted against the budget), so a backward probe
+  select-ORs just the probe's set rows (the same
+  :func:`bitplane_or_reduce` contraction as forward probes) costing
+  O(probe nnz × words) per probe instead of the old scan of every relation
+  row per probe.
 * **Append-safe** — the op DAG is append-only (one producer per dataset,
   enforced by ``ProvenanceIndex.record``), so composed relations between
   existing datasets stay exact when new ops are recorded and the cache is
@@ -37,6 +48,7 @@ engine); ``relation`` itself raises ``KeyError``.
 """
 from __future__ import annotations
 
+import dataclasses
 from collections import OrderedDict
 from typing import Dict, List, Optional, Tuple
 
@@ -49,9 +61,11 @@ from repro.core.compose import (
     op_bitplane,
     op_csr,
 )
+from repro.core.costmodel import CostModel, pick_backend
 from repro.core.pipeline import ProvenanceIndex
 from repro.core.provtensor import (
     bitplane_or_reduce,
+    bitplane_popcount,
     pack_bitplane,
     unpack_bitplane,
 )
@@ -59,10 +73,31 @@ from repro.core.provtensor import (
 __all__ = ["ComposedIndex"]
 
 
-def _rel_nbytes(rel) -> int:
-    if isinstance(rel, np.ndarray):
-        return int(rel.nbytes)
-    return int(rel.data.nbytes + rel.indices.nbytes + rel.indptr.nbytes)
+@dataclasses.dataclass
+class _Entry:
+    """One cached composed relation, tagged with its representation."""
+
+    backend: str              # "csr" | "bitplane"
+    rel: object               # scipy CSR (float32 ones) or packed uint32 plane
+    rows: int                 # |src|
+    cols: int                 # |dst|
+    nnz: int
+    relT: Optional[np.ndarray] = None  # lazy (cols, ⌈rows/32⌉) transposed plane
+
+    @property
+    def density(self) -> float:
+        cells = self.rows * self.cols
+        return self.nnz / cells if cells else 0.0
+
+    def nbytes(self) -> int:
+        if self.backend == "csr":
+            r = self.rel
+            total = int(r.data.nbytes + r.indices.nbytes + r.indptr.nbytes)
+        else:
+            total = int(self.rel.nbytes)
+        if self.relT is not None:
+            total += int(self.relT.nbytes)
+        return total
 
 
 class ComposedIndex:
@@ -77,8 +112,8 @@ class ComposedIndex:
         use_pallas: bool = False,
     ) -> None:
         if backend is None:
-            backend = "csr" if (HAVE_SCIPY and not use_pallas) else "bitplane"
-        if backend not in ("csr", "bitplane"):
+            backend = "bitplane" if use_pallas else "auto"
+        if backend not in ("auto", "csr", "bitplane"):
             raise ValueError(f"unknown backend {backend!r}")
         if backend == "csr" and not HAVE_SCIPY:
             raise ImportError("backend='csr' requires scipy")
@@ -86,12 +121,14 @@ class ComposedIndex:
         self.backend = backend
         self.memory_budget_bytes = int(memory_budget_bytes)
         self.use_pallas = use_pallas
-        self._cache: "OrderedDict[Tuple[str, str], object]" = OrderedDict()
+        self.costmodel = CostModel(index)
+        self._cache: "OrderedDict[Tuple[str, str], _Entry]" = OrderedDict()
         self._bytes = 0
         self._version = index.version
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.conversions = 0
 
     # -- cache plumbing -----------------------------------------------------
     def _sync(self) -> None:
@@ -107,57 +144,161 @@ class ComposedIndex:
         """
         self._version = self.index.version
 
-    def _insert(self, key: Tuple[str, str], rel) -> None:
-        nbytes = _rel_nbytes(rel)
-        if nbytes > self.memory_budget_bytes:
-            return  # larger than the whole budget: serve uncached
-        self._cache[key] = rel
-        self._cache.move_to_end(key)
-        self._bytes += nbytes
+    def _evict_over_budget(self) -> None:
         while self._bytes > self.memory_budget_bytes and len(self._cache) > 1:
             _, evicted = self._cache.popitem(last=False)
-            self._bytes -= _rel_nbytes(evicted)
+            self._bytes -= evicted.nbytes()
             self.evictions += 1
 
-    def _lookup(self, key: Tuple[str, str]):
-        rel = self._cache.get(key)
-        if rel is not None:
+    def _insert(self, key: Tuple[str, str], entry: _Entry) -> None:
+        nbytes = entry.nbytes()
+        if nbytes > self.memory_budget_bytes:
+            return  # larger than the whole budget: serve uncached
+        old = self._cache.pop(key, None)
+        if old is not None:
+            # overwrite releases the old entry's bytes FIRST — re-inserting a
+            # key must not double-count and force spurious evictions
+            self._bytes -= old.nbytes()
+        self._cache[key] = entry
+        self._bytes += nbytes
+        self._evict_over_budget()
+
+    def _lookup(self, key: Tuple[str, str]) -> Optional[_Entry]:
+        entry = self._cache.get(key)
+        if entry is not None:
             self._cache.move_to_end(key)
-        return rel
+        return entry
 
     # -- backend primitives ---------------------------------------------------
-    def _identity(self, n: int):
-        if self.backend == "csr":
+    def _resolve_backend(self, density: float) -> str:
+        """Representation for a relation of the given density (auto mode:
+        the cost model's threshold; forced modes: the forced backend)."""
+        if self.backend != "auto":
+            return self.backend
+        return pick_backend(density, HAVE_SCIPY)
+
+    def _identity_entry(self, n: int) -> _Entry:
+        density = 1.0 / n if n else 0.0
+        backend = self._resolve_backend(density)
+        if backend == "csr":
             import scipy.sparse as sp
 
-            return sp.identity(n, dtype=np.float32, format="csr")
+            return _Entry("csr", sp.identity(n, dtype=np.float32, format="csr"),
+                          n, n, n)
         words = np.zeros((n, max((n + 31) // 32, 1)), dtype=np.uint32)
         i = np.arange(n)
         words[i, i // 32] = np.left_shift(np.uint32(1), (i % 32).astype(np.uint32))
-        return words
+        return _Entry("bitplane", words, n, n, n)
 
-    def _op_step(self, op, slot):
-        if self.backend == "csr":
-            return op_csr(op.tensor, slot)
-        return op_bitplane(op.tensor, slot)
+    def _step_rel(self, op, slot: int, backend: str):
+        return op_csr(op.tensor, slot) if backend == "csr" \
+            else op_bitplane(op.tensor, slot)
 
-    def _compose(self, acc, step, n_mid: int):
-        if self.backend == "csr":
-            return compose_pair_csr(acc, step)
-        return compose_pair(acc, step, n_mid, use_pallas=self.use_pallas)
+    def _to_bitplane(self, entry: _Entry) -> _Entry:
+        if entry.backend == "bitplane":
+            return entry
+        self.conversions += 1
+        dense = np.asarray(entry.rel.toarray()) > 0
+        return _Entry("bitplane", pack_bitplane(dense),
+                      entry.rows, entry.cols, entry.nnz)
 
-    def _union(self, a, b):
-        """(OR)-union two relations — the sum over parallel DAG paths."""
-        if self.backend == "csr":
-            c = (a + b).tocsr()
-            c.data = np.ones_like(c.data)
-            return c
-        return np.bitwise_or(a, b)
+    def _to_csr(self, entry: _Entry) -> _Entry:
+        if entry.backend == "csr":
+            return entry
+        import scipy.sparse as sp
+
+        self.conversions += 1
+        dense = unpack_bitplane(entry.rel, entry.cols)
+        return _Entry("csr", sp.csr_matrix(dense.astype(np.float32)),
+                      entry.rows, entry.cols, entry.nnz)
+
+    def _extend(self, prefix: Optional[_Entry], op, slot: int) -> _Entry:
+        """``prefix ∘ op[slot]`` as a fresh entry (prefix None = identity)."""
+        t = op.tensor
+        rows = t.n_in[slot] if prefix is None else prefix.rows
+        if prefix is None:
+            backend = self._resolve_backend(t.slot_density(slot))
+            return _Entry(backend, self._step_rel(op, slot, backend),
+                          t.n_in[slot], t.n_out, t.slot_nnz(slot))
+        step = self._step_rel(op, slot, prefix.backend)
+        if prefix.backend == "csr":
+            rel = compose_pair_csr(prefix.rel, step)
+            nnz = int(rel.nnz)
+        else:
+            rel = compose_pair(prefix.rel, step, t.n_in[slot],
+                               use_pallas=self.use_pallas)
+            nnz = bitplane_popcount(rel)
+        return _Entry(prefix.backend, rel, rows, t.n_out, nnz)
+
+    def _union(self, a: _Entry, b: _Entry) -> _Entry:
+        """(OR)-union two relations — the sum over parallel DAG paths.
+        Mixed representations meet on the packed plane (the denser side)."""
+        if a.backend != b.backend:
+            a, b = self._to_bitplane(a), self._to_bitplane(b)
+        if a.backend == "csr":
+            rel = (a.rel + b.rel).tocsr()
+            rel.data = np.ones_like(rel.data)
+            return _Entry("csr", rel, a.rows, a.cols, int(rel.nnz))
+        rel = np.bitwise_or(a.rel, b.rel)
+        return _Entry("bitplane", rel, a.rows, a.cols, bitplane_popcount(rel))
+
+    def _settle(self, entry: _Entry) -> _Entry:
+        """auto mode: convert an accumulation whose observed density crossed
+        the cost model's threshold (densification → packed plane, and back)."""
+        if self.backend != "auto":
+            return entry
+        want = pick_backend(entry.density, HAVE_SCIPY)
+        if want == entry.backend:
+            return entry
+        return self._to_bitplane(entry) if want == "bitplane" \
+            else self._to_csr(entry)
 
     # -- the composed relation ----------------------------------------------
+    def _relation_entry(self, src: str, dst: str) -> _Entry:
+        self._sync()
+        cached = self._lookup((src, dst))
+        if cached is not None:
+            self.hits += 1
+            return cached
+        self.misses += 1
+        if src == dst:
+            entry = self._identity_entry(self.index.datasets[src].n_rows)
+            self._insert((src, dst), entry)
+            return entry
+        # ops on a src ~> dst path: downstream of src AND upstream of dst.
+        # (Reachable-from-src ancestors of any such op are themselves in the
+        # set, so the accumulation below never misses a contribution.)
+        up_ids = {op.op_id for op in self.index.upstream_ops(dst)}
+        chain = [
+            op for op in self.index.downstream_ops(src) if op.op_id in up_ids
+        ]
+        rels: Dict[str, Optional[_Entry]] = {src: None}  # None = identity
+        for op in chain:
+            out = op.output_id
+            hit = self._lookup((src, out))
+            if hit is not None:
+                self.hits += 1
+                rels[out] = hit
+                continue
+            acc: Optional[_Entry] = None
+            for k, in_id in enumerate(op.input_ids):
+                if in_id not in rels:
+                    continue  # input unreachable from src: contributes nothing
+                contrib = self._extend(rels[in_id], op, k)
+                acc = contrib if acc is None else self._union(acc, contrib)
+            if acc is None:
+                continue
+            acc = self._settle(acc)
+            rels[out] = acc
+            self._insert((src, out), acc)
+        if dst not in rels or rels[dst] is None:
+            raise KeyError(f"no dataflow path {src} -> {dst}")
+        return rels[dst]
+
     def relation(self, src: str, dst: str):
         """The composed ``src`` → ``dst`` relation (scipy CSR or packed
-        bitplane, per backend), from cache or composed incrementally.
+        bitplane, per the entry's backend), from cache or composed
+        incrementally.
 
         Accumulates over the op DAG in topological order restricted to ops
         that lie on some ``src`` → ``dst`` path: each op's output relation is
@@ -166,50 +307,11 @@ class ComposedIndex:
         intermediate ``(src, mid)`` accumulation is cached — later queries
         to further datasets reuse the prefix.
         """
-        self._sync()
-        cached = self._lookup((src, dst))
-        if cached is not None:
-            self.hits += 1
-            return cached
-        self.misses += 1
-        if src == dst:
-            rel = self._identity(self.index.datasets[src].n_rows)
-            self._insert((src, dst), rel)
-            return rel
-        # ops on a src ~> dst path: downstream of src AND upstream of dst.
-        # (Reachable-from-src ancestors of any such op are themselves in the
-        # set, so the accumulation below never misses a contribution.)
-        up_ids = {op.op_id for op in self.index.upstream_ops(dst)}
-        chain = [
-            op for op in self.index.downstream_ops(src) if op.op_id in up_ids
-        ]
-        rels: Dict[str, object] = {src: None}  # None = the implicit identity
-        for op in chain:
-            out = op.output_id
-            hit = self._lookup((src, out))
-            if hit is not None:
-                self.hits += 1
-                rels[out] = hit
-                continue
-            acc = None
-            for k, in_id in enumerate(op.input_ids):
-                if in_id not in rels:
-                    continue  # input unreachable from src: contributes nothing
-                step = self._op_step(op, k)
-                prefix = rels[in_id]
-                contrib = (
-                    step
-                    if prefix is None
-                    else self._compose(prefix, step, op.tensor.n_in[k])
-                )
-                acc = contrib if acc is None else self._union(acc, contrib)
-            if acc is None:
-                continue
-            rels[out] = acc
-            self._insert((src, out), acc)
-        if dst not in rels or rels[dst] is None:
-            raise KeyError(f"no dataflow path {src} -> {dst}")
-        return rels[dst]
+        return self._relation_entry(src, dst).rel
+
+    def relation_backend(self, src: str, dst: str) -> str:
+        """Which representation the (composed-on-demand) relation uses."""
+        return self._relation_entry(src, dst).backend
 
     # -- batched probes -------------------------------------------------------
     def _probe_masks(self, rows, n: int) -> Tuple[np.ndarray, bool]:
@@ -219,43 +321,74 @@ class ComposedIndex:
             return _as_mask_batch(rows, n), True
         return _as_mask(rows, n)[None, :], False
 
-    def _try_relation(self, src: str, dst: str):
-        """``relation`` for probes: no dataflow path -> None (probes answer
-        empty, matching the walking engine; ``relation`` itself still raises
-        so relation-materializing callers get the loud error)."""
+    def _try_relation(self, src: str, dst: str) -> Optional[_Entry]:
+        """``_relation_entry`` for probes: no dataflow path -> None (probes
+        answer empty, matching the walking engine; ``relation`` itself still
+        raises so relation-materializing callers get the loud error)."""
         try:
-            return self.relation(src, dst)
+            return self._relation_entry(src, dst)
         except KeyError:
             return None
 
+    def _entry_relT(self, key: Tuple[str, str], entry: _Entry) -> np.ndarray:
+        """The transposed plane of a bitplane entry, materialized lazily and
+        accounted against the byte budget (recomposed if later evicted).
+
+        A CACHED entry only retains its transposed plane when rel+relT still
+        fit the budget — ``_insert`` guarantees post-insert ``_bytes`` never
+        exceeds the budget, and a sole over-budget entry could never be
+        evicted (the eviction loop keeps one entry); otherwise the plane is
+        served transiently.
+        """
+        if entry.relT is not None:
+            return entry.relT
+        dense = unpack_bitplane(entry.rel, entry.cols)
+        relT = pack_bitplane(np.ascontiguousarray(dense.T))
+        if self._cache.get(key) is not entry:
+            entry.relT = relT       # transient entry: lives only this call
+        elif entry.nbytes() + relT.nbytes <= self.memory_budget_bytes:
+            entry.relT = relT
+            self._bytes += int(relT.nbytes)
+            self._evict_over_budget()
+        return relT
+
     def _forward_probe(self, masks: np.ndarray, src: str, dst: str) -> np.ndarray:
         """(B, |src|) bool -> (B, |dst|) bool through the composed relation."""
-        rel = self._try_relation(src, dst)
-        if rel is None:
+        entry = self._try_relation(src, dst)
+        if entry is None:
             return np.zeros(
                 (masks.shape[0], self.index.datasets[dst].n_rows), dtype=bool)
-        if self.backend == "csr":
-            return np.asarray(masks.astype(np.float32) @ rel) > 0
+        if entry.backend == "csr":
+            return np.asarray(masks.astype(np.float32) @ entry.rel) > 0
         if self.use_pallas:
             from repro.kernels import ops as K  # late import: host path stays jax-free
 
-            words = np.asarray(K.bitplane_probe(pack_bitplane(masks), rel))
+            words = np.asarray(K.bitplane_probe(pack_bitplane(masks), entry.rel))
         else:
-            n_src = self.index.datasets[src].n_rows
-            words = bitplane_or_reduce(pack_bitplane(masks), rel, n_src)
-        return unpack_bitplane(words, self.index.datasets[dst].n_rows)
+            words = bitplane_or_reduce(pack_bitplane(masks), entry.rel, entry.rows)
+        return unpack_bitplane(words, entry.cols)
 
     def _backward_probe(self, masks: np.ndarray, src: str, dst: str) -> np.ndarray:
         """(B, |dst|) bool -> (B, |src|) bool: rows of the composed relation
-        intersecting each probe set."""
-        rel = self._try_relation(src, dst)
-        if rel is None:
+        intersecting each probe set.
+
+        Bitplane entries answer through the lazily-cached TRANSPOSED plane:
+        selecting a probe's set rows from ``relT`` and OR-reducing them
+        costs O(probe nnz × words) per probe, instead of the old full
+        scan of every relation row per probe — it is the exact mirror of
+        the forward select-OR, so both directions share
+        :func:`bitplane_or_reduce`.
+        """
+        entry = self._try_relation(src, dst)
+        if entry is None:
             return np.zeros(
                 (masks.shape[0], self.index.datasets[src].n_rows), dtype=bool)
-        if self.backend == "csr":
-            return (rel @ masks.astype(np.float32).T).T > 0
-        words = pack_bitplane(masks)
-        return np.stack([(rel & w[None, :]).any(axis=1) for w in words], axis=0)
+        if entry.backend == "csr":
+            return (entry.rel @ masks.astype(np.float32).T).T > 0
+        relT = self._entry_relT((src, dst), entry)
+        words = bitplane_or_reduce(
+            pack_bitplane(masks[:, : entry.cols]), relT, entry.cols)
+        return unpack_bitplane(words, entry.rows)
 
     # -- mask-stack probes (the QuerySession entry points) ---------------------
     def contains(self, src: str, dst: str) -> bool:
@@ -308,12 +441,18 @@ class ComposedIndex:
 
     # -- introspection --------------------------------------------------------
     def stats(self) -> Dict[str, int]:
+        per_backend = {"csr": 0, "bitplane": 0}
+        for entry in self._cache.values():
+            per_backend[entry.backend] += 1
         return {
             "backend": self.backend,
             "entries": len(self._cache),
+            "entries_csr": per_backend["csr"],
+            "entries_bitplane": per_backend["bitplane"],
             "bytes": self._bytes,
             "budget_bytes": self.memory_budget_bytes,
             "hits": self.hits,
             "misses": self.misses,
             "evictions": self.evictions,
+            "conversions": self.conversions,
         }

@@ -40,6 +40,7 @@ __all__ = [
     "pack_mask",
     "unpack_mask",
     "bitplane_or_reduce",
+    "bitplane_popcount",
 ]
 
 
@@ -176,15 +177,27 @@ def bitplane_or_reduce(sel_words: np.ndarray, plane: np.ndarray, n_mid: int) -> 
     row b = OR of the plane rows whose selector bit is set.  This is the numpy
     twin of :func:`repro.kernels.ops.bitmatmul` (same contraction), used where
     kernel-launch latency would dominate the tiny host-side masks.
+
+    Per-probe cost is O(selected rows × W) — a buffered
+    ``np.bitwise_or.reduce`` over just the selected plane rows.  (A batch-
+    vectorized ``np.bitwise_or.at`` scatter was tried and measured 2-8x
+    SLOWER: ufunc.at is unbuffered and pays far more per element than the
+    buffered reduce; the per-probe temp here also stays bounded at one
+    probe's selection, never (B, n_mid, W).)
     """
     sel_words = np.atleast_2d(np.asarray(sel_words, dtype=np.uint32))
     sel = unpack_bitplane(sel_words, n_mid)                   # (B, n_mid) bool
     out = np.zeros((sel.shape[0], plane.shape[1]), dtype=np.uint32)
-    for b in range(sel.shape[0]):  # per-probe cost is O(selected rows), and
-        picked = plane[sel[b]]     # B is small — never densify (B, n_mid, W)
+    for b in range(sel.shape[0]):
+        picked = plane[sel[b]]
         if picked.shape[0]:
             out[b] = np.bitwise_or.reduce(picked, axis=0)
     return out
+
+
+def bitplane_popcount(words: np.ndarray) -> int:
+    """Number of set bits in a packed bitplane (the relation's nnz)."""
+    return int(np.unpackbits(np.ascontiguousarray(words).view(np.uint8)).sum())
 
 
 # ---------------------------------------------------------------------------
@@ -202,6 +215,7 @@ class ProvTensor:
     _bwd: Optional[list] = dataclasses.field(default=None, repr=False)
     _bpf: Optional[list] = dataclasses.field(default=None, repr=False)
     _bpb: Optional[list] = dataclasses.field(default=None, repr=False)
+    _slot_nnz: Optional[list] = dataclasses.field(default=None, repr=False)
 
     # -- construction -------------------------------------------------------
     def __post_init__(self) -> None:
@@ -218,6 +232,26 @@ class ProvTensor:
     @property
     def nnz(self) -> int:
         return int(self.coo.shape[0])
+
+    # -- per-slot relation statistics (the cost model reads these) -----------
+    def slot_nnz(self, inp: int) -> int:
+        """nnz of the input-``inp`` → output relation: COO entries whose slot
+        index is a real link (not the -1 sentinel).  Memoized O(nnz) count —
+        no CSR or bitplane is materialized."""
+        if self._slot_nnz is None:
+            self._slot_nnz = [None] * self.k
+        if self._slot_nnz[inp] is None:
+            self._slot_nnz[inp] = int(np.count_nonzero(self.coo[:, 1 + inp] >= 0))
+        return self._slot_nnz[inp]
+
+    def slot_shape(self, inp: int) -> tuple:
+        """(rows, cols) of the input-``inp`` forward relation."""
+        return (self.n_in[inp], self.n_out)
+
+    def slot_density(self, inp: int) -> float:
+        """nnz / (rows·cols) of the input-``inp`` forward relation."""
+        cells = self.n_in[inp] * self.n_out
+        return self.slot_nnz(inp) / cells if cells else 0.0
 
     # -- the paper's optimized representation (bidirectional CSR) -----------
     def fwd(self, inp: int) -> CSR:

@@ -42,18 +42,23 @@ def bitmatmul(
     block_nw: int = 128,
     block_k: int = 256,
     interpret: bool | None = None,
-    use_pallas: bool = True,
+    use_pallas: bool | None = True,
 ):
     """(OR,AND)-compose packed relations: (M, K/32) x (K, N/32) -> (M, N/32).
 
     ``use_pallas=False`` falls back to the jnp oracle (used for very small
     relations where kernel launch overhead dominates, and on hosts where
     interpret-mode cost would be prohibitive for large shapes).
+    ``use_pallas=None`` resolves automatically — the cost model's
+    kernel-launch guard: the Pallas kernel on TPU, the oracle elsewhere
+    (interpret-mode emulation is never the cheaper backend on host).
     """
     a_bits = jnp.asarray(a_bits, dtype=jnp.uint32)
     b_bits = jnp.asarray(b_bits, dtype=jnp.uint32)
     m, kw = a_bits.shape
     k, nw = b_bits.shape
+    if use_pallas is None:
+        use_pallas = on_tpu()
     if not ((kw - 1) * 32 < k <= kw * 32):
         raise ValueError(f"contraction mismatch: A packs {kw * 32} cols, B has {k} rows")
     # Zero-pad B's contraction rows up to A's packed width (zero rows are inert).
@@ -77,7 +82,7 @@ def bitmatmul(
     return out[:m, :nw]
 
 
-def bitplane_probe(mask_bits, plane_bits, *, use_pallas: bool = True, **kw):
+def bitplane_probe(mask_bits, plane_bits, *, use_pallas: bool | None = True, **kw):
     """Batched lineage probe of a composed relation (the hop-cache hot path).
 
     ``mask_bits`` (B, ⌈K/32⌉) packs B row-selector sets; ``plane_bits``

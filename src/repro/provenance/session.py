@@ -19,9 +19,17 @@ plan shape            strategy
 ``cells`` / ``how``   vectorized walk (attr bitplanes / hop traces live
                       on the per-op pass)
 record-level          composed-relation probe when the relation is already
-                      cached or the probe batch is large enough to amortize
-                      composition (``hopcache_min_batch``); walk otherwise
+                      cached, or when the cost model estimates amortized
+                      compose-then-probe under the walk; walk otherwise
 ====================  ====================================================
+
+Record-level routing is driven by :class:`repro.core.costmodel.CostModel`
+(shared with the hop-cache): per-pair chain statistics feed an estimated
+walk cost (hops × batched gather) vs composition cost amortized over the
+cumulative probe demand seen for the pair — so a stream of tiny probes to
+one far pair flips to the hop-cache once demand accumulates.  The legacy
+``hopcache_min_batch`` batch-size heuristic is DEPRECATED but still honored
+when passed explicitly (with a ``DeprecationWarning``).
 
 ``run_many`` additionally **fuses** submitted plans that share a fuse key
 (kind, direction, endpoints, via/anchor, how, attr-presence) into ONE packed
@@ -31,7 +39,8 @@ physical execution answers the union, and results split back per plan.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+import warnings
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -54,12 +63,24 @@ class QuerySession:
         composed=None,
         *,
         use_hopcache: bool = True,
-        hopcache_min_batch: int = 8,
+        hopcache_min_batch: Optional[int] = None,
     ) -> None:
         self.index = index
         self.composed = composed if composed is not None else index.composed()
         self.use_hopcache = use_hopcache
-        self.hopcache_min_batch = int(hopcache_min_batch)
+        if hopcache_min_batch is not None:
+            warnings.warn(
+                "hopcache_min_batch is deprecated: the QuerySession now "
+                "routes record-level plans with a cost model (see "
+                "repro.core.costmodel); passing hopcache_min_batch keeps the "
+                "legacy batch-size heuristic for this session.",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+            hopcache_min_batch = int(hopcache_min_batch)
+        self.hopcache_min_batch = hopcache_min_batch
+        # shared with the hop-cache so chain statistics are computed once
+        self.costmodel = self.composed.costmodel
         self.counters: Dict[str, int] = {
             "plans": 0,
             "walk": 0,
@@ -70,34 +91,90 @@ class QuerySession:
         }
 
     # -- planning --------------------------------------------------------------
-    def _strategy(self, plan: QueryPlan) -> str:
+    def _plan_pairs(self, plan: QueryPlan) -> Optional[List[Tuple[str, str]]]:
+        """EVERY (upstream, downstream) relation the hop-cache strategy would
+        probe for this plan — two legs for the co-queries, matching their
+        executors — or None when the plan cannot route through the
+        hop-cache."""
+        if plan.kind == "record":
+            return [
+                (plan.source, plan.target)
+                if plan.direction == "fwd"
+                else (plan.target, plan.source)
+            ]
+        if plan.kind == "co_contributory":
+            if plan.via is None:
+                return None  # per-probe via needs the walk's reach map
+            return [(plan.source, plan.via), (plan.target, plan.via)]
+        # co_dependency: back-probe (d1, d2) then forward-probe (d1, d3)
+        return [(plan.anchor, plan.source), (plan.anchor, plan.target)]
+
+    def _choose(self, plan: QueryPlan, note: bool) -> Optional[Dict[str, object]]:
+        """The cost model's verdict for a cost-routable plan — summed over
+        every relation leg the hopcache strategy would compose (pricing only
+        one leg of a co-query would compare the walk against half the real
+        cost) — or None when the decision never reaches the cost model."""
+        if self.hopcache_min_batch is not None:
+            return None
+        pairs = self._plan_pairs(plan)
+        if pairs is None:
+            return None
+        uncached = [p for p in pairs if not self.composed.contains(*p)]
+        if not uncached:
+            return None  # every leg already composed: contains-path decides
+        probe_rows = (float(plan.rows.sum()) / max(plan.n_probes, 1)
+                      if plan.rows is not None else 1.0)
+        legs = [
+            self.costmodel.choose(
+                p[0], p[1], plan.n_probes, probe_rows, note=note,
+                budget_bytes=self.composed.memory_budget_bytes)
+            for p in uncached
+        ]
+        walk = sum(leg["walk_ns"] for leg in legs)
+        hopcache = sum(leg["hopcache_ns"] for leg in legs)
+        return {
+            "strategy": "hopcache" if hopcache < walk else "walk",
+            "walk_ns": walk,
+            "hopcache_ns": hopcache,
+            "compose_ns": sum(leg["compose_ns"] for leg in legs),
+            "demand": min(leg["demand"] for leg in legs),
+            "retainable": all(leg["retainable"] for leg in legs),
+            "legs": legs if len(legs) > 1 else None,
+        }
+
+    def _strategy(self, plan: QueryPlan, note: bool = True) -> str:
         if plan.kind == "transformations":
             return "meta"
         if plan.kind == "cells" or plan.how:
             return "walk"  # attr bitplanes / hop traces live on the walk
         if not self.use_hopcache:
             return "walk"
-        if plan.kind == "record":
-            pair = (
-                (plan.source, plan.target)
-                if plan.direction == "fwd"
-                else (plan.target, plan.source)
-            )
-        elif plan.kind == "co_contributory":
-            if plan.via is None:
-                return "walk"  # per-probe via needs the walk's reach map
-            pair = (plan.source, plan.via)
-        else:  # co_dependency
-            pair = (plan.anchor, plan.source)
-        if self.composed.contains(*pair):
-            return "hopcache"  # relation already composed: probe it
-        if plan.n_probes >= self.hopcache_min_batch:
-            return "hopcache"  # batch large enough to amortize composition
-        return "walk"
+        pairs = self._plan_pairs(plan)
+        if pairs is None:
+            return "walk"
+        if all(self.composed.contains(*p) for p in pairs):
+            return "hopcache"  # relations already composed: probe them
+        if self.hopcache_min_batch is not None:  # deprecated legacy heuristic
+            return ("hopcache" if plan.n_probes >= self.hopcache_min_batch
+                    else "walk")
+        return self._choose(plan, note)["strategy"]
 
-    def explain(self, plan: QueryPlan) -> Dict[str, str]:
-        """The planner's choice for ``plan``, without executing it."""
-        return {"plan": plan.describe(), "strategy": self._strategy(plan)}
+    def explain(self, plan: QueryPlan) -> Dict[str, object]:
+        """The planner's choice for ``plan``, without executing it (and
+        without advancing the cost model's per-pair demand counters).
+        Includes the cost model's estimates when they decided the routing.
+        """
+        out: Dict[str, object] = {"plan": plan.describe()}
+        cost = None
+        if plan.kind not in ("transformations", "cells") and not plan.how \
+                and self.use_hopcache:
+            cost = self._choose(plan, note=False)
+        if cost is not None:
+            out["strategy"] = cost["strategy"]
+            out["cost"] = cost
+        else:
+            out["strategy"] = self._strategy(plan, note=False)
+        return out
 
     # -- execution -------------------------------------------------------------
     def run(self, plan: QueryPlan):

@@ -1,0 +1,89 @@
+"""Three-way composition-backend parity on CPU (tier-1 CI).
+
+The cost model now routes compositions onto either the scipy-CSR backend or
+the packed-bitplane backend (``kernels.ops.bitmatmul`` — the Pallas kernel
+in interpret mode on CPU, the jnp oracle otherwise).  These tests pin all
+three against each other on randomized small shapes, including
+non-multiple-of-32 contraction and output dims, so the backend the planner
+selects is exact regardless of representation.
+
+Unlike :mod:`tests.test_kernels` this file needs no hypothesis — it must
+always run in tier-1.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("scipy")
+import scipy.sparse as sp
+
+from repro.core.compose import compose_pair_csr
+from repro.kernels import ops as K
+from repro.kernels import ref as R
+
+
+def _csr(dense: np.ndarray):
+    return sp.csr_matrix(dense.astype(np.float32))
+
+
+def _three_way(A: np.ndarray, B: np.ndarray) -> None:
+    m, k = A.shape
+    k2, n = B.shape
+    assert k == k2
+    a_b = np.asarray(R.pack_bits(A))
+    b_b = np.asarray(R.pack_bits(B))
+    # 1. Pallas kernel (interpret mode on CPU), small blocks to hit the grid
+    pallas = np.asarray(R.unpack_bits(
+        K.bitmatmul(a_b, b_b, block_m=8, block_nw=8, block_k=32,
+                    interpret=True, use_pallas=True), n))
+    # 2. jnp oracle
+    oracle = np.asarray(R.unpack_bits(R.bitmatmul_ref(a_b, b_b), n))
+    # 3. scipy-CSR backend (the hop-cache's sparse compose path)
+    csr = np.asarray(compose_pair_csr(_csr(A), _csr(B)).todense()) > 0
+    want = (A.astype(np.int64) @ B.astype(np.int64)) > 0
+    np.testing.assert_array_equal(pallas, want)
+    np.testing.assert_array_equal(oracle, want)
+    np.testing.assert_array_equal(csr, want)
+
+
+@pytest.mark.parametrize("m,k,n", [
+    (1, 1, 1),          # degenerate
+    (5, 17, 9),         # nothing aligned
+    (8, 32, 40),        # aligned contraction
+    (3, 70, 33),        # k and n both off-lane
+    (40, 31, 64),       # k one short of a word
+])
+@pytest.mark.parametrize("density", [0.03, 0.4, 0.9])
+def test_bitmatmul_three_way_parity(m, k, n, density):
+    rng = np.random.default_rng(m * 10_000 + k * 100 + n)
+    A = rng.random((m, k)) < density
+    B = rng.random((k, n)) < density
+    _three_way(A, B)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_bitmatmul_three_way_randomized(seed):
+    rng = np.random.default_rng(1234 + seed)
+    m, k, n = (int(rng.integers(1, 60)) for _ in range(3))
+    A = rng.random((m, k)) < float(rng.uniform(0.05, 0.6))
+    B = rng.random((k, n)) < float(rng.uniform(0.05, 0.6))
+    _three_way(A, B)
+
+
+def test_bitmatmul_empty_and_full():
+    A = np.zeros((7, 19), dtype=bool)
+    B = np.ones((19, 11), dtype=bool)
+    _three_way(A, B)
+    A[2, 3] = True
+    _three_way(A, B)
+
+
+def test_use_pallas_none_resolves_off_tpu_to_oracle():
+    """The kernel-launch guard: use_pallas=None must answer exactly like the
+    oracle (and, on this CPU container, route to it)."""
+    rng = np.random.default_rng(0)
+    A = rng.random((9, 37)) < 0.3
+    B = rng.random((37, 21)) < 0.3
+    a_b, b_b = np.asarray(R.pack_bits(A)), np.asarray(R.pack_bits(B))
+    got = np.asarray(K.bitmatmul(a_b, b_b, use_pallas=None))
+    want = np.asarray(R.bitmatmul_ref(a_b, b_b))
+    np.testing.assert_array_equal(got, want)

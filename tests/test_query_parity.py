@@ -310,6 +310,14 @@ def _row_probes(rng, n):
 SEEDS = list(range(10))
 
 
+def _forced_hopcache_session(idx, ci) -> QuerySession:
+    """Pin the hop-cache strategy via the legacy (deprecated) min-batch knob
+    without spamming DeprecationWarnings through every suite run."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return QuerySession(idx, ci, hopcache_min_batch=1)
+
+
 # ===========================================================================
 # Record-level parity (Q1/Q2/Q5/Q6)
 # ===========================================================================
@@ -458,7 +466,7 @@ def test_batch_matches_singles(seed):
 # ===========================================================================
 # Hop-cache parity
 # ===========================================================================
-@pytest.mark.parametrize("backend", ["csr", "bitplane"])
+@pytest.mark.parametrize("backend", ["csr", "bitplane", "auto"])
 @pytest.mark.parametrize("seed", SEEDS)
 def test_hopcache_parity(seed, backend):
     idx, sink, rng = _random_pipeline(seed)
@@ -487,6 +495,32 @@ def test_hopcache_parity(seed, backend):
         rows = [0]
         np.testing.assert_array_equal(
             ci.q1_forward("src", rows, mid), ref_q1(idx, "src", rows, mid))
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_auto_backend_matches_both_forced_backends(seed):
+    """``backend='auto'`` (per-pair cost-model selection, mixed entries in
+    one cache) answers EXACTLY like both forced backends on the randomized
+    pipeline suite — forward, backward, and batched probes."""
+    pytest.importorskip("scipy")
+    idx, sink, rng = _random_pipeline(seed)
+    auto = ComposedIndex(idx, backend="auto")
+    csr = ComposedIndex(idx, backend="csr")
+    bp = ComposedIndex(idx, backend="bitplane")
+    n_src = idx.datasets["src"].n_rows
+    n_sink = idx.datasets[sink].n_rows
+    for rows in _row_probes(rng, n_src):
+        a = auto.q1_forward("src", rows, sink)
+        np.testing.assert_array_equal(a, csr.q1_forward("src", rows, sink))
+        np.testing.assert_array_equal(a, bp.q1_forward("src", rows, sink))
+    probes = [_row_probes(rng, n_sink)[i] for i in range(3)] + [[]]
+    for a, c, b in zip(auto.q2_backward(sink, probes, "src"),
+                       csr.q2_backward(sink, probes, "src"),
+                       bp.q2_backward(sink, probes, "src")):
+        np.testing.assert_array_equal(a, c)
+        np.testing.assert_array_equal(a, b)
+    st = auto.stats()
+    assert st["entries"] == st["entries_csr"] + st["entries_bitplane"]
 
 
 @pytest.mark.parametrize("seed", SEEDS[:5])
@@ -618,7 +652,7 @@ def test_legacy_shims_match_session_everywhere(seed):
     forced-walk and forced-hopcache sessions."""
     idx, sink, rng = _random_pipeline(seed)
     walk = QuerySession(idx, ComposedIndex(idx), use_hopcache=False)
-    cache = QuerySession(idx, ComposedIndex(idx), hopcache_min_batch=1)
+    cache = _forced_hopcache_session(idx, ComposedIndex(idx))
     n_src = idx.datasets["src"].n_rows
     n_sink = idx.datasets[sink].n_rows
     for rows in _row_probes(rng, n_src):
@@ -656,14 +690,14 @@ def _diamond_pipeline(seed=0):
     return idx, j.dataset_id
 
 
-@pytest.mark.parametrize("backend", ["csr", "bitplane"])
+@pytest.mark.parametrize("backend", ["csr", "bitplane", "auto"])
 @pytest.mark.parametrize("seed", SEEDS[:5])
 def test_multipath_diamond_parity(seed, backend):
     if backend == "csr":
         pytest.importorskip("scipy")
     idx, sink = _diamond_pipeline(seed)
     ci = ComposedIndex(idx, backend=backend)
-    sess = QuerySession(idx, ci, hopcache_min_batch=1)
+    sess = _forced_hopcache_session(idx, ci)
     n_src = idx.datasets["src"].n_rows
     n_sink = idx.datasets[sink].n_rows
     for rows in ([], [0], [n_src - 1], list(range(n_src))):

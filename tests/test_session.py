@@ -25,8 +25,19 @@ def walk_session(idx) -> QuerySession:
     return QuerySession(idx, ComposedIndex(idx), use_hopcache=False)
 
 
+def forced_hopcache_session(idx, composed=None, **kw) -> QuerySession:
+    """Session pinned to the hop-cache strategy via the legacy min-batch
+    knob — deliberately deprecated usage, so silence the warning here
+    instead of spamming every suite run."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return QuerySession(
+            idx, composed if composed is not None else ComposedIndex(idx, **kw),
+            hopcache_min_batch=1)
+
+
 def cache_session(idx, **kw) -> QuerySession:
-    return QuerySession(idx, ComposedIndex(idx, **kw), hopcache_min_batch=1)
+    return forced_hopcache_session(idx, **kw)
 
 
 # ===========================================================================
@@ -185,7 +196,7 @@ def test_multipath_diamond_hopcache_matches_walk(backend):
             ci.q2_backward(sink, rows, "src"), tqp.ref_q2(idx, sink, rows, "src"))
     # the relation really is the sum over BOTH branch paths: each branch
     # alone under-counts the sink rows reached from a full-source probe
-    sess = QuerySession(idx, ci, hopcache_min_batch=1)
+    sess = forced_hopcache_session(idx, composed=ci)
     full = sess.run(prov(idx).source("src").rows(list(range(n_src)))
                     .forward().to(sink).plan())
     assert sess.counters["hopcache"] > 0
