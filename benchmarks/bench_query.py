@@ -121,35 +121,45 @@ def run(quick: bool = False):
     batch = run_batch_vs_walk(quick=quick)
     fused = run_fused_batch(quick=quick)
     costmodel = run_costmodel(quick=quick)
+    federation = run_federation(quick=quick)
     return {"table": "Fig4/5", "fig4_ms": fig4, "fig5_ms": fig5, "batch": batch,
-            "fused_batch": fused, "costmodel": costmodel}
+            "fused_batch": fused, "costmodel": costmodel,
+            "federation": federation}
 
 
 # ---------------------------------------------------------------------------
 # Batched multi-hop Q1/Q2: per-hop walk vs batch walk vs composed hop-cache
 # ---------------------------------------------------------------------------
-def build_deep_chain(seed=0, n=4000, n_ops=12):
-    """A >=10-op chain so multi-hop composition has distance to amortize."""
+def _chain_step(d, i):
+    """Op ``i`` of the deterministic deep chain (replayable: the same step
+    sequence builds the merged AND the federated variants identically)."""
+    kind = i % 4
+    if kind == 0:
+        return d.value_transform("x", "scale", factor=1.01)
+    if kind == 1:
+        mask = np.ones(d.table.n_rows, dtype=bool)
+        mask[i :: 17] = False                         # drop a sliver per hop
+        return d.filter_rows(mask)
+    if kind == 2:
+        return d.normalize(["x"], kind="zscore")
+    return d.oversample(frac=0.05, seed=i)
+
+
+def _chain_table(seed, n):
     rng = np.random.default_rng(seed)
-    idx = ProvenanceIndex("deep-chain")
-    t = Table.from_columns({
+    return Table.from_columns({
         "k": rng.integers(0, n // 2, n).astype(np.float32),
         "x": rng.normal(size=n).astype(np.float32),
         "g": rng.integers(0, 4, n).astype(np.float32),
     })
-    d = track(t, idx, "chain_src")
+
+
+def build_deep_chain(seed=0, n=4000, n_ops=12):
+    """A >=10-op chain so multi-hop composition has distance to amortize."""
+    idx = ProvenanceIndex("deep-chain")
+    d = track(_chain_table(seed, n), idx, "chain_src")
     for i in range(n_ops):
-        kind = i % 4
-        if kind == 0:
-            d = d.value_transform("x", "scale", factor=1.01)
-        elif kind == 1:
-            mask = np.ones(d.table.n_rows, dtype=bool)
-            mask[i :: 17] = False                     # drop a sliver per hop
-            d = d.filter_rows(mask)
-        elif kind == 2:
-            d = d.normalize(["x"], kind="zscore")
-        else:
-            d = d.oversample(frac=0.05, seed=i)
+        d = _chain_step(d, i)
     d.mark_sink()
     return idx, d.dataset_id
 
@@ -451,6 +461,103 @@ def run_costmodel(quick: bool = False):
 
     out["backward_probe"] = run_backward_probe_microbench(idx, src, sink,
                                                          quick=quick)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Federation: batched cross-index trace-to-source vs the merged baseline
+# ---------------------------------------------------------------------------
+def build_split_chain(seed=0, n=4000, n_ops=12):
+    """The SAME deep chain split at the midpoint into a prep index and a
+    serve index glued by an identity catalog link — the federated twin of
+    :func:`build_deep_chain`."""
+    from repro.provenance import ProvCatalog
+
+    cut = n_ops // 2
+    prep = ProvenanceIndex("prep")
+    d = track(_chain_table(seed, n), prep, "chain_src")
+    for i in range(cut):
+        d = _chain_step(d, i)
+    boundary = d.dataset_id
+    serve = ProvenanceIndex("serve")
+    s = track(d.table, serve, "ingest")
+    for i in range(cut, n_ops):
+        s = _chain_step(s, i)
+    s.mark_sink()
+    catalog = ProvCatalog("bench-fed")
+    catalog.register("prep", prep).register("serve", serve)
+    catalog.link(f"prep/{boundary}", "serve/ingest")
+    return catalog, f"serve/{s.dataset_id}", "prep/chain_src"
+
+
+def run_federation(quick: bool = False, n_probes: int = 64):
+    """The redesign's headline scenario: a BATCH of cross-index
+    trace-to-source queries (serve sink rows -> prep raw rows) through the
+    FederatedSession — plan split at the boundary, one cost-model-routed
+    pass per side, mask stitch between — against the merged-single-index
+    baseline answering the identical batch with one composed-relation
+    probe.  PAIRED per-round ratios (contender order alternating) keep the
+    headline number robust to shared-host load drift."""
+    n = 1000 if quick else 4000
+    n_ops = 10 if quick else 14
+    B = 8 if quick else n_probes
+    reps = 8 if quick else 24
+    merged_idx, merged_sink = build_deep_chain(n=n, n_ops=n_ops)
+    catalog, fed_sink, fed_src = build_split_chain(n=n, n_ops=n_ops)
+
+    n_sink = merged_idx.datasets[merged_sink].n_rows
+    rng = np.random.default_rng(13)
+    probes = [sorted(rng.choice(n_sink, size=4, replace=False).tolist())
+              for _ in range(B)]
+
+    merged_sess = QuerySession(merged_idx,
+                               ComposedIndex(merged_idx,
+                                             memory_budget_bytes=256 << 20))
+    fed_sess = catalog.session()
+
+    def run_merged():
+        return merged_sess.run(prov(merged_idx).source(merged_sink)
+                               .rows_batch(probes).backward()
+                               .to("chain_src").plan())
+
+    def run_fed():
+        return fed_sess.run(prov(catalog).source(fed_sink)
+                            .rows_batch(probes).backward()
+                            .to(fed_src).plan())
+
+    # warm-up: both sides compose whatever their cost models choose, and
+    # the sanity check pins byte-identical answers
+    t0 = time.perf_counter()
+    fed_first = run_fed()
+    fed_cold_ms = (time.perf_counter() - t0) * 1e3
+    for a, b in zip(run_merged(), fed_first):
+        np.testing.assert_array_equal(a, b)
+    run_merged(), run_fed()
+
+    raw = {"merged": [], "federated": []}
+    for r in range(reps):
+        order = (("merged", run_merged), ("federated", run_fed))
+        if r % 2:
+            order = order[::-1]
+        for name, fn in order:
+            t0 = time.perf_counter()
+            fn()
+            raw[name].append((time.perf_counter() - t0) * 1e3)
+    merged_ms = float(np.median(raw["merged"]))
+    fed_ms = float(np.median(raw["federated"]))
+    overhead = float(np.median(np.array(raw["federated"])
+                               / np.array(raw["merged"])))
+    out = {
+        "n_ops": n_ops, "n_probes": B,
+        "merged_ms": merged_ms, "federated_ms": fed_ms,
+        "federated_cold_ms": fed_cold_ms,
+        "overhead_ratio": overhead,
+        "federation_stats": fed_sess.stats()["federation"],
+    }
+    print(f"\n== federation: batched trace-to-source, B={B} "
+          f"({n_ops}-op chain split at the midpoint) ==")
+    print(f"  merged single index {merged_ms:8.2f} ms | federated "
+          f"{fed_ms:8.2f} ms ({overhead:.2f}x; cold {fed_cold_ms:.2f} ms)")
     return out
 
 

@@ -4,11 +4,13 @@
 
 Serves a small decoder LM (smoke-size gemma3 family: exercises the
 local:global interleave + ring caches on the decode path) over a batch of
-requests.  The engine now records the (response -> request) why-provenance
-itself (``generate(..., record_provenance=True)``) and answers lineage
-through its shared ``QuerySession`` — per-request backward queries probe
-ONE composed relation instead of walking the serving op per request, and
-the same session serves forward (request -> responses) plans.
+requests.  The engine owns its OWN provenance index wrapped in a
+single-entry :class:`ProvCatalog` (``engine.catalog``): serving-local
+lineage routes through the index's shared ``QuerySession`` exactly as
+before, and the same catalog is where an upstream data-prep boundary
+attaches (``upstream=prep_index.export(...)`` — see
+``examples/federated_lineage.py`` for the cross-index trace-to-source
+flow).  The legacy ``prov_index=`` attach is deprecated.
 """
 import numpy as np
 import jax
@@ -28,11 +30,11 @@ rng = np.random.default_rng(1)
 prompts = rng.integers(1, cfg.vocab, (B, SP)).astype(np.int32)
 
 engine = ServeEngine(cfg, params, max_seq=SP + NEW, dtype=jnp.float32)
-# the shared session's cost model routes per plan — no batch-size knob to
-# tune: cheap adjacent (response -> request) hops stay on the walk, and
-# sustained probe demand against a distant pair amortizes a composition
-# and flips to the hop-cache on its own
-engine.prov.session()
+# the engine's serving index is registered in its catalog under "serve";
+# the shared session's cost model routes per plan — cheap adjacent
+# (response -> request) hops stay on the walk, and sustained probe demand
+# against a distant pair amortizes a composition and flips to the hop-cache
+print("catalog:", engine.catalog)
 result = engine.generate(prompts, n_new=NEW,
                          request_ids=np.array([101, 102, 103, 104]),
                          record_provenance=True)
@@ -49,10 +51,16 @@ per_request = engine.response_lineage_batch(result, [[i] for i in range(B)])
 print("Q2 batch: response row -> request row:",
       {i: r.tolist() for i, r in enumerate(per_request)})
 
-# forward plans run through the same session/composed relations
+# forward plans run through the same session/composed relations — spelled
+# either against the index or against the catalog with a qualified ref
 print("Q1: request row 0 produced response rows:",
       prov(engine.prov).source(result.request_dataset).rows([0])
       .forward().to(result.response_dataset).run(engine.session))
+print("Q1 (catalog ref):",
+      prov(engine.catalog).source(f"serve/{result.request_dataset}").rows([0])
+      .forward().to(f"serve/{result.response_dataset}").run())
 
 print("\nsession stats (shared composed relations):", engine.session.stats())
+print("federation stats (single-entry catalog):",
+      engine.federation.stats()["federation"])
 print("provenance bytes for the serving path:", engine.prov.prov_nbytes())

@@ -313,6 +313,33 @@ class ComposedIndex:
         """Which representation the (composed-on-demand) relation uses."""
         return self._relation_entry(src, dst).backend
 
+    def relation_csr(self, src: str, dst: str):
+        """The composed relation as scipy CSR regardless of the entry's
+        backend — the federation's cross-index composition hook (a
+        :class:`~repro.provenance.catalog.BoundaryHandle` grants exactly
+        this read for boundary-ancestor pairs).  Bitplane entries convert
+        TRANSIENTLY: the cache entry, its backend tag, and the conversion
+        counter are untouched."""
+        if not HAVE_SCIPY:
+            raise ImportError("relation_csr requires scipy")
+        entry = self._relation_entry(src, dst)
+        if entry.backend == "csr":
+            # a COPY: handing out the live cached arrays would let a
+            # "read-only" BoundaryHandle corrupt the index's private cache
+            return entry.rel.copy()
+        import scipy.sparse as sp
+
+        # unpack in row blocks: a large packed plane must not transiently
+        # materialize the full (rows, cols) dense array (32x the packed
+        # bytes) just to re-sparsify it
+        step = max(1, (4 << 20) // max(entry.cols, 1))
+        blocks = [
+            sp.csr_matrix(unpack_bitplane(entry.rel[i : i + step], entry.cols))
+            for i in range(0, max(entry.rows, 1), step)
+        ]
+        rel = blocks[0] if len(blocks) == 1 else sp.vstack(blocks, format="csr")
+        return rel.astype(np.float32)
+
     # -- batched probes -------------------------------------------------------
     def _probe_masks(self, rows, n: int) -> Tuple[np.ndarray, bool]:
         from repro.core.query import _as_mask, _as_mask_batch, is_probe_batch
@@ -445,6 +472,7 @@ class ComposedIndex:
         for entry in self._cache.values():
             per_backend[entry.backend] += 1
         return {
+            "index": self.index.name,
             "backend": self.backend,
             "entries": len(self._cache),
             "entries_csr": per_backend["csr"],

@@ -203,6 +203,20 @@ class ProvenanceIndex:
             raise ValueError("session() already configured; use index.session()")
         return self._session
 
+    def export(self, dataset_id: str):
+        """Mint a read-only :class:`~repro.provenance.catalog.BoundaryHandle`
+        over ``dataset_id`` — the capability another party (a serving tier,
+        a downstream pipeline's catalog) registers to trace lineage back
+        through this index WITHOUT receiving the index itself.  The handle
+        can probe relations among the ancestors of the boundary dataset and
+        nothing else: no ``record()``/``add_source()``, no non-ancestor
+        datasets.  The ancestor closure is fixed at export time (the op DAG
+        is append-only with one producer per dataset, so no later write can
+        extend an existing dataset's ancestry)."""
+        from repro.provenance.catalog import BoundaryHandle  # circular at module scope
+
+        return BoundaryHandle(self, dataset_id)
+
     # -- memory accounting (Table IX / Table XI) --------------------------------
     def prov_nbytes(self) -> int:
         """Bytes of the provenance encoding proper: tensors (COO + built CSR

@@ -1,6 +1,6 @@
-"""repro.provenance — the unified lazy query-plan API over a ProvenanceIndex.
+"""repro.provenance — the unified lazy query-plan API, single- and multi-index.
 
-The public surface is three names:
+The single-index surface is three names:
 
 * :func:`prov` — fluent lazy builder,
   ``prov(index).source("D_l").rows([...]).forward().to(sink).run()``;
@@ -8,10 +8,33 @@ The public surface is three names:
 * :class:`QuerySession` — planner/executor; owns the hop-cache routing and
   fuses ``run_many`` batches that share endpoints into one packed pass.
 
+The **federated** surface generalizes it across pipeline boundaries without
+merging index ownership:
+
+* :class:`ProvCatalog` — named index registrations + :meth:`link
+  <ProvCatalog.link>` declarations tying an output dataset of one index to
+  a source dataset of another; ``prov(catalog)`` takes index-qualified refs
+  (``"prep/raw_users"``);
+* :class:`BoundaryHandle` — the read-only capability minted by
+  ``ProvenanceIndex.export(dataset_id)``: probe-only access to the
+  boundary's ancestors, :class:`CapabilityError` on anything else;
+* :class:`FederatedSession` — ``catalog.session()``; same ``run`` /
+  ``run_many`` / ``explain`` / ``stats`` surface as :class:`QuerySession`,
+  splitting each plan at boundary datasets and stitching ``(B, n)`` mask
+  stacks across link row alignments.
+
 The legacy Table-VII free functions (``repro.core.query.q1_forward`` …)
 are thin deprecation shims over this package.
 """
 from repro.provenance.builder import ProvQuery, prov
+from repro.provenance.catalog import (
+    BoundaryHandle,
+    CapabilityError,
+    FederationError,
+    Link,
+    ProvCatalog,
+)
+from repro.provenance.federation import FederatedSession
 from repro.provenance.plan import AmbiguousProbeWarning, QueryPlan
 from repro.provenance.session import QuerySession
 
@@ -21,4 +44,10 @@ __all__ = [
     "QueryPlan",
     "QuerySession",
     "AmbiguousProbeWarning",
+    "ProvCatalog",
+    "BoundaryHandle",
+    "FederatedSession",
+    "Link",
+    "CapabilityError",
+    "FederationError",
 ]

@@ -17,6 +17,14 @@ One chain spells any Table-VII query; nothing executes until ``.run()``
 Batch probes are EXPLICIT — ``.rows_batch([...])`` / ``.attrs_batch([...])``
 — which removes the legacy ``is_probe_batch`` guess (an empty list or a 1-D
 integer ndarray is always a single probe here, a batch is always a batch).
+
+The same builder spells FEDERATED queries: hand :func:`prov` a
+:class:`~repro.provenance.catalog.ProvCatalog` instead of an index and use
+index-qualified refs — ``prov(catalog).source("prep/raw_users").rows([...])
+.forward().to("serve/responses@0").run()`` compiles to the identical
+:class:`QueryPlan` IR (refs are opaque strings to the plan) and executes
+through the catalog's shared
+:class:`~repro.provenance.federation.FederatedSession`.
 """
 from __future__ import annotations
 
@@ -27,6 +35,14 @@ import numpy as np
 from repro.provenance.plan import QueryPlan
 
 __all__ = ["prov", "ProvQuery"]
+
+
+def _unknown_dataset(holder, dataset_id: str) -> KeyError:
+    hint = ""
+    if hasattr(holder, "resolve"):          # a ProvCatalog
+        hint = (" (catalog refs are index-qualified: 'index/dataset', "
+                f"registered indexes: {sorted(holder.members)})")
+    return KeyError(f"unknown dataset {dataset_id!r}{hint}")
 
 
 def _single_mask(rows, n: int, what: str) -> np.ndarray:
@@ -102,9 +118,10 @@ class ProvQuery:
 
     # -- probe anchoring ------------------------------------------------------
     def source(self, dataset_id: str) -> "ProvQuery":
-        """The dataset the row probe lives in (probe origin, either end)."""
+        """The dataset the row probe lives in (probe origin, either end).
+        Over a catalog, an index-qualified ref (``"prep/raw_users"``)."""
         if dataset_id not in self._index.datasets:
-            raise KeyError(f"unknown dataset {dataset_id!r}")
+            raise _unknown_dataset(self._index, dataset_id)
         self._source = dataset_id
         return self
 
@@ -142,9 +159,9 @@ class ProvQuery:
         return self
 
     def to(self, dataset_id: str) -> "ProvQuery":
-        """The answer dataset."""
+        """The answer dataset (index-qualified over a catalog)."""
         if dataset_id not in self._index.datasets:
-            raise KeyError(f"unknown dataset {dataset_id!r}")
+            raise _unknown_dataset(self._index, dataset_id)
         self._target = dataset_id
         return self
 
@@ -228,12 +245,15 @@ class ProvQuery:
         )
 
     def run(self, session=None):
-        """Execute through ``session`` (default: the index's shared one)."""
+        """Execute through ``session`` (default: the shared session of the
+        index or catalog this builder was opened over)."""
         if session is None:
             session = self._index.session()
         return session.run(self.plan())
 
 
 def prov(index) -> ProvQuery:
-    """Entry point: a fresh lazy builder over ``index``."""
+    """Entry point: a fresh lazy builder over ``index`` — a
+    :class:`~repro.core.pipeline.ProvenanceIndex` (bare dataset ids) or a
+    :class:`~repro.provenance.catalog.ProvCatalog` (qualified refs)."""
     return ProvQuery(index)

@@ -1,0 +1,647 @@
+"""FederatedSession — plan splitting and mask stitching across a catalog.
+
+The federated twin of :class:`~repro.provenance.session.QuerySession`, with
+the same surface (``run`` / ``run_many`` / ``explain`` / ``stats``) over a
+:class:`~repro.provenance.catalog.ProvCatalog` instead of one index.
+
+Execution model — record-level plans are *linear* in the probe mask (record
+propagation distributes over union), so a cross-index query factors into
+per-member segments joined by link stitches:
+
+1. **Route.**  Member-level reachability over the link graph (a DAG; cycles
+   raise).  Only members on some ``source``-member → ``target``-member path
+   participate.
+2. **Propagate.**  Per member, in link-topological order: every entry mask
+   (the original probe, or masks stitched in over incoming links) advances
+   to every needed exit dataset through ONE record plan on the owning
+   member's own cost-model-driven ``QuerySession`` — the member's
+   ``ComposedIndex`` stays private, keeps its append-survival semantics,
+   and its walk-vs-compose routing applies per segment.  Exits reached from
+   several entries UNION (exactly what a merged index's walk would do), so
+   diamonds that span the boundary — two links carrying two branches of one
+   upstream source into one downstream join — answer exactly.
+3. **Stitch.**  ``(B, n)`` mask stacks cross each link through its row
+   alignment (:meth:`~repro.provenance.catalog.Link.stitch_down` /
+   ``stitch_up``), then keep propagating.
+
+``run_many`` fuses plans sharing a fuse key exactly like ``QuerySession``
+(the probe stacks concatenate), so a batch of cross-index traces still
+packs into ONE pass per member segment.
+
+**Cross-boundary composed relations.**  Segment-at-a-time execution pays
+one composed-relation probe per member.  For a HOT route the federation
+additionally memoizes the fully STITCHED relation — each member's composed
+relation (read through :meth:`relation_csr`, the same probe capability a
+``BoundaryHandle`` grants) chained through the link alignment matrices and
+unioned over parallel link paths — so a sustained cross-index workload
+probes ONE relation, exactly like a merged single index would.  The cache
+is FEDERATION-owned (per-member ``ComposedIndex`` caches stay private),
+composes lazily once a route's cumulative probe demand reaches
+``cross_min_demand``, is bounded by ``cross_budget_bytes`` (LRU), and
+invalidates when the link set changes (member indexes are append-only, so
+member-side writes never invalidate an existing route).
+
+Plan-kind support: ``record`` (fwd/bwd) and the co-queries (explicit
+``via`` for Q10) route across members; ``cells`` / ``how`` plans are
+single-member only (attribute bitplanes and hop traces live on one index's
+walk — a cross-index spelling raises :class:`FederationError`);
+``transformations`` is single-ref and delegates.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.compose import HAVE_SCIPY
+from repro.provenance.catalog import (
+    FederationError,
+    Link,
+    ProvCatalog,
+    split_ref,
+)
+from repro.provenance.plan import QueryPlan
+from repro.provenance.session import run_many_fused
+
+__all__ = ["FederatedSession"]
+
+
+@dataclasses.dataclass
+class _Segment:
+    """One intra-member record hop of a federated route (explain unit)."""
+
+    member: str
+    source: str             # unqualified, within the member
+    target: str
+    direction: str          # "fwd" | "bwd"
+
+
+# ---------------------------------------------------------------------------
+# Traversal semirings: ONE route walk (_traverse), three value domains.
+# Keeping mask propagation, relation composition and dry routing on the
+# same traversal is what guarantees the hot (stitched-relation) path can
+# never answer differently from the cold (segment) path.
+# ---------------------------------------------------------------------------
+class _DryOps:
+    """Reachability only: no member work, values are the literal True."""
+
+    def extend(self, member, value, src, dst, direction):
+        return True
+
+    def union(self, a, b):
+        return True
+
+    def settle(self, acc):
+        return acc
+
+    def stitch(self, link, value, reverse, n_up, n_down):
+        return True
+
+
+class _MaskOps:
+    """(B, n) boolean mask stacks through each member's QuerySession."""
+
+    def __init__(self, session: "FederatedSession") -> None:
+        self.session = session
+
+    def extend(self, member, value, src, dst, direction):
+        self.session.counters["segments"] += 1
+        return member.run_masks(QueryPlan(
+            kind="record", source=src, target=dst, direction=direction,
+            rows=value, batched=True))
+
+    def union(self, a, b):
+        return a | b
+
+    def settle(self, acc):
+        return acc
+
+    def stitch(self, link, value, reverse, n_up, n_down):
+        return link.stitch_up(value, n_up) if reverse \
+            else link.stitch_down(value, n_down)
+
+
+class _RelOps:
+    """(n_start, n_ds) scipy-CSR relations: the stitched cross-relation
+    composer.  ``extend`` chains each member's composed relation
+    (``relation_csr`` — the capability-granted read), ``stitch`` applies
+    the link's alignment matrix, ``settle`` re-binarizes accumulated path
+    counts (the (OR,AND) semiring's union)."""
+
+    def extend(self, member, value, src, dst, direction):
+        if direction == "bwd":
+            return value @ member.relation_csr(dst, src).T.tocsr()
+        return value @ member.relation_csr(src, dst)
+
+    def union(self, a, b):
+        return a + b
+
+    def settle(self, acc):
+        acc = acc.tocsr()
+        acc.data = np.ones_like(acc.data)
+        return acc
+
+    def stitch(self, link, value, reverse, n_up, n_down):
+        A = link.matrix(n_up, n_down)
+        return value @ (A.T.tocsr() if reverse else A)
+
+
+class FederatedSession:
+    """Planner/executor over a :class:`ProvCatalog`; share one per catalog
+    (``catalog.session()``)."""
+
+    def __init__(self, catalog: ProvCatalog, *,
+                 cross_min_demand: int = 32,
+                 cross_budget_bytes: int = 64 << 20) -> None:
+        self.catalog = catalog
+        # cross-boundary composed relations: route -> stitched scipy CSR
+        self.cross_min_demand = int(cross_min_demand)
+        self.cross_budget_bytes = int(cross_budget_bytes)
+        self._cross: "OrderedDict[Tuple[str, str, str], object]" = OrderedDict()
+        self._cross_bytes = 0
+        self._cross_failed: set = set()     # routes not worth/able to compose
+        self._route_demand: Dict[Tuple[str, str, str], int] = {}
+        self._links_version = len(catalog.links)
+        self.counters: Dict[str, int] = {
+            "plans": 0,
+            "single_index": 0,
+            "federated": 0,
+            "segments": 0,
+            "links_crossed": 0,
+            "fused_groups": 0,
+            "fused_plans": 0,
+            "cross_composes": 0,
+            "cross_probes": 0,
+        }
+
+    # -- ref plumbing ----------------------------------------------------------
+    def _member_name(self, ref: str) -> str:
+        name, _ = split_ref(ref)
+        if name not in self.catalog.members:
+            raise FederationError(
+                f"unknown index {name!r} in ref {ref!r} "
+                f"(registered: {sorted(self.catalog.members)})"
+            )
+        return name
+
+    def _plan_members(self, plan: QueryPlan) -> List[str]:
+        names = []
+        for ref in plan.refs():
+            n = self._member_name(ref)
+            if n not in names:
+                names.append(n)
+        return names
+
+    def _unqualified(self, plan: QueryPlan) -> QueryPlan:
+        strip = lambda r: None if r is None else split_ref(r)[1]  # noqa: E731
+        return dataclasses.replace(
+            plan, source=strip(plan.source), target=strip(plan.target),
+            via=strip(plan.via), anchor=strip(plan.anchor),
+        )
+
+    def _n_rows(self, ref: str) -> int:
+        return self.catalog.datasets[ref].n_rows
+
+    # -- routing ---------------------------------------------------------------
+    def _link_graph(self, reverse: bool) -> Dict[str, List[Link]]:
+        """Outgoing links per member in traversal direction (``reverse``
+        walks links downstream→upstream for backward propagation)."""
+        out: Dict[str, List[Link]] = {}
+        for link in self.catalog.links:
+            key = split_ref(link.down if reverse else link.up)[0]
+            out.setdefault(key, []).append(link)
+        return out
+
+    def _route(self, m0: str, m1: str, reverse: bool
+               ) -> Optional[Tuple[List[str], List[Link]]]:
+        """Members in topological traversal order + the links on some
+        ``m0`` → ``m1`` path, or None when no link path exists."""
+        adj = self._link_graph(reverse)
+
+        def _next(link: Link) -> str:
+            return split_ref(link.up if reverse else link.down)[0]
+
+        # members reachable from m0 / co-reachable to m1
+        fwd = {m0}
+        frontier = [m0]
+        while frontier:
+            m = frontier.pop()
+            for link in adj.get(m, []):
+                n = _next(link)
+                if n not in fwd:
+                    fwd.add(n)
+                    frontier.append(n)
+        if m1 not in fwd:
+            return None
+        radj: Dict[str, List[str]] = {}
+        for m, links in adj.items():
+            for link in links:
+                radj.setdefault(_next(link), []).append(m)
+        bwd = {m1}
+        frontier = [m1]
+        while frontier:
+            m = frontier.pop()
+            for p in radj.get(m, []):
+                if p not in bwd:
+                    bwd.add(p)
+                    frontier.append(p)
+        relevant = fwd & bwd
+        links = [l for m in relevant for l in adj.get(m, [])
+                 if _next(l) in relevant]
+        # Kahn topo order over the relevant members
+        indeg = {m: 0 for m in relevant}
+        for link in links:
+            indeg[_next(link)] += 1
+        order, ready = [], sorted(m for m, d in indeg.items() if d == 0)
+        while ready:
+            m = ready.pop(0)
+            order.append(m)
+            for link in adj.get(m, []):
+                n = _next(link)
+                if n in indeg:
+                    indeg[n] -= 1
+                    if indeg[n] == 0:
+                        ready.append(n)
+        if len(order) != len(relevant):
+            raise FederationError(
+                f"link graph has a cycle through {sorted(relevant)}; "
+                "federated routing needs an acyclic member graph"
+            )
+        return order, links
+
+    # -- the shared route traversal --------------------------------------------
+    def _traverse(self, start_ref: str, end_ref: str, mode: str,
+                  order: List[str], links: List[Link], ops, init):
+        """Walk the route in member-topological order, propagating a VALUE
+        (mask stack, relation, or dry True) from ``start_ref`` to
+        ``end_ref``: per member, every entry value advances to every
+        needed exit through ``ops.extend`` (exits reached from several
+        entries ``ops.union``), then crosses each outgoing link through
+        ``ops.stitch``.  Returns ``(answer, segments, crossed)``.
+
+        This is the ONE traversal behind live mask propagation, stitched
+        cross-relation composition, AND dry routing (explain /
+        invalidation signatures) — parameterizing the semiring instead of
+        duplicating the walk keeps the three behaviorally identical.
+        """
+        m0, d0 = split_ref(start_ref)
+        m1, d1 = split_ref(end_ref)
+        reverse = mode == "bwd"
+        direction = "bwd" if reverse else "fwd"
+        out_links: Dict[str, List[Link]] = {}
+        for link in links:
+            out_links.setdefault(
+                split_ref(link.down if reverse else link.up)[0], []
+            ).append(link)
+
+        entries: Dict[str, Dict[str, object]] = {m0: {d0: init}}
+        segments: List[_Segment] = []
+        crossed: List[Link] = []
+        answer = None
+        for m in order:
+            ent = entries.pop(m, None)
+            if not ent:
+                continue
+            member = self.catalog.members[m]
+            # exit datasets this member must produce values at
+            exits: List[str] = []
+            for link in out_links.get(m, []):
+                near = split_ref(link.down if reverse else link.up)[1]
+                if near not in exits:
+                    exits.append(near)
+            if m == m1 and d1 not in exits:
+                exits.append(d1)
+            exit_vals: Dict[str, object] = {}
+            for x in exits:
+                acc = None
+                for e, val in ent.items():
+                    if e == x:
+                        contrib = val       # direct pass-through
+                    else:
+                        has_path = member.path_exists(x, e) if reverse \
+                            else member.path_exists(e, x)
+                        if not has_path:
+                            continue
+                        segments.append(_Segment(m, e, x, direction))
+                        contrib = ops.extend(member, val, e, x, direction)
+                    acc = contrib if acc is None else ops.union(acc, contrib)
+                if acc is not None:
+                    exit_vals[x] = ops.settle(acc)
+            if m == m1:
+                answer = exit_vals.get(d1)
+            for link in out_links.get(m, []):
+                near_ref, far_ref = (
+                    (link.down, link.up) if reverse else (link.up, link.down))
+                near_ds = split_ref(near_ref)[1]
+                far_m, far_ds = split_ref(far_ref)
+                val = exit_vals.get(near_ds)
+                if val is None:
+                    continue
+                crossed.append(link)
+                up_name, up_ds = split_ref(link.up)
+                down_name, down_ds = split_ref(link.down)
+                n_up = self.catalog.members[up_name].datasets[up_ds].n_rows
+                n_down = self.catalog.members[down_name].datasets[down_ds].n_rows
+                stitched = ops.stitch(link, val, reverse, n_up, n_down)
+                dest = entries.setdefault(far_m, {})
+                prev = dest.get(far_ds)
+                dest[far_ds] = stitched if prev is None \
+                    else ops.union(prev, stitched)
+        return answer, segments, crossed
+
+    # -- cross-boundary composed relations -------------------------------------
+    def _crossed_signature(self, key) -> Optional[frozenset]:
+        """The set of links a route would actually STITCH THROUGH right
+        now, from a dry traversal (path_exists checks only, no tensor
+        work) — the stitched relation depends on exactly these."""
+        start, end, mode = key
+        try:
+            route = self._route(split_ref(start)[0], split_ref(end)[0],
+                                reverse=(mode == "bwd"))
+        except FederationError:         # e.g. a new link formed a cycle
+            return None
+        if route is None:
+            return None
+        _, _, crossed = self._traverse(start, end, mode, route[0], route[1],
+                                       _DryOps(), True)
+        return frozenset((link.up, link.down) for link in crossed)
+
+    def _cross_sync(self) -> None:
+        """Reconcile stitched relations after the LINK set changed.
+
+        A new link can only alter a cached route if the route would now
+        stitch through a different link set (e.g. a second boundary branch
+        landing on an EXISTING dataset of the route) — compare each
+        entry's crossed-link signature against a fresh dry traversal and
+        drop only the routes whose signature moved.  The serving pattern —
+        one new link per recorded generation, landing on a brand-new
+        ``requests@N`` dataset no cached route can reach — therefore keeps
+        its hot stitched relations.  Member-side writes never invalidate
+        (append-only DAGs, one producer per dataset)."""
+        if len(self.catalog.links) == self._links_version:
+            return
+        self._links_version = len(self.catalog.links)
+        self._cross_failed.clear()      # a new link may make a route viable
+        for key in list(self._cross):
+            relT, signature = self._cross[key]
+            if self._crossed_signature(key) != signature:
+                del self._cross[key]
+                self._cross_bytes -= self._cross_nbytes(relT)
+
+    def _cross_nbytes(self, rel) -> int:
+        return int(rel.data.nbytes + rel.indices.nbytes + rel.indptr.nbytes)
+
+    def _cross_get(self, key):
+        entry = self._cross.get(key)
+        if entry is None:
+            return None
+        self._cross.move_to_end(key)
+        return entry
+
+    def _cross_put(self, key, rel, signature: frozenset) -> bool:
+        nbytes = self._cross_nbytes(rel)
+        if nbytes > self.cross_budget_bytes:
+            return False                # larger than the budget: keep segments
+        old = self._cross.pop(key, None)
+        if old is not None:
+            self._cross_bytes -= self._cross_nbytes(old[0])
+        self._cross[key] = (rel, signature)
+        self._cross_bytes += nbytes
+        while self._cross_bytes > self.cross_budget_bytes and len(self._cross) > 1:
+            _, (evicted, _) = self._cross.popitem(last=False)
+            self._cross_bytes -= self._cross_nbytes(evicted)
+        return True
+
+    def _compose_cross(self, start_ref: str, end_ref: str, mode: str,
+                       order: List[str], links: List[Link]):
+        """The stitched ``(n_start, n_end)`` relation for a cross-member
+        route, as scipy CSR (via the :class:`_RelOps` semiring on the
+        shared traversal): ``M[i, j] = 1`` iff start row ``i`` propagates
+        to end row ``j`` — so a probe is ONE sparse matmul, the
+        merged-index cost."""
+        import scipy.sparse as sp
+
+        m0, d0 = split_ref(start_ref)
+        n0 = self.catalog.members[m0].datasets[d0].n_rows
+        init = sp.identity(n0, dtype=np.float32, format="csr")
+        answer, _, _ = self._traverse(start_ref, end_ref, mode, order, links,
+                                      _RelOps(), init)
+        return answer
+
+    def _cross_probe(self, relT, masks: np.ndarray) -> np.ndarray:
+        """(B, n_start) bool through the stitched relation -> (B, n_end).
+
+        ``relT`` is cached TRANSPOSED (``(n_end, n_start)`` CSR) so the
+        probe is one CSR × dense-multivector product — the identical kernel
+        and memory-access pattern as a merged index's composed backward
+        probe, which is what the ~1x federation benchmark bound rests on."""
+        return np.asarray(relT @ masks.astype(np.float32).T).T > 0
+
+    # -- the core: federated record propagation --------------------------------
+    def _propagate(self, start_ref: str, end_ref: str,
+                   masks: Optional[np.ndarray], mode: str,
+                   order: Optional[List[str]] = None,
+                   links: Optional[List[Link]] = None):
+        """Propagate ``(B, n_start)`` probe masks from ``start_ref`` to
+        ``end_ref`` along dataflow (``mode="fwd"``) or against it
+        (``mode="bwd"``).  With ``masks=None`` runs DRY: no member plans
+        execute, and the (segments, links) a live run would use come back
+        instead — ``explain`` uses this.
+        """
+        dry = masks is None
+        m0, d0 = split_ref(start_ref)
+        m1, d1 = split_ref(end_ref)
+        if order is None:
+            if m0 == m1:
+                order, links = [m0], []
+            else:
+                route = self._route(m0, m1, reverse=(mode == "bwd"))
+                if route is None:
+                    if dry:
+                        return None
+                    return np.zeros(
+                        (masks.shape[0], self._n_rows(end_ref)), dtype=bool)
+                order, links = route
+        if dry:
+            _, segments, crossed = self._traverse(
+                start_ref, end_ref, mode, order, links, _DryOps(), True)
+            return segments, crossed
+        if m0 != m1:
+            # hot-route fast path: probe the stitched cross relation once,
+            # composing it when cumulative demand has paid for it.  A route
+            # that failed to compose (no path, or over budget) is memoized
+            # as failed so it never re-pays the compose per probe.
+            self._cross_sync()
+            key = (start_ref, end_ref, mode)
+            entry = self._cross_get(key)
+            if entry is None and HAVE_SCIPY and key not in self._cross_failed:
+                demand = self._route_demand.get(key, 0) + masks.shape[0]
+                self._route_demand[key] = demand
+                if demand >= self.cross_min_demand:
+                    rel = self._compose_cross(start_ref, end_ref, mode,
+                                              order, links)
+                    if rel is not None:
+                        rel = rel.T.tocsr()     # probe-ready: see _cross_probe
+                        self.counters["cross_composes"] += 1
+                        signature = self._crossed_signature(key)
+                        if self._cross_put(key, rel, signature):
+                            entry = (rel, signature)
+                        else:
+                            self._cross_failed.add(key)
+                    else:
+                        self._cross_failed.add(key)
+            if entry is not None:
+                relT, signature = entry
+                self.counters["cross_probes"] += 1
+                self.counters["links_crossed"] += len(signature)
+                return self._cross_probe(relT, masks)
+        answer, _, crossed = self._traverse(
+            start_ref, end_ref, mode, order, links, _MaskOps(self),
+            masks.astype(bool))
+        self.counters["links_crossed"] += len(crossed)
+        if answer is None:
+            return np.zeros((masks.shape[0], self._n_rows(end_ref)),
+                            dtype=bool)
+        return answer
+
+    # -- executors -------------------------------------------------------------
+    def _check_cross_supported(self, plan: QueryPlan) -> None:
+        if plan.kind == "cells" or plan.how:
+            raise FederationError(
+                f"cross-index {plan.kind}{'/how' if plan.how else ''} plans "
+                "are not supported: attribute bitplanes and hop traces live "
+                "on one index's walk — query up to the boundary, stitch, "
+                "and continue, or record both pipelines into one index"
+            )
+        if plan.kind == "co_contributory" and plan.via is None:
+            raise FederationError(
+                "cross-index co_contributory needs an explicit via= dataset "
+                "(the per-probe default requires one index's reach map)"
+            )
+
+    def _execute(self, plan: QueryPlan) -> List[np.ndarray]:
+        """One payload per probe for a CROSS-member plan."""
+        self._check_cross_supported(plan)
+        self.counters["federated"] += 1
+        B = plan.n_probes
+        if B == 0:
+            return []
+        if plan.kind == "record":
+            out = self._propagate(plan.source, plan.target, plan.rows,
+                                  mode="fwd" if plan.direction == "fwd"
+                                  else "bwd")
+        elif plan.kind == "co_contributory":
+            via_masks = self._propagate(plan.source, plan.via, plan.rows,
+                                        mode="fwd")
+            out = self._propagate(plan.via, plan.target, via_masks,
+                                  mode="bwd")
+        elif plan.kind == "co_dependency":
+            anc = self._propagate(plan.source, plan.anchor, plan.rows,
+                                  mode="bwd")
+            out = self._propagate(plan.anchor, plan.target, anc, mode="fwd")
+        else:
+            raise FederationError(
+                f"{plan.kind} plans take one dataset ref and never cross "
+                "members")
+        return [np.flatnonzero(m) for m in out]
+
+    # -- the QuerySession surface ----------------------------------------------
+    def run(self, plan):
+        """Execute one plan (a :class:`QueryPlan` over qualified refs, or a
+        builder).  Single-member plans delegate wholesale to the owning
+        member's session — every plan kind, identical shapes; cross-member
+        plans split, stitch, and return the same shapes."""
+        plan = plan if isinstance(plan, QueryPlan) else plan.plan()
+        self.counters["plans"] += 1
+        names = self._plan_members(plan)
+        if len(names) == 1:
+            self.counters["single_index"] += 1
+            return self.catalog.members[names[0]].run(self._unqualified(plan))
+        per = self._execute(plan)
+        return per if plan.batched else per[0]
+
+    def run_many(self, plans: Sequence) -> List:
+        """Batch execution with fuse-key fusion (same contract as
+        ``QuerySession.run_many``): cross-member plans sharing a route pack
+        into ONE propagation — one record pass per member segment for the
+        whole group."""
+        return run_many_fused(plans, self.run, self._run_fused, self.counters)
+
+    def _run_fused(self, fused: QueryPlan) -> List:
+        names = self._plan_members(fused)
+        if len(names) == 1:
+            member = self.catalog.members[names[0]]
+            sub = self._unqualified(fused)
+            self.counters["single_index"] += 1
+            return member.run(sub)          # batched plan: one payload/probe
+        return self._execute(fused)
+
+    def explain(self, plan) -> Dict[str, object]:
+        """The route without executing: per-segment strategy/cost from each
+        owning member's planner, the links crossed, and the top-level
+        verdict — never just a stitched total."""
+        plan = plan if isinstance(plan, QueryPlan) else plan.plan()
+        names = self._plan_members(plan)
+        out: Dict[str, object] = {"plan": plan.describe()}
+        if len(names) == 1:
+            inner = self.catalog.members[names[0]].explain(
+                self._unqualified(plan))
+            out.update(inner)
+            out["federated"] = False
+            out["index"] = names[0]
+            return out
+        self._check_cross_supported(plan)
+        out["federated"] = True
+        out["strategy"] = "federated"
+        legs: List[Tuple[str, str, str]] = []
+        if plan.kind == "record":
+            legs = [(plan.source, plan.target,
+                     "fwd" if plan.direction == "fwd" else "bwd")]
+        elif plan.kind == "co_contributory":
+            legs = [(plan.source, plan.via, "fwd"),
+                    (plan.via, plan.target, "bwd")]
+        elif plan.kind == "co_dependency":
+            legs = [(plan.source, plan.anchor, "bwd"),
+                    (plan.anchor, plan.target, "fwd")]
+        segments: List[Dict[str, object]] = []
+        links: List[str] = []
+        B = max(plan.n_probes, 1)
+        for start, end, mode in legs:
+            dry = self._propagate(start, end, None, mode=mode)
+            if dry is None:
+                segments.append({"leg": f"{start}->{end}", "route": None})
+                continue
+            segs, crossed = dry
+            links.extend(f"{l.up} => {l.down}" for l in crossed)
+            for seg in segs:
+                member = self.catalog.members[seg.member]
+                n = member.datasets[seg.source].n_rows
+                probe = np.zeros((B, n), dtype=bool)
+                if n:
+                    probe[:, 0] = True      # nominal single-row probes
+                sub = QueryPlan(kind="record", source=seg.source,
+                                target=seg.target, direction=seg.direction,
+                                rows=probe, batched=True)
+                inner = member.explain(sub)
+                segments.append({
+                    "index": seg.member,
+                    "segment": f"{seg.source}->{seg.target}",
+                    "direction": seg.direction,
+                    "strategy": inner.get("strategy"),
+                    **({"cost": inner["cost"]} if "cost" in inner else {}),
+                })
+        out["segments"] = segments
+        out["links"] = links
+        return out
+
+    def stats(self) -> Dict:
+        """Federation counters plus EVERY member's full session stats,
+        keyed by registered index name — per-index planner and hop-cache
+        counters stay attributable after federation."""
+        return {
+            "federation": dict(self.counters),
+            "indexes": {name: member.stats()
+                        for name, member in self.catalog.members.items()},
+        }

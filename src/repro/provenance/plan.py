@@ -107,6 +107,22 @@ class QueryPlan:
     def n_probes(self) -> int:
         return 0 if self.rows is None else int(self.rows.shape[0])
 
+    def refs(self) -> Tuple[str, ...]:
+        """Every dataset ref the plan touches (source, target, via, anchor).
+
+        Refs are opaque strings to the IR: a plan compiled over one index
+        carries bare dataset ids, one compiled over a
+        :class:`~repro.provenance.catalog.ProvCatalog` carries
+        index-qualified ``"name/dataset"`` refs — the executing session
+        (``QuerySession`` vs ``FederatedSession``) owns the interpretation.
+        Capability validation (``BoundaryHandle``) and federated routing
+        both enumerate a plan's footprint through this.
+        """
+        return tuple(
+            r for r in (self.source, self.target, self.via, self.anchor)
+            if r is not None
+        )
+
     def fuse_key(self) -> Tuple:
         """Plans with equal keys answer from ONE fused physical pass.
 

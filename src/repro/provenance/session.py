@@ -47,11 +47,56 @@ import numpy as np
 from repro.core import query as Q
 from repro.provenance.plan import QueryPlan
 
-__all__ = ["QuerySession"]
+__all__ = ["QuerySession", "run_many_fused"]
 
 
 def _flatnonzeros(mask_stack: np.ndarray) -> List[np.ndarray]:
     return [np.flatnonzero(m) for m in mask_stack]
+
+
+def run_many_fused(plans: Sequence, run_one, execute_batched,
+                   counters: Dict[str, int]) -> List:
+    """The shared ``run_many`` fusion contract: group plans by
+    ``fuse_key()``, concatenate each group's probe mask stacks along the
+    batch axis, execute ONE batched pass per group via ``execute_batched``
+    (returns one payload per probe), and split results back in submission
+    order.  Singleton groups and ``transformations`` plans fall back to
+    ``run_one``.  Both :class:`QuerySession` and the catalog-level
+    :class:`~repro.provenance.federation.FederatedSession` run on this, so
+    fusion semantics cannot drift between the single-index and federated
+    surfaces."""
+    plans = [p if isinstance(p, QueryPlan) else p.plan() for p in plans]
+    results: List = [None] * len(plans)
+    groups: Dict[tuple, List[int]] = {}
+    for i, p in enumerate(plans):
+        groups.setdefault(p.fuse_key(), []).append(i)
+    for key, idxs in groups.items():
+        if len(idxs) == 1 or key[0] == "transformations":
+            for i in idxs:
+                results[i] = run_one(plans[i])
+            continue
+        sub = [plans[i] for i in idxs]
+        fused = dataclasses.replace(
+            sub[0],
+            rows=np.concatenate([p.rows for p in sub], axis=0),
+            attrs=(
+                np.concatenate([p.attrs for p in sub], axis=0)
+                if sub[0].attrs is not None
+                else None
+            ),
+            batched=True,
+        )
+        counters["plans"] += len(idxs)
+        counters["fused_groups"] += 1
+        counters["fused_plans"] += len(idxs)
+        per = execute_batched(fused)
+        off = 0
+        for i in idxs:
+            p = plans[i]
+            chunk = per[off : off + p.n_probes]
+            off += p.n_probes
+            results[i] = chunk if p.batched else chunk[0]
+    return results
 
 
 class QuerySession:
@@ -191,38 +236,24 @@ class QuerySession:
     def run_many(self, plans: Sequence) -> List:
         """Execute a batch of plans, fusing same-fuse-key plans into one
         physical pass each.  Results come back in submission order."""
-        plans = [p if isinstance(p, QueryPlan) else p.plan() for p in plans]
-        results: List = [None] * len(plans)
-        groups: Dict[tuple, List[int]] = {}
-        for i, p in enumerate(plans):
-            groups.setdefault(p.fuse_key(), []).append(i)
-        for key, idxs in groups.items():
-            if len(idxs) == 1 or key[0] == "transformations":
-                for i in idxs:
-                    results[i] = self.run(plans[i])
-                continue
-            sub = [plans[i] for i in idxs]
-            fused = dataclasses.replace(
-                sub[0],
-                rows=np.concatenate([p.rows for p in sub], axis=0),
-                attrs=(
-                    np.concatenate([p.attrs for p in sub], axis=0)
-                    if sub[0].attrs is not None
-                    else None
-                ),
-                batched=True,
-            )
-            self.counters["plans"] += len(idxs)
-            self.counters["fused_groups"] += 1
-            self.counters["fused_plans"] += len(idxs)
-            per = self._execute(fused)
-            off = 0
-            for i in idxs:
-                p = plans[i]
-                chunk = per[off : off + p.n_probes]
-                off += p.n_probes
-                results[i] = chunk if p.batched else chunk[0]
-        return results
+        return run_many_fused(plans, self.run, self._execute, self.counters)
+
+    def run_masks(self, plan: QueryPlan) -> np.ndarray:
+        """Execute a plain record-level plan and return the RAW ``(B,
+        n_target)`` boolean mask stack — no per-probe index conversion.
+
+        The federation's per-segment entry point: intermediate segment
+        results feed straight into the next boundary stitch, so
+        materializing index arrays per probe would be pure overhead.
+        Routing and counters are identical to :meth:`run` (they share
+        :meth:`_record_masks`, the one record executor).
+        """
+        if plan.kind != "record" or plan.how:
+            raise ValueError("run_masks handles plain record plans only")
+        self.counters["plans"] += 1
+        strategy = self._strategy(plan)
+        self.counters[strategy] += 1
+        return self._record_masks(plan, strategy)
 
     # -- executors (each returns one payload per probe) -------------------------
     def _execute(self, plan: QueryPlan) -> List:
@@ -238,32 +269,46 @@ class QuerySession:
             return self._exec_co_dependency(plan, strategy)
         raise ValueError(f"unexpected plan kind {plan.kind!r}")
 
-    def _exec_record(self, plan: QueryPlan, strategy: str) -> List:
-        B = plan.n_probes
+    def _record_masks(self, plan: QueryPlan, strategy: str) -> np.ndarray:
+        """The one plain-record executor: (B, n_target) bool per strategy.
+        Both :meth:`run` (via ``_exec_record``) and :meth:`run_masks` (the
+        federation's segment hook) answer through this, so routing and
+        fallback shapes cannot diverge between the two surfaces."""
         if strategy == "hopcache":
             if plan.direction == "fwd":
-                out = self.composed.probe_forward(plan.rows, plan.source, plan.target)
-            else:
-                out = self.composed.probe_backward(plan.rows, plan.source, plan.target)
-            return _flatnonzeros(out)
-        # walk
+                return self.composed.probe_forward(
+                    plan.rows, plan.source, plan.target)
+            return self.composed.probe_backward(
+                plan.rows, plan.source, plan.target)
         walker = (
             Q.forward_record_masks_batch
             if plan.direction == "fwd"
             else Q.backward_record_masks_batch
         )
-        if plan.how:
-            masks, hops = walker(self.index, plan.source, plan.rows, collect_hops=True)
-        else:
-            masks, hops = walker(self.index, plan.source, plan.rows), None
+        masks = walker(self.index, plan.source, plan.rows)
+        return masks.get(
+            plan.target,
+            np.zeros((plan.n_probes, self.index.datasets[plan.target].n_rows),
+                     dtype=bool),
+        )
+
+    def _exec_record(self, plan: QueryPlan, strategy: str) -> List:
+        if not plan.how:
+            return _flatnonzeros(self._record_masks(plan, strategy))
+        # how-traces only live on the walk (see _strategy)
+        walker = (
+            Q.forward_record_masks_batch
+            if plan.direction == "fwd"
+            else Q.backward_record_masks_batch
+        )
+        masks, hops = walker(self.index, plan.source, plan.rows,
+                             collect_hops=True)
         out = masks.get(
             plan.target,
-            np.zeros((B, self.index.datasets[plan.target].n_rows), dtype=bool),
+            np.zeros((plan.n_probes, self.index.datasets[plan.target].n_rows),
+                     dtype=bool),
         )
-        recs = _flatnonzeros(out)
-        if plan.how:
-            return list(zip(recs, hops))
-        return recs
+        return list(zip(_flatnonzeros(out), hops))
 
     def _exec_cells(self, plan: QueryPlan) -> List:
         B = plan.n_probes
@@ -338,5 +383,7 @@ class QuerySession:
     def stats(self) -> Dict:
         """Planner counters + the shared hop-cache's counters
         (hits/misses/evictions/bytes) — assert on these to catch
-        cache-routing regressions."""
-        return {"planner": dict(self.counters), "hopcache": self.composed.stats()}
+        cache-routing regressions.  ``index`` names the owning index so a
+        federation can aggregate per-index stats attributably."""
+        return {"index": self.index.name, "planner": dict(self.counters),
+                "hopcache": self.composed.stats()}

@@ -7,20 +7,36 @@ why-provenance of the serving path, captured with the same ProvTensor
 machinery as the data pipeline (each generated token derives from its
 request row: an identity-tensor-per-step collapsed to one HAUGMENT link).
 
-The engine owns a :class:`ProvenanceIndex` and shares its
-:class:`~repro.provenance.session.QuerySession`: ``generate(...,
-record_provenance=True)`` registers the (response -> request) op, and the
-lineage helpers (:meth:`response_lineage`, :meth:`response_lineage_batch`)
-compile to :class:`QueryPlan`\\ s and route through the session — so
-per-request lineage at scale probes ONE shared composed relation instead of
-walking the op DAG per request, and an upstream data-preparation index can
-be handed in (``prov_index=...``) to trace responses all the way back to
-raw sources.
+The engine owns its OWN :class:`ProvenanceIndex` (the serving pipeline's)
+and a :class:`~repro.provenance.catalog.ProvCatalog` around it.  Upstream
+data-preparation provenance attaches through ``upstream=``:
+
+* a :class:`~repro.provenance.catalog.BoundaryHandle` minted by
+  ``prep_index.export(dataset_id)`` — the engine registers the read-only
+  capability, never the prep index object itself, and links each recorded
+  request batch to boundary rows through the ``request_ids`` alignment;
+* or ``(catalog, "name/dataset")`` — the engine registers its serving
+  index into an EXISTING catalog and uses that qualified ref as the
+  boundary.
+
+``generate(..., record_provenance=True)`` registers the
+(response -> request) op; :meth:`response_lineage` /
+:meth:`response_lineage_batch` compile to :class:`QueryPlan`\\ s — serving-
+local targets route through the index's shared ``QuerySession`` (ONE
+composed relation per endpoint pair), upstream targets route through the
+catalog's :class:`~repro.provenance.federation.FederatedSession`, tracing
+responses all the way back to raw prep sources across the boundary.
+
+The legacy ``prov_index=`` attach — handing the engine the whole prep
+index to record into — is DEPRECATED (it grants the serving tier mutation
+rights over data-prep provenance): it still works, wrapped in a
+single-entry catalog, and warns once per process.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+import warnings
+from typing import Any, List, Optional, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,8 +47,24 @@ from repro.core.opcat import AttrMap, CaptureInfo, OpCategory
 from repro.core.pipeline import ProvenanceIndex
 from repro.dataprep.table import Table
 from repro.models.registry import get_model
+from repro.provenance.catalog import (
+    BoundaryHandle,
+    ProvCatalog,
+    qualify,
+    split_ref,
+)
 
 __all__ = ["ServeEngine", "GenerationResult"]
+
+_DEPRECATION_WARNED: Set[str] = set()
+
+
+def _warn_once(key: str, message: str) -> None:
+    """Once-per-process deprecation (the q1-q11 shim pattern)."""
+    if key in _DEPRECATION_WARNED:
+        return
+    _DEPRECATION_WARNED.add(key)
+    warnings.warn(message, DeprecationWarning, stacklevel=3)
 
 
 @dataclasses.dataclass
@@ -47,27 +79,87 @@ class GenerationResult:
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params: Any, max_seq: int,
                  dtype=jnp.bfloat16,
+                 upstream=None,
                  prov_index: Optional[ProvenanceIndex] = None):
         self.cfg = cfg
         self.params = params
         self.max_seq = max_seq
         self.dtype = dtype
         self.model = get_model(cfg)
-        # provenance of the serving path: shared index (hand in the data-prep
-        # pipeline's index to trace responses back to raw sources) + the
-        # index's shared QuerySession for composed-relation probes
-        self.prov = prov_index if prov_index is not None else ProvenanceIndex(
-            f"serve:{cfg.name}")
-        self._n_generations = 0
+        self._init_provenance(f"serve:{cfg.name}", upstream=upstream,
+                              prov_index=prov_index)
         self._decode = jax.jit(
             lambda p, tok, pos, cache: self.model.decode_step(cfg, p, tok, pos, cache,
                                                               dtype=dtype)
         )
 
+    # -- provenance wiring ------------------------------------------------------
+    def _init_provenance(self, name: str, upstream=None,
+                         prov_index: Optional[ProvenanceIndex] = None) -> None:
+        """Build the serving index + catalog.  Split out of ``__init__`` so
+        the capture path is testable without instantiating a model."""
+        self._n_generations = 0
+        self._upstream: Optional[Tuple[str, str]] = None  # (member, boundary ds)
+        if prov_index is not None:
+            if upstream is not None:
+                raise ValueError(
+                    "pass either upstream= (catalog attach) or the deprecated "
+                    "prov_index=, not both")
+            _warn_once(
+                "prov_index",
+                "ServeEngine(prov_index=...) is deprecated: handing the "
+                "serving tier the whole data-prep index grants it record() "
+                "rights over prep provenance.  Attach upstream lineage with "
+                "upstream=prep_index.export(dataset_id) (a read-only "
+                "BoundaryHandle) or upstream=(catalog, 'name/dataset') "
+                "instead; the passed index is wrapped in a single-entry "
+                "catalog for now.",
+            )
+            self.prov = prov_index
+            self._serve_name = "serve"
+            self.catalog = ProvCatalog(name)
+            self.catalog.register(self._serve_name, self.prov)
+            return
+        self.prov = ProvenanceIndex(name)
+        if upstream is None:
+            self._serve_name = "serve"
+            self.catalog = ProvCatalog(name)
+            self.catalog.register(self._serve_name, self.prov)
+        elif isinstance(upstream, BoundaryHandle):
+            self._serve_name = "serve"
+            self.catalog = ProvCatalog(name)
+            up_name = upstream.index_name
+            if not up_name or "/" in up_name or up_name == self._serve_name:
+                up_name = "upstream"
+            self.catalog.register(up_name, upstream)
+            self.catalog.register(self._serve_name, self.prov)
+            self._upstream = (up_name, upstream.boundary)
+        elif (isinstance(upstream, tuple) and len(upstream) == 2
+                and isinstance(upstream[0], ProvCatalog)):
+            catalog, ref = upstream
+            catalog.datasets[ref]   # resolve the DATASET now: a typo'd ref
+                                    # must fail here, not at first generate()
+            serve_name, i = "serve", 2
+            while serve_name in catalog.members:
+                serve_name, i = f"serve{i}", i + 1
+            catalog.register(serve_name, self.prov)
+            self.catalog = catalog
+            self._serve_name = serve_name
+            self._upstream = split_ref(ref)
+        else:
+            raise TypeError(
+                f"upstream= takes a BoundaryHandle or (ProvCatalog, "
+                f"'name/dataset'), got {type(upstream).__name__}")
+
     @property
     def session(self):
         """The engine's (index-shared) provenance QuerySession."""
         return self.prov.session()
+
+    @property
+    def federation(self):
+        """The catalog's shared FederatedSession (cross-index lineage)."""
+        return self.catalog.session()
 
     def generate(
         self,
@@ -103,6 +195,7 @@ class ServeEngine:
             logits, cache = self._decode(self.params, cur, jnp.int32(sp + i), cache)
             cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
+        request_ids_given = request_ids is not None
         if request_ids is None:
             request_ids = np.arange(b, dtype=np.int64)
         result = GenerationResult(
@@ -111,20 +204,27 @@ class ServeEngine:
         )
         if record_provenance:
             self._record_generation(result, prompt_len=sp, n_new=n_new,
-                                    request_source=request_source)
+                                    request_source=request_source,
+                                    request_ids_given=request_ids_given)
         return result
 
     # -- provenance capture ----------------------------------------------------
     def _record_generation(self, result: GenerationResult, prompt_len: int,
-                           n_new: int, request_source: Optional[str]) -> None:
+                           n_new: int, request_source: Optional[str],
+                           request_ids_given: bool = True) -> None:
         """Register the (response row -> request row) HAUGMENT op.
 
         With ``request_source`` the responses link to rows of an EXISTING
-        dataset (``request_ids`` are row indices into it) — lineage then
-        continues upstream through whatever pipeline produced it."""
+        dataset of the serving index (``request_ids`` are row indices into
+        it).  With an ``upstream=`` attach and no ``request_source``, the
+        fresh request dataset is LINKED to the upstream boundary through the
+        ``request_ids`` row alignment (each request row came from that
+        boundary row; ``-1`` marks a request with no upstream origin) —
+        lineage then continues into the data-prep pipeline across the
+        federation."""
         b = result.tokens.shape[0]
         # unique per INDEX, not per engine: several engines may share one
-        # prov_index (the documented pattern), or the index may already hold
+        # prov index (the documented pattern), or the index may already hold
         # earlier generations
         gid = self._n_generations
         while (f"responses@{gid}" in self.prov.datasets
@@ -132,12 +232,39 @@ class ServeEngine:
             gid += 1
         self._n_generations = gid + 1
         if request_source is None:
+            upstream = getattr(self, "_upstream", None)
+            alignment = None
+            if upstream is not None:
+                # the boundary link is a lineage ASSERTION — never fabricate
+                # it from the arange() default, and validate the alignment
+                # BEFORE any index mutation so a bad batch can't leave an
+                # orphan requests@N dataset behind
+                if not request_ids_given:
+                    raise ValueError(
+                        "upstream-attached engines need explicit request_ids "
+                        "(rows of the boundary dataset, -1 for requests with "
+                        "no upstream origin) to record provenance")
+                up_name, boundary = upstream
+                n_up = self.catalog.datasets[qualify(up_name, boundary)].n_rows
+                alignment = np.asarray(result.request_ids, np.int64)
+                if alignment.size and (alignment.max() >= n_up
+                                       or alignment.min() < -1):
+                    raise ValueError(
+                        f"request_ids must be rows of the boundary dataset "
+                        f"{qualify(up_name, boundary)!r} (in [-1, {n_up})), "
+                        f"got range [{alignment.min()}, {alignment.max()}]")
             req_ds = f"requests@{gid}"
             self.prov.add_source(req_ds, Table.from_columns({
                 "request_id": np.asarray(result.request_ids, np.float32),
                 "prompt_len": np.full(b, prompt_len, np.float32),
             }))
             src_rows = np.arange(b, dtype=np.int32)
+            if alignment is not None:
+                self.catalog.link(
+                    qualify(up_name, boundary),
+                    qualify(self._serve_name, req_ds),
+                    alignment=alignment,
+                )
         else:
             if request_source not in self.prov.datasets:
                 raise KeyError(f"unknown request dataset {request_source!r}")
@@ -161,32 +288,58 @@ class ServeEngine:
         result.request_dataset = req_ds
         result.response_dataset = resp_ds
 
-    # -- lineage queries (route through the shared session) ---------------------
+    # -- lineage queries (shared session / federation) ---------------------------
+    def _lineage_target(self, dst: str) -> Tuple[bool, str]:
+        """Resolve a lineage target dataset: ``(federated?, ref)``.
+
+        Accepts a dataset of the serving index (local plan), a qualified
+        catalog ref (``"prep/raw"``), or a bare dataset of the attached
+        upstream member (auto-qualified)."""
+        if dst in self.prov.datasets:
+            return False, dst
+        if "/" in dst and dst in self.catalog.datasets:
+            return True, dst
+        upstream = getattr(self, "_upstream", None)
+        if upstream is not None:
+            ref = qualify(upstream[0], dst)
+            if ref in self.catalog.datasets:
+                return True, ref
+        raise KeyError(
+            f"unknown lineage target {dst!r}: not a serving dataset, a "
+            f"qualified catalog ref, or an upstream dataset")
+
+    def _lineage_builder(self, result: GenerationResult, dst: str):
+        from repro.provenance import prov
+
+        if result.response_dataset is None:
+            raise ValueError("generation was not recorded "
+                             "(generate(..., record_provenance=True))")
+        federated, ref = self._lineage_target(dst)
+        if not federated:
+            qb = prov(self.prov).source(result.response_dataset)
+            return qb.backward().to(ref), self.session
+        qb = prov(self.catalog).source(
+            qualify(self._serve_name, result.response_dataset))
+        return qb.backward().to(ref), self.federation
+
     def response_lineage(self, result: GenerationResult, rows=None,
                          upstream: Optional[str] = None) -> np.ndarray:
         """Rows of ``upstream`` (default: the request dataset) that the given
-        response rows derive from — ONE composed-relation probe once the
-        relation is cached (shared across every request and session user)."""
-        if result.response_dataset is None:
-            raise ValueError("generation was not recorded "
-                             "(generate(..., record_provenance=True))")
-        from repro.provenance import prov
-
+        response rows derive from.  Serving-local targets probe ONE shared
+        composed relation; upstream targets cross the boundary through the
+        catalog's FederatedSession (plan split + mask stitch), so a response
+        token traces to raw prep sources without the engine ever holding the
+        prep index."""
         if rows is None:
             rows = np.ones(result.tokens.shape[0], dtype=bool)
-        dst = upstream if upstream is not None else result.request_dataset
-        return (prov(self.prov).source(result.response_dataset)
-                .rows(rows).backward().to(dst).run(self.session))
+        qb, sess = self._lineage_builder(
+            result, upstream if upstream is not None else result.request_dataset)
+        return qb.rows(rows).run(sess)
 
     def response_lineage_batch(self, result: GenerationResult, rows_batch,
                                upstream: Optional[str] = None) -> List[np.ndarray]:
-        """Per-request lineage for MANY probe sets in one fused pass (one
-        plan, one packed-bitplane probe of the shared composed relation)."""
-        if result.response_dataset is None:
-            raise ValueError("generation was not recorded "
-                             "(generate(..., record_provenance=True))")
-        from repro.provenance import prov
-
-        dst = upstream if upstream is not None else result.request_dataset
-        return (prov(self.prov).source(result.response_dataset)
-                .rows_batch(rows_batch).backward().to(dst).run(self.session))
+        """Per-request lineage for MANY probe sets in one fused pass — one
+        packed probe per member segment, even across the boundary."""
+        qb, sess = self._lineage_builder(
+            result, upstream if upstream is not None else result.request_dataset)
+        return qb.rows_batch(rows_batch).run(sess)

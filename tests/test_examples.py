@@ -49,3 +49,13 @@ def test_serve_with_lineage_example():
     out = _run_example("serve_with_lineage.py", timeout=600)
     assert "response row 2 derives from request row" in out
     assert "session stats (shared composed relations)" in out
+    assert "federation stats (single-entry catalog)" in out
+
+
+@pytest.mark.filterwarnings("ignore::DeprecationWarning")
+def test_federated_lineage_example():
+    out = _run_example("federated_lineage.py", timeout=600)
+    assert "capability: prep index is read-only from the serving tier" in out
+    assert "traces to raw user row" in out
+    assert "batch trace-to-source:" in out
+    assert "federation stats:" in out

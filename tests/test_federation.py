@@ -1,0 +1,825 @@
+"""Federation: catalog + boundary handles + FederatedSession.
+
+Four pillars, mirroring the acceptance criteria of the redesign:
+
+* **Parity** — randomized pipelines are replayed TWICE from one spec list:
+  once into a single merged index (the baseline the paper assumes), once
+  split at a random cut into a ``prep`` index and a ``serve`` index glued by
+  a catalog link.  Every federated answer must be byte-identical to the
+  seed reference on the merged index — forward, backward, batched,
+  co-queries, empty masks, ``-1`` sentinels (outer joins / appends), and
+  diamonds whose branches cross the boundary over TWO links.
+* **Capability isolation** — a :class:`BoundaryHandle` cannot mutate the
+  exporting index or resolve non-ancestor datasets (typed
+  :class:`CapabilityError`), and a :class:`ServeEngine` attached via
+  ``upstream=`` holds no reference to the prep index object.
+* **Explain / stats** — ``FederatedSession.explain`` surfaces per-segment
+  strategy/cost (never just a stitched total) and ``stats`` aggregates
+  per-index counters under the registered index name.
+* **Back-compat** — ``ServeEngine(prov_index=...)`` warns once per process
+  and answers identical lineage.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+import test_query_parity as tqp
+from repro.core.pipeline import ProvenanceIndex
+from repro.dataprep.table import Table
+from repro.dataprep.tracked import track
+from repro.provenance import (
+    BoundaryHandle,
+    CapabilityError,
+    FederatedSession,
+    FederationError,
+    ProvCatalog,
+    QueryPlan,
+    prov,
+)
+from repro.provenance.catalog import Link, qualify, split_ref
+from repro.serve import engine as serve_engine
+from repro.serve.engine import GenerationResult, ServeEngine
+
+
+# ===========================================================================
+# Spec-replay pipelines: ONE op list, built merged and split
+# ===========================================================================
+def _random_specs(seed):
+    """A replayable op-spec list (every random choice frozen into the spec,
+    so the merged and the federated build apply IDENTICAL ops)."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(15, 40))
+    K = max(3, n // 4)
+    base = {
+        "k": rng.integers(0, K, n).astype(np.float32),
+        "x": rng.normal(size=n).astype(np.float32),
+        "g": rng.integers(0, 4, n).astype(np.float32),
+    }
+    specs = []
+    for i in range(int(rng.integers(4, 8))):
+        code = int(rng.integers(0, 6))
+        if code == 0:
+            specs.append(("filter", float(rng.normal(-1.0, 0.4))))
+        elif code == 1:
+            specs.append(("scale",))
+        elif code == 2:
+            specs.append(("oversample", 0.3, int(rng.integers(1 << 20))))
+        elif code == 3:
+            specs.append(("undersample", 0.7, int(rng.integers(1 << 20))))
+        elif code == 4:
+            ref = {
+                "k": np.arange(K, dtype=np.float32),
+                f"z{i}": rng.normal(size=K).astype(np.float32),
+            }
+            specs.append(("join", ref, str(rng.choice(["inner", "outer"]))))
+        else:
+            m = int(rng.integers(3, 9))
+            ref = {
+                "x": rng.normal(size=m).astype(np.float32),
+                f"w{i}": rng.normal(size=m).astype(np.float32),
+            }
+            specs.append(("append", ref))
+    return base, specs
+
+
+def _apply(cur, spec, idx):
+    kind = spec[0]
+    if kind == "filter":
+        mask = np.asarray(cur.table.col("x")) > spec[1]
+        if not mask.any():
+            mask[0] = True
+        return cur.filter_rows(mask)
+    if kind == "scale":
+        return cur.value_transform("x", "scale", factor=2.0)
+    if kind == "oversample":
+        return cur.oversample(frac=spec[1], seed=spec[2])
+    if kind == "undersample":
+        return cur.undersample(frac=spec[1], seed=spec[2])
+    if kind == "join":
+        r = track(Table.from_columns({c: v.copy() for c, v in spec[1].items()}), idx)
+        return cur.join(r, on="k", how=spec[2])
+    if kind == "append":
+        r = track(Table.from_columns({c: v.copy() for c, v in spec[1].items()}), idx)
+        return cur.append(r)
+    raise ValueError(kind)
+
+
+def _build_merged(base, specs):
+    idx = ProvenanceIndex("merged")
+    cur = track(Table.from_columns({c: v.copy() for c, v in base.items()}),
+                idx, "src")
+    ids = ["src"]
+    for spec in specs:
+        cur = _apply(cur, spec, idx)
+        ids.append(cur.dataset_id)
+    cur.mark_sink()
+    return idx, ids
+
+
+def _build_federated(base, specs, cut):
+    """Split the SAME spec list at ``cut``: prep owns ops [0, cut), serve
+    owns ops [cut, ...) over a source holding the boundary table, glued by
+    an identity link.  Returns the catalog plus the merged-id -> qualified
+    ref mapping aligned with ``_build_merged``'s ``ids``."""
+    prep = ProvenanceIndex("prep")
+    cur = track(Table.from_columns({c: v.copy() for c, v in base.items()}),
+                prep, "src")
+    refs = [qualify("prep", "src")]
+    for spec in specs[:cut]:
+        cur = _apply(cur, spec, prep)
+        refs.append(qualify("prep", cur.dataset_id))
+    boundary = cur.dataset_id
+    serve = ProvenanceIndex("serve")
+    scur = track(cur.table, serve, "ingest")
+    for spec in specs[cut:]:
+        scur = _apply(scur, spec, serve)
+        refs.append(qualify("serve", scur.dataset_id))
+    scur.mark_sink()
+    catalog = ProvCatalog(f"fed-cut{cut}")
+    catalog.register("prep", prep).register("serve", serve)
+    catalog.link(qualify("prep", boundary), "serve/ingest")
+    return catalog, refs, qualify("serve", scur.dataset_id)
+
+
+SEEDS = list(range(8))
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_federated_record_parity_vs_merged(seed):
+    base, specs = _random_specs(seed)
+    merged, ids = _build_merged(base, specs)
+    rng = np.random.default_rng(seed + 1000)
+    cut = int(rng.integers(1, len(specs)))
+    catalog, refs, sink_ref = _build_federated(base, specs, cut)
+    src_ref = refs[0]
+    n_src = merged.datasets["src"].n_rows
+    n_sink = merged.datasets[ids[-1]].n_rows
+
+    # forward src -> every dataset (both sides of the boundary)
+    for rows in tqp._row_probes(rng, n_src):
+        for j, ref in enumerate(refs):
+            want = tqp.ref_q1(merged, "src", rows, ids[j])
+            got = prov(catalog).source(src_ref).rows(rows).forward().to(ref).run()
+            np.testing.assert_array_equal(got, want)
+    # backward sink -> every dataset
+    for rows in tqp._row_probes(rng, n_sink):
+        for j, ref in enumerate(refs):
+            want = tqp.ref_q2(merged, ids[-1], rows, ids[j])
+            got = (prov(catalog).source(sink_ref).rows(rows)
+                   .backward().to(ref).run())
+            np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("seed", SEEDS[:4])
+def test_federated_batch_and_co_queries_parity(seed):
+    base, specs = _random_specs(seed)
+    merged, ids = _build_merged(base, specs)
+    rng = np.random.default_rng(seed + 2000)
+    cut = int(rng.integers(1, len(specs)))
+    catalog, refs, sink_ref = _build_federated(base, specs, cut)
+    src_ref = refs[0]
+    n_src = merged.datasets["src"].n_rows
+    n_sink = merged.datasets[ids[-1]].n_rows
+
+    # batched backward with empty probes interleaved
+    probes = [[], [0], sorted(set(rng.integers(0, n_sink, 4).tolist())), []]
+    got = (prov(catalog).source(sink_ref).rows_batch(probes)
+           .backward().to(src_ref).run())
+    for p, g in zip(probes, got):
+        np.testing.assert_array_equal(g, tqp.ref_q2(merged, ids[-1], p, "src"))
+
+    # co_dependency across the boundary: probe a serve-side dataset, anchor
+    # at prep/src, answer at the sink
+    mid_j = max(cut, 1)
+    mid_ref, mid_id = refs[mid_j], ids[mid_j]
+    n_mid = merged.datasets[mid_id].n_rows
+    rows = [int(rng.integers(0, n_mid))]
+    want = tqp.ref_q11(merged, mid_id, rows, "src", ids[-1])
+    got = (prov(catalog).source(mid_ref).rows(rows)
+           .co_dependency(src_ref, sink_ref).run())
+    np.testing.assert_array_equal(got, want)
+
+    # co_contributory with explicit via at the sink
+    d2_j = 1
+    want = tqp.ref_q10(merged, "src", [0], ids[d2_j], via=ids[-1])
+    got = (prov(catalog).source(src_ref).rows([0])
+           .co_contributory(refs[d2_j], via=sink_ref).run())
+    np.testing.assert_array_equal(got, want)
+
+
+def test_empty_batch_and_no_path():
+    base, specs = _random_specs(3)
+    catalog, refs, sink_ref = _build_federated(base, specs, 1)
+    got = (prov(catalog).source(sink_ref).rows_batch([])
+           .backward().to(refs[0]).run())
+    assert got == []
+    # no dataflow path (src -> src never crosses back): answers empty, not
+    # an error — matching the walking engine
+    got = (prov(catalog).source(sink_ref).rows([0]).forward()
+           .to(refs[0]).run())
+    assert got.size == 0
+
+
+# ===========================================================================
+# Diamond ACROSS the boundary: two links carry two branches of one source
+# ===========================================================================
+def _cross_boundary_diamond(seed=0):
+    rng = np.random.default_rng(seed)
+    base = {
+        "k": np.arange(12, dtype=np.float32),
+        "x": rng.normal(size=12).astype(np.float32),
+    }
+    keep = rng.random(12) < 0.75
+    if not keep.any():
+        keep[0] = True
+
+    merged = ProvenanceIndex("merged")
+    s = track(Table.from_columns({c: v.copy() for c, v in base.items()}),
+              merged, "src")
+    a = s.filter_rows(keep)
+    b = s.value_transform("x", "scale", factor=2.0)
+    j = a.join(b, on="k", how="inner").mark_sink()
+
+    prep = ProvenanceIndex("prep")
+    ps = track(Table.from_columns({c: v.copy() for c, v in base.items()}),
+               prep, "src")
+    pa = ps.filter_rows(keep)
+    pb = ps.value_transform("x", "scale", factor=2.0)
+    serve = ProvenanceIndex("serve")
+    sa = track(pa.table, serve, "branch_a")
+    sb = track(pb.table, serve, "branch_b")
+    sj = sa.join(sb, on="k", how="inner").mark_sink()
+
+    catalog = ProvCatalog("diamond")
+    catalog.register("prep", prep).register("serve", serve)
+    catalog.link(qualify("prep", pa.dataset_id), "serve/branch_a")
+    catalog.link(qualify("prep", pb.dataset_id), "serve/branch_b")
+    return merged, j.dataset_id, catalog, qualify("serve", sj.dataset_id)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_cross_boundary_diamond_parity(seed):
+    """BOTH links must contribute: either branch alone under-counts, exactly
+    like the single-index diamond the multi-path hop-cache composes."""
+    merged, sink_id, catalog, sink_ref = _cross_boundary_diamond(seed)
+    n_src = merged.datasets["src"].n_rows
+    n_sink = merged.datasets[sink_id].n_rows
+    for rows in ([], [0], [2, 7], list(range(n_src))):
+        want = tqp.ref_q1(merged, "src", rows, sink_id)
+        got = (prov(catalog).source("prep/src").rows(rows)
+               .forward().to(sink_ref).run())
+        np.testing.assert_array_equal(got, want)
+    probes = [[i] for i in range(n_sink)]
+    got = (prov(catalog).source(sink_ref).rows_batch(probes)
+           .backward().to("prep/src").run())
+    for b, g in enumerate(got):
+        np.testing.assert_array_equal(g, tqp.ref_q2(merged, sink_id, [b], "src"))
+    sess = catalog.session()
+    assert sess.counters["links_crossed"] >= 2
+
+
+# ===========================================================================
+# Alignment stitching (the ServeEngine request_ids path, in isolation)
+# ===========================================================================
+def test_alignment_stitch_duplicates_and_unlinked():
+    prep = ProvenanceIndex("prep")
+    t = track(Table.from_columns({"k": np.arange(6, dtype=np.float32),
+                                  "x": np.ones(6, np.float32)}), prep, "raw")
+    t.mark_sink()
+    serve = ProvenanceIndex("serve")
+    s = track(Table.from_columns({"k": np.zeros(4, np.float32),
+                                  "x": np.ones(4, np.float32)}), serve, "req")
+    out = s.value_transform("x", "scale", factor=3.0).mark_sink()
+    catalog = ProvCatalog("aligned")
+    catalog.register("prep", prep).register("serve", serve)
+    # req row j came from raw row align[j]; row 3 has no upstream origin
+    catalog.link("prep/raw", "serve/req", alignment=[5, 2, 2, -1])
+
+    ref = qualify("serve", out.dataset_id)
+    # forward: raw row 2 feeds req rows {1, 2}
+    got = prov(catalog).source("prep/raw").rows([2]).forward().to(ref).run()
+    np.testing.assert_array_equal(got, [1, 2])
+    # backward: duplicates OR-accumulate, unlinked rows vanish
+    got = (prov(catalog).source(ref).rows_batch([[0], [1], [2], [3], [1, 2]])
+           .backward().to("prep/raw").run())
+    assert [g.tolist() for g in got] == [[5], [2], [2], [], [2]]
+
+
+def test_link_validation_errors():
+    prep = ProvenanceIndex("prep")
+    t = track(Table.from_columns({"x": np.ones(4, np.float32)}), prep, "raw")
+    derived = t.value_transform("x", "scale", factor=2.0)
+    serve = ProvenanceIndex("serve")
+    track(Table.from_columns({"x": np.ones(3, np.float32)}), serve, "req")
+    catalog = ProvCatalog()
+    catalog.register("prep", prep).register("serve", serve)
+    with pytest.raises(FederationError, match="different members"):
+        catalog.link("prep/raw", f"prep/{derived.dataset_id}")
+    with pytest.raises(FederationError, match="equal row counts"):
+        catalog.link("prep/raw", "serve/req")          # 4 vs 3, no alignment
+    with pytest.raises(FederationError, match="shape"):
+        catalog.link("prep/raw", "serve/req", alignment=[0, 1])
+    with pytest.raises(FederationError, match=r"\[-1"):
+        catalog.link("prep/raw", "serve/req", alignment=[0, 1, 9])
+    with pytest.raises(FederationError, match="producer"):
+        # can't land boundary rows on a dataset an op already produces
+        serve2 = ProvenanceIndex("serve2")
+        s2 = track(Table.from_columns({"x": np.ones(4, np.float32)}),
+                   serve2, "req2")
+        d2 = s2.value_transform("x", "scale", factor=2.0)
+        catalog.register("serve2", serve2)
+        catalog.link("prep/raw", f"serve2/{d2.dataset_id}")
+    with pytest.raises(FederationError, match="qualified"):
+        catalog.link("raw", "serve/req")
+    with pytest.raises(FederationError, match="unknown index"):
+        catalog.link("nope/raw", "serve/req")
+    with pytest.raises(FederationError, match="already registered"):
+        catalog.register("prep", prep)
+    with pytest.raises(FederationError, match="member name"):
+        catalog.register("a/b", prep)
+
+
+def test_cyclic_link_graph_raises():
+    a, b = ProvenanceIndex("a"), ProvenanceIndex("b")
+    ta = track(Table.from_columns({"x": np.ones(3, np.float32)}), a, "sa")
+    tb = track(Table.from_columns({"x": np.ones(3, np.float32)}), b, "sb")
+    a2 = ta.value_transform("x", "scale", factor=2.0)
+    b2 = tb.value_transform("x", "scale", factor=2.0)
+    catalog = ProvCatalog()
+    catalog.register("a", a).register("b", b)
+    catalog.link(f"a/{a2.dataset_id}", "b/sb")
+    catalog.link(f"b/{b2.dataset_id}", "a/sa")
+    with pytest.raises(FederationError, match="cycle"):
+        prov(catalog).source("a/sa").rows([0]).forward().to(f"b/{b2.dataset_id}").run()
+
+
+# ===========================================================================
+# Unsupported cross-index plan kinds are LOUD, single-index kinds delegate
+# ===========================================================================
+def test_cross_index_unsupported_kinds_raise():
+    base, specs = _random_specs(5)
+    catalog, refs, sink_ref = _build_federated(base, specs, 1)
+    with pytest.raises(FederationError, match="cross-index"):
+        (prov(catalog).source(refs[0]).rows([0]).attrs([0])
+         .forward().to(sink_ref).run())
+    with pytest.raises(FederationError, match="cross-index"):
+        (prov(catalog).source(refs[0]).rows([0]).forward().to(sink_ref)
+         .how().run())
+    with pytest.raises(FederationError, match="via"):
+        (prov(catalog).source(refs[0]).rows([0])
+         .co_contributory(sink_ref).run())
+
+
+def test_single_member_plans_delegate_with_full_kind_support():
+    base, specs = _random_specs(6)
+    merged, ids = _build_merged(base, specs)
+    catalog, refs, sink_ref = _build_federated(base, specs, len(specs))
+    # the whole chain lives in prep: every kind works through the catalog
+    sink_prep = refs[-2] if refs[-1].startswith("serve") else refs[-1]
+    # build the same spelling against the merged baseline
+    j = refs.index(sink_prep)
+    want = tqp.ref_q3(merged, "src", [0], [1], ids[j])
+    got = (prov(catalog).source(refs[0]).rows([0]).attrs([1])
+           .forward().to(sink_prep).run())
+    np.testing.assert_array_equal(got, want)
+    recs, hops = (prov(catalog).source(refs[0]).rows([0])
+                  .forward().to(sink_prep).how().run())
+    np.testing.assert_array_equal(recs, tqp.ref_q1(merged, "src", [0], ids[j]))
+    assert all(h.op_id >= 0 for h in hops)
+    meta = prov(catalog).source(sink_prep).transformations().run()
+    assert len(meta) == len(merged.upstream_ops(ids[j]))
+    sess = catalog.session()
+    assert sess.counters["single_index"] >= 3
+    assert sess.counters["federated"] == 0
+
+
+# ===========================================================================
+# run_many fusion across the boundary
+# ===========================================================================
+def test_run_many_fuses_federated_plans():
+    base, specs = _random_specs(7)
+    merged, ids = _build_merged(base, specs)
+    catalog, refs, sink_ref = _build_federated(base, specs, 2)
+    n_sink = merged.datasets[ids[-1]].n_rows
+    sess = FederatedSession(catalog)
+    plans = [prov(catalog).source(sink_ref).rows([i % n_sink])
+             .backward().to(refs[0]) for i in range(12)]
+    out = sess.run_many(plans)
+    assert len(out) == 12
+    for i, g in enumerate(out):
+        np.testing.assert_array_equal(
+            g, tqp.ref_q2(merged, ids[-1], [i % n_sink], "src"))
+    # ONE fused propagation: a single federated execution, the 12 plans
+    # packed into one (B=12) pass per member segment
+    assert sess.counters["fused_groups"] == 1
+    assert sess.counters["fused_plans"] == 12
+    assert sess.counters["federated"] == 1
+
+
+# ===========================================================================
+# Cross-boundary composed relations (the federation's own stitched cache)
+# ===========================================================================
+@pytest.mark.parametrize("seed", SEEDS[:4])
+def test_cross_relation_cache_parity(seed):
+    """With the demand threshold at 0 every cross route composes its
+    stitched relation immediately — answers must stay byte-identical to
+    the merged reference, and repeated probes hit the cache."""
+    pytest.importorskip("scipy")
+    base, specs = _random_specs(seed)
+    merged, ids = _build_merged(base, specs)
+    rng = np.random.default_rng(seed + 3000)
+    cut = int(rng.integers(1, len(specs)))
+    catalog, refs, sink_ref = _build_federated(base, specs, cut)
+    sess = FederatedSession(catalog, cross_min_demand=0)
+    n_src = merged.datasets["src"].n_rows
+    n_sink = merged.datasets[ids[-1]].n_rows
+
+    probes = [[], [0], sorted(set(rng.integers(0, n_sink, 4).tolist()))]
+    got = sess.run(prov(catalog).source(sink_ref).rows_batch(probes)
+                   .backward().to(refs[0]).plan())
+    for p, g in zip(probes, got):
+        np.testing.assert_array_equal(g, tqp.ref_q2(merged, ids[-1], p, "src"))
+    assert sess.counters["cross_composes"] == 1
+    assert sess.counters["cross_probes"] == 1
+    # forward route composes its own relation; the backward one is reused
+    fprobes = [[i] for i in range(min(6, n_src))]
+    got = sess.run(prov(catalog).source(refs[0]).rows_batch(fprobes)
+                   .forward().to(sink_ref).plan())
+    for p, g in zip(fprobes, got):
+        np.testing.assert_array_equal(g, tqp.ref_q1(merged, "src", p, ids[-1]))
+    sess.run(prov(catalog).source(sink_ref).rows([0]).backward()
+             .to(refs[0]).plan())
+    assert sess.counters["cross_composes"] == 2      # one per route
+    assert sess.counters["cross_probes"] == 3
+    assert sess.counters["segments"] == 0            # never fell back
+
+
+def test_cross_relation_cache_diamond_and_alignment():
+    pytest.importorskip("scipy")
+    merged, sink_id, catalog, sink_ref = _cross_boundary_diamond(1)
+    sess = FederatedSession(catalog, cross_min_demand=0)
+    n_src = merged.datasets["src"].n_rows
+    got = sess.run(prov(catalog).source("prep/src")
+                   .rows_batch([[i] for i in range(n_src)])
+                   .forward().to(sink_ref).plan())
+    for b, g in enumerate(got):
+        np.testing.assert_array_equal(g, tqp.ref_q1(merged, "src", [b], sink_id))
+    assert sess.counters["cross_composes"] == 1      # BOTH links in one relation
+
+    # alignment matrix parity (duplicates + unlinked rows), both directions
+    prep = ProvenanceIndex("prep")
+    track(Table.from_columns({"x": np.ones(6, np.float32)}), prep, "raw")
+    serve = ProvenanceIndex("serve")
+    s = track(Table.from_columns({"x": np.ones(4, np.float32)}), serve, "req")
+    out = s.value_transform("x", "scale", factor=3.0).mark_sink()
+    cat = ProvCatalog()
+    cat.register("prep", prep).register("serve", serve)
+    cat.link("prep/raw", "serve/req", alignment=[5, 2, 2, -1])
+    fsess = FederatedSession(cat, cross_min_demand=0)
+    ref = qualify("serve", out.dataset_id)
+    got = fsess.run(prov(cat).source(ref).rows_batch([[0], [1], [2], [3], [1, 2]])
+                    .backward().to("prep/raw").plan())
+    assert [g.tolist() for g in got] == [[5], [2], [2], [], [2]]
+    got = fsess.run(prov(cat).source("prep/raw").rows([2]).forward()
+                    .to(ref).plan())
+    np.testing.assert_array_equal(got, [1, 2])
+    assert fsess.counters["cross_composes"] == 2
+
+
+def test_unroutable_cross_compose_memoized_as_failed():
+    """A route with a member-level link path but NO dataset-level dataflow
+    path must not re-pay the compose attempt on every probe."""
+    pytest.importorskip("scipy")
+    prep = ProvenanceIndex("prep")
+    t = track(Table.from_columns({"x": np.ones(5, np.float32)}), prep, "raw")
+    a = t.value_transform("x", "scale", factor=2.0)
+    track(Table.from_columns({"x": np.ones(3, np.float32)}), prep, "orphan")
+    serve = ProvenanceIndex("serve")
+    s = track(a.table, serve, "ingest")
+    out = s.value_transform("x", "scale", factor=3.0).mark_sink()
+    catalog = ProvCatalog()
+    catalog.register("prep", prep).register("serve", serve)
+    catalog.link(qualify("prep", a.dataset_id), "serve/ingest")
+    sess = FederatedSession(catalog, cross_min_demand=0)
+    plan = (prov(catalog).source("prep/orphan").rows([0]).forward()
+            .to(qualify("serve", out.dataset_id)).plan())
+    got = sess.run(plan)
+    assert got.size == 0
+    assert sess.counters["cross_composes"] == 0      # nothing to stitch
+    assert len(sess._cross_failed) == 1
+    segments_after_first = sess.counters["segments"]
+    got = sess.run(plan)                             # memoized: no re-attempt
+    assert got.size == 0
+    assert sess.counters["cross_composes"] == 0
+    assert sess.counters["segments"] == segments_after_first
+    # a routable query on the same catalog still composes + caches
+    ok = sess.run(prov(catalog).source(qualify("serve", out.dataset_id))
+                  .rows([0]).backward().to("prep/raw").plan())
+    np.testing.assert_array_equal(ok, [0])
+    assert sess.counters["cross_composes"] == 1
+
+
+def test_cross_relation_survives_unrelated_links():
+    """The serving pattern: one new link per recorded generation, landing
+    on a brand-new requests@N dataset.  No cached route can reach it, so
+    hot stitched relations must SURVIVE — wholesale invalidation would
+    defeat the fast path in exactly the scenario it exists for."""
+    pytest.importorskip("scipy")
+    prep, exported, _, _ = _capability_fixture()
+    engine = object.__new__(ServeEngine)
+    engine._init_provenance("serve:cachetest",
+                            upstream=prep.export(exported.dataset_id))
+    sess = engine.federation
+    sess.cross_min_demand = 0
+    r1 = GenerationResult(tokens=np.zeros((3, 2), np.int32),
+                          request_ids=np.array([0, 1, 2]))
+    engine._record_generation(r1, prompt_len=2, n_new=2, request_source=None)
+    got1 = engine.response_lineage(r1, rows=[1], upstream="raw")
+    assert sess.counters["cross_composes"] == 1
+    # a second generation appends a new link; the cached route keeps
+    r2 = GenerationResult(tokens=np.zeros((2, 2), np.int32),
+                          request_ids=np.array([3, 0]))
+    engine._record_generation(r2, prompt_len=2, n_new=2, request_source=None)
+    again = engine.response_lineage(r1, rows=[1], upstream="raw")
+    np.testing.assert_array_equal(again, got1)
+    assert sess.counters["cross_composes"] == 1      # NOT recomposed
+    assert sess.counters["cross_probes"] >= 2
+
+
+def test_upstream_engine_requires_explicit_request_ids():
+    """With an upstream attach the boundary link is a lineage assertion:
+    the arange() default must never silently fabricate it, and a bad batch
+    must fail BEFORE mutating the serving index."""
+    prep, exported, _, _ = _capability_fixture()
+    engine = object.__new__(ServeEngine)
+    engine._init_provenance("serve:reqids",
+                            upstream=prep.export(exported.dataset_id))
+    r = GenerationResult(tokens=np.zeros((3, 2), np.int32),
+                         request_ids=np.arange(3))
+    with pytest.raises(ValueError, match="explicit request_ids"):
+        engine._record_generation(r, prompt_len=2, n_new=2,
+                                  request_source=None,
+                                  request_ids_given=False)
+    # out-of-range rows fail before add_source: no orphan requests@N
+    bad = GenerationResult(tokens=np.zeros((3, 2), np.int32),
+                          request_ids=np.array([0, 1, 99]))
+    with pytest.raises(ValueError, match="boundary dataset"):
+        engine._record_generation(bad, prompt_len=2, n_new=2,
+                                  request_source=None)
+    assert not any(d.startswith("requests@") for d in engine.prov.datasets)
+    assert not engine.catalog.links
+    # -1 = request with no upstream origin: records fine, traces to nothing
+    ok = GenerationResult(tokens=np.zeros((2, 2), np.int32),
+                          request_ids=np.array([2, -1]))
+    engine._record_generation(ok, prompt_len=2, n_new=2, request_source=None)
+    got = engine.response_lineage_batch(ok, [[0], [1]], upstream="raw")
+    assert [g.tolist() for g in got] == [[3], []]
+
+
+def test_upstream_tuple_attach_validates_dataset():
+    prep, exported, _, _ = _capability_fixture()
+    catalog = ProvCatalog()
+    catalog.register("prep", prep)
+    engine = object.__new__(ServeEngine)
+    with pytest.raises(KeyError):
+        engine._init_provenance(
+            "serve:typo", upstream=(catalog, "prep/definitely-missing"))
+    engine._init_provenance(
+        "serve:ok", upstream=(catalog, qualify("prep", exported.dataset_id)))
+    assert engine.catalog is catalog and "serve" in catalog.members
+
+
+def test_cross_relation_invalidates_on_new_link():
+    """A stitched relation must not survive a link-set change: adding the
+    second branch link changes the answer, exactly to the merged one."""
+    pytest.importorskip("scipy")
+    merged, sink_id, catalog, sink_ref = _cross_boundary_diamond(2)
+    # rebuild the same split world but register only branch_a's link first
+    prep_member = catalog.members["prep"]
+    serve_member = catalog.members["serve"]
+    link_a, link_b = catalog.links
+    partial = ProvCatalog("partial")
+    partial.register("prep", prep_member._index)
+    partial.register("serve", serve_member._index)
+    partial.link(link_a.up, link_a.down)
+    sess = FederatedSession(partial, cross_min_demand=0)
+    n_src = merged.datasets["src"].n_rows
+    all_rows = list(range(n_src))
+    plan = (prov(partial).source("prep/src").rows(all_rows)
+            .forward().to(sink_ref).plan())
+    one_branch = sess.run(plan)
+    both = tqp.ref_q1(merged, "src", all_rows, sink_id)
+    assert sess.counters["cross_composes"] == 1
+    # now declare the second boundary: the cached relation is stale
+    partial.link(link_b.up, link_b.down)
+    got = sess.run(plan)
+    np.testing.assert_array_equal(got, both)
+    assert sess.counters["cross_composes"] == 2      # recomposed after the link
+    assert len(one_branch) <= len(both)
+
+
+# ===========================================================================
+# Capability isolation
+# ===========================================================================
+def _capability_fixture():
+    prep = ProvenanceIndex("prep")
+    s = track(Table.from_columns({"k": np.arange(8, dtype=np.float32),
+                                  "x": np.ones(8, np.float32)}), prep, "raw")
+    exported = s.filter_rows(np.array([1, 1, 0, 1, 1, 0, 1, 1], bool))
+    sibling = s.value_transform("x", "scale", factor=2.0)  # NOT an ancestor
+    downstream = exported.value_transform("x", "scale", factor=3.0)
+    return prep, exported, sibling, downstream
+
+
+def test_boundary_handle_denies_mutation_and_non_ancestors():
+    prep, exported, sibling, downstream = _capability_fixture()
+    handle = prep.export(exported.dataset_id)
+    assert isinstance(handle, BoundaryHandle)
+    # mutation verbs raise the typed error
+    with pytest.raises(CapabilityError, match="read-only"):
+        handle.record([], "x", None, None)
+    with pytest.raises(CapabilityError, match="read-only"):
+        handle.add_source("y", None)
+    # ancestors resolve; the sibling branch and the downstream consumer don't
+    assert exported.dataset_id in handle.datasets
+    assert "raw" in handle.datasets
+    assert sibling.dataset_id not in handle.datasets
+    with pytest.raises(CapabilityError, match="not an ancestor"):
+        handle.datasets[sibling.dataset_id]
+    with pytest.raises(CapabilityError, match="not an ancestor"):
+        handle.datasets[downstream.dataset_id]
+    with pytest.raises(KeyError):
+        handle.datasets["never-existed"]
+    assert set(handle.datasets) == {"raw", exported.dataset_id}
+    # plans touching non-ancestors are rejected before execution
+    plan = QueryPlan(kind="record", source="raw",
+                     target=sibling.dataset_id, direction="fwd",
+                     rows=np.ones((1, 8), bool))
+    with pytest.raises(CapabilityError, match="not an ancestor"):
+        handle.run(plan)
+    with pytest.raises(CapabilityError):
+        handle.path_exists("raw", downstream.dataset_id)
+    # ancestor-only plans answer through the exporting index's session
+    ok = QueryPlan(kind="record", source="raw", target=exported.dataset_id,
+                   direction="fwd", rows=np.ones((1, 8), bool))
+    res = handle.run(ok)
+    np.testing.assert_array_equal(
+        res, tqp.ref_q1(prep, "raw", list(range(8)), exported.dataset_id))
+    # attenuation: re-export narrows, never widens
+    narrower = handle.export("raw")
+    assert set(narrower.datasets) == {"raw"}
+    with pytest.raises(CapabilityError):
+        handle.export(sibling.dataset_id)
+
+
+def test_catalog_resolution_respects_capabilities():
+    prep, exported, sibling, _ = _capability_fixture()
+    handle = prep.export(exported.dataset_id)
+    catalog = ProvCatalog()
+    catalog.register("up", handle)
+    assert qualify("up", "raw") in catalog.datasets
+    assert qualify("up", sibling.dataset_id) not in catalog.datasets
+    with pytest.raises(CapabilityError):
+        catalog.datasets[qualify("up", sibling.dataset_id)]
+    # the builder refuses the ref before a plan even compiles
+    with pytest.raises(KeyError):
+        prov(catalog).source(qualify("up", sibling.dataset_id))
+
+
+def test_serve_engine_upstream_holds_no_prep_index():
+    prep, exported, sibling, _ = _capability_fixture()
+    handle = prep.export(exported.dataset_id)
+    engine = object.__new__(ServeEngine)
+    engine._init_provenance("serve:captest", upstream=handle)
+    assert all(v is not prep for v in vars(engine).values())
+    assert engine.catalog.member_of(prep) is None
+    # the registered upstream member is the read-only capability
+    up = engine.catalog.members["prep"]
+    assert up is handle
+    with pytest.raises(CapabilityError):
+        up.record([], "x", None, None)
+    # lineage still reaches prep/raw through the federation
+    r = GenerationResult(tokens=np.zeros((3, 2), np.int32),
+                         request_ids=np.array([0, 2, 2]))
+    engine._record_generation(r, prompt_len=2, n_new=2, request_source=None)
+    got = engine.response_lineage(r, rows=[1], upstream="raw")
+    # request row 1 aligned to exported row 2, which is raw row 3
+    np.testing.assert_array_equal(got, [3])
+    got = engine.response_lineage_batch(r, [[0], [1], [2]], upstream="prep/raw")
+    assert [g.tolist() for g in got] == [[0], [3], [3]]
+
+
+def test_serve_engine_prov_index_shim_warns_once_and_matches():
+    prep = ProvenanceIndex("prep-shim")
+    s = track(Table.from_columns({"k": np.arange(6, dtype=np.float32),
+                                  "x": np.ones(6, np.float32)}), prep, "raw")
+    clean = s.filter_rows(np.array([1, 0, 1, 1, 0, 1], bool))
+    clean.mark_sink()
+    serve_engine._DEPRECATION_WARNED.discard("prov_index")
+    e = object.__new__(ServeEngine)
+    with pytest.warns(DeprecationWarning, match="prov_index"):
+        e._init_provenance("serve:shim", prov_index=prep)
+    # single-entry catalog wrap: the engine records INTO the passed index
+    assert e.prov is prep
+    assert list(e.catalog.members) == ["serve"]
+    e2 = object.__new__(ServeEngine)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        e2._init_provenance("serve:shim2", prov_index=prep)   # silent now
+    # identical lineage to the legacy merged-index behavior
+    r = GenerationResult(tokens=np.zeros((3, 2), np.int32),
+                         request_ids=np.array([0, 2, 2]))
+    e._record_generation(r, prompt_len=2, n_new=2,
+                         request_source=clean.dataset_id)
+    got = e.response_lineage(r, rows=[1], upstream="raw")
+    np.testing.assert_array_equal(got, tqp.ref_q2(prep, r.response_dataset,
+                                                  [1], "raw"))
+    with pytest.raises(ValueError, match="not both"):
+        e3 = object.__new__(ServeEngine)
+        e3._init_provenance("serve:both", upstream=prep.export("raw"),
+                            prov_index=prep)
+
+
+# ===========================================================================
+# explain / stats: per-segment visibility, per-index aggregation
+# ===========================================================================
+def test_explain_surfaces_per_segment_strategy_and_cost():
+    base, specs = _random_specs(9)
+    catalog, refs, sink_ref = _build_federated(base, specs, 2)
+    sess = catalog.session()
+    plan = (prov(catalog).source(sink_ref).rows([0])
+            .backward().to(refs[0]).plan())
+    ex = sess.explain(plan)
+    assert ex["federated"] is True
+    assert ex["strategy"] == "federated"
+    assert len(ex["segments"]) >= 2
+    seen_indexes = set()
+    for seg in ex["segments"]:
+        assert seg["strategy"] in ("walk", "hopcache")
+        assert "segment" in seg and "->" in seg["segment"]
+        seen_indexes.add(seg["index"])
+    assert seen_indexes == {"prep", "serve"}        # one+ segment PER side
+    assert len(ex["links"]) == 1
+    # single-member plans surface the inner planner verdict + owning index
+    ex1 = sess.explain(prov(catalog).source(refs[0]).rows([0]).forward()
+                       .to(refs[1]).plan())
+    assert ex1["federated"] is False
+    assert ex1["index"] == split_ref(refs[1])[0]
+    assert ex1["strategy"] in ("walk", "hopcache")
+
+
+def test_stats_aggregate_per_index_under_registered_name():
+    base, specs = _random_specs(10)
+    catalog, refs, sink_ref = _build_federated(base, specs, 2)
+    sess = catalog.session()
+    (prov(catalog).source(sink_ref).rows([0]).backward().to(refs[0])
+     .run(sess))
+    st = sess.stats()
+    assert set(st) == {"federation", "indexes"}
+    assert set(st["indexes"]) == {"prep", "serve"}
+    for name in ("prep", "serve"):
+        inner = st["indexes"][name]
+        assert inner["index"] == name                # registered == owning
+        assert inner["planner"]["plans"] >= 1        # each side executed
+        assert "hits" in inner["hopcache"]
+    fed = st["federation"]
+    assert fed["plans"] == 1 and fed["federated"] == 1
+    assert fed["segments"] >= 2 and fed["links_crossed"] == 1
+    # catalog.stats() is the same aggregation
+    assert ProvCatalog.stats(catalog)["federation"]["plans"] == 1
+
+
+def test_shared_session_on_catalog():
+    base, specs = _random_specs(11)
+    catalog, refs, sink_ref = _build_federated(base, specs, 1)
+    s1 = catalog.session()
+    assert catalog.session() is s1
+    with pytest.raises(ValueError):
+        catalog.session(nope=1)
+
+
+# ===========================================================================
+# IR plumbing
+# ===========================================================================
+def test_plan_refs_enumerate_footprint():
+    p = QueryPlan(kind="record", source="a/x", target="b/y", direction="fwd",
+                  rows=np.ones((1, 3), bool))
+    assert p.refs() == ("a/x", "b/y")
+    p = QueryPlan(kind="co_dependency", source="m", target="d3", anchor="d1",
+                  rows=np.ones((1, 3), bool))
+    assert set(p.refs()) == {"m", "d3", "d1"}
+
+
+def test_split_ref_and_link_repr():
+    assert split_ref("prep/a#1") == ("prep", "a#1")
+    assert split_ref("prep/a/b") == ("prep", "a/b")
+    with pytest.raises(FederationError):
+        split_ref("unqualified")
+    with pytest.raises(FederationError):
+        split_ref("/ds")
+    link = Link(up="a/x", down="b/y", alignment=None)
+    up = np.zeros((2, 4), bool)
+    up[0, 1] = True
+    np.testing.assert_array_equal(link.stitch_down(up, 4), up)
+    np.testing.assert_array_equal(link.stitch_up(up, 4), up)
