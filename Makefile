@@ -7,11 +7,14 @@ TIMEOUT ?= 900
 test:
 	timeout $(TIMEOUT) env PYTHONPATH=src $(PY) -m pytest -x -q
 
-# quick signal: the provenance core only (no model/trainer substrate)
+# quick signal: the provenance core only (no model/trainer substrate) —
+# incl. the structured-representation parity suite, so representation-layer
+# regressions fail in this cheap lane before the full suite runs
 test-fast:
 	timeout 300 env PYTHONPATH=src $(PY) -m pytest -x -q \
 	  tests/test_provtensor.py tests/test_schema.py tests/test_queries.py \
-	  tests/test_query_parity.py tests/test_compose.py tests/test_recompute.py
+	  tests/test_query_parity.py tests/test_structured.py \
+	  tests/test_compose.py tests/test_recompute.py
 
 bench-query:
 	env PYTHONPATH=src $(PY) benchmarks/bench_query.py

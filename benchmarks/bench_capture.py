@@ -1,7 +1,10 @@
 """Fig 3 + Table X: provenance-capture overhead — TensProv vs Chapman.
 
-Per use case: pipeline wall time without capture, with TensProv capture,
-with Chapman-style capture; overheads and the Table-X speedup column.
+Per use case: pipeline wall time with structured TensProv capture (the
+default: implicit identity/gather/range tensors, no COO allocation), with
+the legacy eager-COO TensProv capture, and with Chapman-style cell-level
+capture.  The Chapman mirror rides the supported ``add_record_hook``
+capture-observer API — no ``idx.record`` monkeypatching.
 """
 from __future__ import annotations
 
@@ -9,13 +12,14 @@ import time
 
 import numpy as np
 
+from repro.core.capture import force_coo_capture
 from repro.core.chapman import ChapmanIndex
 from repro.core.pipeline import ProvenanceIndex
-from repro.dataprep import ops as P
 from repro.dataprep.usecases import USECASES
 
 
 def _time(fn, reps=3):
+    fn()  # warm-up: allocator + lazy imports, so reps=1 (quick) stays honest
     best = float("inf")
     for _ in range(reps):
         t0 = time.perf_counter()
@@ -33,31 +37,37 @@ def run(quick: bool = False):
         def tens():
             runner(ProvenanceIndex(name), mk(0))
 
+        def tens_coo():
+            with force_coo_capture():
+                runner(ProvenanceIndex(name), mk(0))
+
         def chap():
             idx = ProvenanceIndex(name)
             ch = ChapmanIndex()
-            orig = idx.record
-
-            def record(input_ids, output_id, out_table, info,
-                       keep_output=False, input_tables=None):
-                ch.capture(input_ids, input_tables, output_id, out_table, info)
-                return orig(input_ids, output_id, out_table, info,
-                            keep_output=keep_output, input_tables=input_tables)
-
-            idx.record = record
+            idx.add_record_hook(
+                lambda input_ids, output_id, out_table, info, input_tables:
+                ch.capture(input_ids, input_tables, output_id, out_table, info))
             runner(idx, mk(0))
 
         t_tens = _time(tens, reps)
+        t_coo = _time(tens_coo, reps)
         t_chap = _time(chap, reps)
-        rows.append((name, t_tens, t_chap, t_chap / t_tens))
+        rows.append((name, t_tens, t_coo, t_chap,
+                     t_chap / t_tens, t_coo / t_tens))
     print("\n== Fig 3 / Table X: capture time (s) and speedup ==")
-    print(f"{'usecase':10s} {'TensProv':>10s} {'Chapman':>10s} {'speedup':>8s}")
-    for name, t, c, s in rows:
-        print(f"{name:10s} {t:10.3f} {c:10.3f} {s:8.1f}x")
+    print(f"{'usecase':10s} {'TensProv':>10s} {'Tens-COO':>10s} {'Chapman':>10s} "
+          f"{'vs Chap':>8s} {'vs COO':>7s}")
+    for name, t, c, ch, s, sc in rows:
+        print(f"{name:10s} {t:10.3f} {c:10.3f} {ch:10.3f} {s:8.1f}x {sc:6.2f}x")
     return {"table": "Fig3/X", "rows": [
-        {"usecase": n, "tensprov_s": t, "chapman_s": c, "speedup": s}
-        for n, t, c, s in rows]}
+        {"usecase": n, "tensprov_s": t, "tensprov_coo_s": c, "chapman_s": ch,
+         "speedup": s, "speedup_vs_coo": sc}
+        for n, t, c, ch, s, sc in rows]}
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="1 rep per system")
+    run(quick=ap.parse_args().quick)

@@ -5,8 +5,22 @@ preserving ops carry their kept-row lists straight out of the operation's own
 semantics (observation over preserved dataframe indices), while the join
 threads row-ids through the merge (active capture).  This module only turns
 those payloads into the tensors of §III-A — no content diffing anywhere.
+
+Capture emits STRUCTURED tensors by default: identity categories become a
+:class:`~repro.core.provtensor.SlotIdentity` scalar, horizontal ops wrap the
+capture payload (``kept_rows`` / ``src_rows`` / ``join_pairs``) as gather
+slots, append becomes two block offsets — the explicit ``(nnz, 1+k)`` COO is
+never allocated on this path (it stays available as a lazy mirror).  Only
+the multi-parent ``links`` payload still builds a raw COO.
+
+:func:`force_coo_capture` switches the legacy eager-COO construction back on
+for a scope — the parity suite and the memory/capture benches use it to pin
+byte-identical answers and before/after footprints.
 """
 from __future__ import annotations
+
+import contextlib
+from typing import Iterator, Optional
 
 import numpy as np
 
@@ -20,21 +34,44 @@ from repro.core.provtensor import (
     join_tensor,
 )
 
-__all__ = ["build_tensor"]
+__all__ = ["build_tensor", "force_coo_capture", "structured_capture_enabled"]
+
+_structured_stack = [True]
 
 
-def build_tensor(info: CaptureInfo) -> ProvTensor:
+def structured_capture_enabled() -> bool:
+    """Whether :func:`build_tensor` currently emits structured tensors."""
+    return _structured_stack[-1]
+
+
+@contextlib.contextmanager
+def force_coo_capture() -> Iterator[None]:
+    """Scope under which capture builds legacy explicit-COO tensors.
+
+    Baselines only: the parity suite records each random pipeline twice
+    (structured vs forced COO) and pins byte-identical query answers; the
+    Table-IX / Fig-3 benches use it for the before/after columns."""
+    _structured_stack.append(False)
+    try:
+        yield
+    finally:
+        _structured_stack.pop()
+
+
+def build_tensor(info: CaptureInfo, structured: Optional[bool] = None) -> ProvTensor:
+    if structured is None:
+        structured = _structured_stack[-1]
     cat = info.category
     if cat in IDENTITY_CATEGORIES:
         # transformation / vertical reduction / vertical augmentation:
         # 2-D binary identity tensor (paper §III-A a, b, d)
         if info.n_out != info.n_in[0]:
             raise ValueError(f"{info.op_name}: identity category but n_out != n_in")
-        return identity_tensor(info.n_out)
+        return identity_tensor(info.n_out, structured=structured)
     if cat is OpCategory.HREDUCE:
         if info.kept_rows is None:
             raise ValueError(f"{info.op_name}: HREDUCE needs kept_rows")
-        return hreduce_tensor(info.kept_rows, info.n_in[0])
+        return hreduce_tensor(info.kept_rows, info.n_in[0], structured=structured)
     if cat is OpCategory.HAUGMENT:
         if info.links is not None:
             # multi-parent augmentation (sequence packing et al.): raw COO
@@ -42,11 +79,12 @@ def build_tensor(info: CaptureInfo) -> ProvTensor:
                               coo=np.asarray(info.links, dtype=np.int32))
         if info.src_rows is None:
             raise ValueError(f"{info.op_name}: HAUGMENT needs src_rows or links")
-        return haugment_tensor(info.src_rows, info.n_in[0])
+        return haugment_tensor(info.src_rows, info.n_in[0], structured=structured)
     if cat is OpCategory.JOIN:
         if info.join_pairs is None:
             raise ValueError(f"{info.op_name}: JOIN needs join_pairs")
-        return join_tensor(info.join_pairs, info.n_in[0], info.n_in[1])
+        return join_tensor(info.join_pairs, info.n_in[0], info.n_in[1],
+                           structured=structured)
     if cat is OpCategory.APPEND:
-        return append_tensor(info.n_in[0], info.n_in[1])
+        return append_tensor(info.n_in[0], info.n_in[1], structured=structured)
     raise ValueError(f"unknown category {cat}")

@@ -38,8 +38,11 @@ __all__ = [
     "path_tensors",
     "op_bitplane",
     "op_csr",
+    "op_gather",
     "compose_pair",
     "compose_pair_csr",
+    "compose_gather",
+    "chain_gather",
     "compose_chain",
     "plan_chain",
     "dataset_lineage",
@@ -114,6 +117,44 @@ def compose_pair_csr(a, b):
     return c
 
 
+def op_gather(t: ProvTensor, slot: int) -> Optional[np.ndarray]:
+    """The op relation's implicit destination→source gather (int32
+    ``(n_out,)``, -1 = no link) when the slot is structured, else None."""
+    return t.slot_gather(slot)
+
+
+def compose_gather(g_pre: np.ndarray, g_step: np.ndarray) -> np.ndarray:
+    """Closed-form ``prefix ∘ step`` over gather relations: ONE ``np.take``.
+
+    ``g_pre`` maps mid→src, ``g_step`` maps dst→mid; the composition maps
+    dst→src, propagating the -1 "no link" sentinel through both hops.
+    Gather∘gather stays a gather, so a whole identity/selection chain folds
+    without ever leaving the implicit representation.
+    """
+    valid = g_step >= 0
+    return np.where(valid, g_pre[np.where(valid, g_step, 0)], np.int32(-1))
+
+
+def chain_gather(chain: Sequence[Tuple[object, int]]) -> Optional[np.ndarray]:
+    """Fold a whole op chain of structured slots into one dst→src gather;
+    None when any hop lacks structure (a multi-parent raw-COO relation).
+    Identity hops are eliminated outright (no take at all)."""
+    from repro.core.provtensor import SlotIdentity  # local: avoid wide import
+
+    acc: Optional[np.ndarray] = None  # None = identity so far
+    for op, slot in chain:
+        s = op.tensor.slot_structure(slot)
+        if s is None:
+            return None
+        if isinstance(s, SlotIdentity):
+            continue
+        g = op.tensor.slot_gather(slot)
+        acc = g if acc is None else compose_gather(acc, g)
+    if acc is None and chain:
+        acc = np.arange(chain[-1][0].tensor.n_out, dtype=np.int32)
+    return acc
+
+
 def compose_pair(a_bits: np.ndarray, b_bits: np.ndarray, n_mid: int,
                  use_pallas: Optional[bool] = True) -> np.ndarray:
     """(OR,AND)-compose packed relations A (R×mid) · B (mid×C) -> (R×C) packed.
@@ -181,6 +222,15 @@ def compose_chain(
     if not chain:
         n = index.datasets[src].n_rows
         return pack_bitplane(np.eye(n, dtype=bool))
+    g = chain_gather(chain)
+    if g is not None:
+        # the whole path is structured: fold the gathers closed-form (one
+        # take per non-identity hop) and expand to the packed plane once
+        n_src = index.datasets[src].n_rows
+        dense = np.zeros((n_src, len(g)), dtype=bool)
+        dst_rows = np.flatnonzero(g >= 0)
+        dense[g[dst_rows], dst_rows] = True
+        return pack_bitplane(dense)
     planes = [_relation_bitplane(op.tensor, slot) for op, slot in chain]
     rowdims = [op.tensor.n_in[slot] for op, slot in chain]
     coldims = [op.tensor.n_out for op, _ in chain]

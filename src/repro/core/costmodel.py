@@ -35,6 +35,7 @@ __all__ = [
     "compose_est",
     "spmm_cost",
     "bitplane_cost",
+    "structured_cost",
     "pick_backend",
     "plan_chain_stats",
     "CostModel",
@@ -48,6 +49,8 @@ C_SPMM_OVERHEAD = 45_000.0    # per scipy sparse matmul call
 C_SPMM_FLOP = 25.0            # per sparse boolean-semiring flop
 C_WORD_OP = 3.0               # per uint32 word op in a bitplane compose
 C_PROBE_OVERHEAD = 30_000.0   # per composed-relation probe call
+C_STRUCT_OVERHEAD = 20_000.0  # per closed-form (gather∘gather) compose call
+C_TAKE = 1.0                  # per element of the one np.take it performs
 
 # Density above which the packed-bitplane backend out-costs CSR composition:
 # csr flops ≈ 32·d_a·d_b × bitplane word ops, and a sparse flop costs ~8 word
@@ -58,11 +61,18 @@ DENSITY_THRESHOLD = 0.06
 
 @dataclasses.dataclass(frozen=True)
 class RelStats:
-    """Statistics of one binary relation (op step or composed accumulation)."""
+    """Statistics of one binary relation (op step or composed accumulation).
+
+    ``structured`` marks relations the structured layer keeps implicit —
+    at most one source row per destination row (identity / selection /
+    gather slots and their closed-form compositions): composing two such
+    relations is one O(cols) ``np.take``, and the result stores one int32
+    per destination row instead of a CSR."""
 
     rows: int
     cols: int
     nnz: int
+    structured: bool = False
 
     @property
     def density(self) -> float:
@@ -74,20 +84,25 @@ class RelStats:
         return self.nnz / self.rows if self.rows else 0.0
 
     def est_bytes(self) -> int:
-        """Estimated bytes of the cheaper materialization (CSR indices+ptr
-        vs packed bitplane) — the retention check against a cache budget."""
+        """Estimated bytes of the cheaper materialization (implicit gather
+        array vs CSR indices+ptr vs packed bitplane) — the retention check
+        against a cache budget."""
         csr = 8 * self.nnz + 4 * (self.rows + 1)
         bitplane = 4 * self.rows * max((self.cols + 31) // 32, 1)
+        if self.structured:
+            return min(4 * self.cols, csr, bitplane)
         return min(csr, bitplane)
 
     @staticmethod
     def from_slot(tensor, slot: int) -> "RelStats":
         """Stats of one op tensor's forward relation for one input slot —
-        O(nnz) count off the COO, no CSR/bitplane materialization."""
+        read off the implicit structure when the tensor has one, else an
+        O(nnz) count off the COO; no CSR/bitplane materialization."""
         return RelStats(
             rows=int(tensor.n_in[slot]),
             cols=int(tensor.n_out),
             nnz=tensor.slot_nnz(slot),
+            structured=tensor.slot_structure(slot) is not None,
         )
 
 
@@ -97,14 +112,16 @@ def compose_est(a: RelStats, b: RelStats) -> RelStats:
     Expected path count is ``a.nnz · b.out_degree``; the union over paths
     saturates the binary relation, modeled as ``cells·(1 - exp(-paths/cells))``
     (independent-placement approximation) so density never exceeds 1.
+    Gather∘gather stays a gather, so structuredness is preserved exactly.
     """
     rows, cols = a.rows, b.cols
+    structured = a.structured and b.structured
     cells = rows * cols
     if cells == 0:
-        return RelStats(rows, cols, 0)
+        return RelStats(rows, cols, 0, structured)
     paths = a.nnz * b.out_degree
     nnz = cells * -math.expm1(-paths / cells)
-    return RelStats(rows, cols, int(round(nnz)))
+    return RelStats(rows, cols, int(round(nnz)), structured)
 
 
 def spmm_cost(a: RelStats, b: RelStats) -> float:
@@ -118,19 +135,31 @@ def bitplane_cost(a: RelStats, b: RelStats) -> float:
     return C_WORD_OP * words
 
 
+def structured_cost(a: RelStats, b: RelStats) -> float:
+    """Closed-form gather∘gather compose cost: ONE ``np.take`` over the
+    destination dimension — nnz- and density-independent."""
+    return C_STRUCT_OVERHEAD + C_TAKE * b.cols
+
+
 def union_est(a: RelStats, b: RelStats) -> RelStats:
     """Estimated stats of ``a ∪ b`` — the sum over parallel DAG paths,
-    capped at full."""
+    capped at full.  A union generally breaks gather structure (two parents
+    per destination), so the estimate drops the structured flag; the
+    executor still keeps provably-disjoint unions (append's block split)
+    structured, making this conservative."""
     cells = a.rows * a.cols
     return RelStats(a.rows, a.cols, min(cells, a.nnz + b.nnz))
 
 
 def compose_cost_pair(a: RelStats, b: RelStats, backend: str,
                       have_scipy: bool = True) -> float:
-    """Cost of one ``a ∘ b`` merge.  ``backend="auto"`` prices the merge in
-    the representation :func:`pick_backend` would choose for its estimated
+    """Cost of one ``a ∘ b`` merge.  ``backend="auto"`` prices structured
+    pairs at their closed form (one take), everything else in the
+    representation :func:`pick_backend` would choose for the estimated
     result — the adaptive backend the composed hop-cache actually runs."""
     if backend == "auto":
+        if a.structured and b.structured:
+            return structured_cost(a, b)
         backend = pick_backend(compose_est(a, b).density, have_scipy)
     return spmm_cost(a, b) if backend == "csr" else bitplane_cost(a, b)
 
@@ -343,7 +372,8 @@ class CostModel:
         chain = self.chain_stats(src, dst)
         if chain is None or not chain:
             return {"strategy": "walk", "walk_ns": 0.0, "hopcache_ns": 0.0,
-                    "compose_ns": 0.0, "demand": 0, "retainable": True}
+                    "compose_ns": 0.0, "demand": 0, "retainable": True,
+                    "structured": False}
         pair = (src, dst)
         demand = self._demand.get(pair, 0) + n_probes
         if note:
@@ -364,4 +394,5 @@ class CostModel:
             "compose_ns": compose,
             "demand": demand,
             "retainable": retainable,
+            "structured": bool(rel is not None and rel.structured),
         }

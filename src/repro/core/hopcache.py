@@ -10,14 +10,27 @@ Design points:
 
 * **Per-entry backends.**  Every cached relation carries its own
   representation tag (:class:`_Entry`): ``csr`` (scipy sparse boolean
-  matmul — composition cost scales with nnz) or ``bitplane`` (packed uint32
+  matmul — composition cost scales with nnz), ``bitplane`` (packed uint32
   planes through :func:`compose_pair` — the :mod:`repro.kernels` bitmatmul,
-  Pallas on TPU).  ``backend="auto"`` (the host default) picks per pair by
+  Pallas on TPU), or ``structured`` (an IMPLICIT gather: one int32 array
+  mapping each destination row to its ≤1 source row, ``None`` for the pure
+  identity).  ``backend="auto"`` (the host default) picks per pair by
   the cost model's density threshold
   (:data:`repro.core.costmodel.DENSITY_THRESHOLD`) and CONVERTS an
   accumulation that densifies past it — a filter-heavy 0.1%-dense path stays
   CSR while a join blow-up rides the packed planes, in one cache.
   ``backend="csr"`` / ``backend="bitplane"`` force a uniform representation.
+* **Closed-form composition algebra.**  In ``auto`` mode, ops whose slot
+  relation is structured (:meth:`ProvTensor.slot_structure` — identities,
+  selections, gathers, append blocks, join sides) compose WITHOUT spmm:
+  an identity step is eliminated outright (the accumulation is reused
+  unchanged, whatever its backend); gather∘gather — and therefore
+  selection∘selection — is ONE ``np.take``; append's sibling-branch union
+  distributes over its disjoint blocks and stays a gather.  A composed
+  chain of selections is cached as ONE int32 array — its byte accounting
+  reflects the implicit form, not a CSR.  Only a genuinely multi-parent
+  step (raw-COO links) or an overlapping-branch union densifies the
+  accumulation into csr/bitplane, from where the old algebra takes over.
 * **Multi-path exact** — ``relation(src, dst)`` accumulates over the op DAG
   in topological order, UNIONING the contributions of every input slot whose
   dataset is reachable from ``src``.  On DAGs where ``src`` reaches ``dst``
@@ -64,6 +77,7 @@ from repro.core.compose import (
 from repro.core.costmodel import CostModel, pick_backend
 from repro.core.pipeline import ProvenanceIndex
 from repro.core.provtensor import (
+    SlotIdentity,
     bitplane_or_reduce,
     bitplane_popcount,
     pack_bitplane,
@@ -75,10 +89,16 @@ __all__ = ["ComposedIndex"]
 
 @dataclasses.dataclass
 class _Entry:
-    """One cached composed relation, tagged with its representation."""
+    """One cached composed relation, tagged with its representation.
 
-    backend: str              # "csr" | "bitplane"
-    rel: object               # scipy CSR (float32 ones) or packed uint32 plane
+    ``structured`` entries hold the relation implicitly: ``rel`` is an int32
+    ``(cols,)`` gather mapping each destination row to its (at most one)
+    source row, ``-1`` = no link — or ``None`` for the pure identity
+    (``rows == cols``), which costs nothing at all."""
+
+    backend: str              # "csr" | "bitplane" | "structured"
+    rel: object               # scipy CSR (float32 ones), packed uint32 plane,
+                              # or int32 gather (None = identity)
     rows: int                 # |src|
     cols: int                 # |dst|
     nnz: int
@@ -90,7 +110,9 @@ class _Entry:
         return self.nnz / cells if cells else 0.0
 
     def nbytes(self) -> int:
-        if self.backend == "csr":
+        if self.backend == "structured":
+            total = 0 if self.rel is None else int(self.rel.nbytes)
+        elif self.backend == "csr":
             r = self.rel
             total = int(r.data.nbytes + r.indices.nbytes + r.indptr.nbytes)
         else:
@@ -98,6 +120,13 @@ class _Entry:
         if self.relT is not None:
             total += int(self.relT.nbytes)
         return total
+
+    def gather(self) -> np.ndarray:
+        """The structured entry's (cols,) destination→source map, with the
+        identity materialized on demand."""
+        if self.rel is not None:
+            return self.rel
+        return np.arange(self.cols, dtype=np.int32)
 
 
 class ComposedIndex:
@@ -178,6 +207,9 @@ class ComposedIndex:
         return pick_backend(density, HAVE_SCIPY)
 
     def _identity_entry(self, n: int) -> _Entry:
+        if self.backend == "auto":
+            # the src == dst relation IS the identity: store nothing
+            return _Entry("structured", None, n, n, n)
         density = 1.0 / n if n else 0.0
         backend = self._resolve_backend(density)
         if backend == "csr":
@@ -194,11 +226,25 @@ class ComposedIndex:
         return op_csr(op.tensor, slot) if backend == "csr" \
             else op_bitplane(op.tensor, slot)
 
+    @staticmethod
+    def _structured_pairs(entry: _Entry):
+        """Valid (source_row, dest_row) link pairs of a structured entry."""
+        if entry.rel is None:
+            i = np.arange(entry.rows, dtype=np.int32)
+            return i, i
+        dst = np.flatnonzero(entry.rel >= 0).astype(np.int32)
+        return entry.rel[dst], dst
+
     def _to_bitplane(self, entry: _Entry) -> _Entry:
         if entry.backend == "bitplane":
             return entry
         self.conversions += 1
-        dense = np.asarray(entry.rel.toarray()) > 0
+        if entry.backend == "structured":
+            src, dst = self._structured_pairs(entry)
+            dense = np.zeros((entry.rows, entry.cols), dtype=bool)
+            dense[src, dst] = True
+        else:
+            dense = np.asarray(entry.rel.toarray()) > 0
         return _Entry("bitplane", pack_bitplane(dense),
                       entry.rows, entry.cols, entry.nnz)
 
@@ -208,18 +254,71 @@ class ComposedIndex:
         import scipy.sparse as sp
 
         self.conversions += 1
-        dense = unpack_bitplane(entry.rel, entry.cols)
-        return _Entry("csr", sp.csr_matrix(dense.astype(np.float32)),
-                      entry.rows, entry.cols, entry.nnz)
+        if entry.backend == "structured":
+            src, dst = self._structured_pairs(entry)
+            rel = sp.csr_matrix(
+                (np.ones(len(dst), dtype=np.float32), (src, dst)),
+                shape=(entry.rows, entry.cols))
+        else:
+            dense = unpack_bitplane(entry.rel, entry.cols)
+            rel = sp.csr_matrix(dense.astype(np.float32))
+        return _Entry("csr", rel, entry.rows, entry.cols, entry.nnz)
+
+    def _densify(self, entry: _Entry) -> _Entry:
+        """A structured entry leaving the closed-form algebra (overlapping
+        union, unstructured step): the representation the density picks."""
+        if entry.backend != "structured":
+            return entry
+        return self._to_csr(entry) \
+            if pick_backend(entry.density, HAVE_SCIPY) == "csr" \
+            else self._to_bitplane(entry)
+
+    def _structured_step_entry(self, op, slot: int) -> _Entry:
+        t = op.tensor
+        s = t.slot_structure(slot)
+        rel = None if isinstance(s, SlotIdentity) else t.slot_gather(slot)
+        return _Entry("structured", rel, t.n_in[slot], t.n_out,
+                      t.slot_nnz(slot))
 
     def _extend(self, prefix: Optional[_Entry], op, slot: int) -> _Entry:
-        """``prefix ∘ op[slot]`` as a fresh entry (prefix None = identity)."""
+        """``prefix ∘ op[slot]`` as a fresh entry (prefix None = identity).
+
+        Closed forms first (``auto`` mode): an identity step is ELIMINATED —
+        the result reuses the prefix's relation unchanged, whatever its
+        backend; a structured prefix composed with a structured step
+        (gather∘gather, so also selection∘selection) is ONE ``np.take``;
+        only an unstructured step densifies the prefix and falls back to
+        spmm / packed-plane contraction."""
         t = op.tensor
-        rows = t.n_in[slot] if prefix is None else prefix.rows
+        s = t.slot_structure(slot) if self.backend == "auto" else None
         if prefix is None:
+            if s is not None:
+                return self._structured_step_entry(op, slot)
             backend = self._resolve_backend(t.slot_density(slot))
             return _Entry(backend, self._step_rel(op, slot, backend),
                           t.n_in[slot], t.n_out, t.slot_nnz(slot))
+        if isinstance(s, SlotIdentity):
+            # identity elimination: prefix ∘ I = prefix.  The relation is
+            # COPIED (a memcpy, still no spmm/bitmatmul): both entries live
+            # in the cache under their own keys, and aliased arrays would
+            # make the budget double-count bytes and eviction free nothing.
+            rel = prefix.rel if prefix.rel is None else prefix.rel.copy()
+            return _Entry(prefix.backend, rel, prefix.rows, t.n_out,
+                          prefix.nnz)
+        if prefix.backend == "structured":
+            if prefix.rel is None:
+                # identity prefix: the step's own relation is the result
+                return self._extend(None, op, slot)
+            if s is not None:
+                g_step = t.slot_gather(slot)            # (n_out,) → |mid|
+                valid = g_step >= 0
+                g_new = np.where(valid,
+                                 prefix.rel[np.where(valid, g_step, 0)],
+                                 np.int32(-1))
+                return _Entry("structured", g_new, prefix.rows, t.n_out,
+                              int(np.count_nonzero(g_new >= 0)))
+            prefix = self._densify(prefix)
+        rows = prefix.rows
         step = self._step_rel(op, slot, prefix.backend)
         if prefix.backend == "csr":
             rel = compose_pair_csr(prefix.rel, step)
@@ -232,7 +331,20 @@ class ComposedIndex:
 
     def _union(self, a: _Entry, b: _Entry) -> _Entry:
         """(OR)-union two relations — the sum over parallel DAG paths.
-        Mixed representations meet on the packed plane (the denser side)."""
+
+        Two structured gathers whose links never disagree stay structured —
+        append's sibling branches land in DISJOINT destination blocks (the
+        block-append distribution), so their union is still one gather.
+        Everything else densifies; mixed representations meet on the packed
+        plane (the denser side)."""
+        if a.backend == "structured" and b.backend == "structured":
+            ga, gb = a.gather(), b.gather()
+            both = (ga >= 0) & (gb >= 0)
+            if not both.any() or np.array_equal(ga[both], gb[both]):
+                g = np.where(ga >= 0, ga, gb)
+                return _Entry("structured", g, a.rows, a.cols,
+                              int(np.count_nonzero(g >= 0)))
+        a, b = self._densify(a), self._densify(b)
         if a.backend != b.backend:
             a, b = self._to_bitplane(a), self._to_bitplane(b)
         if a.backend == "csr":
@@ -244,8 +356,9 @@ class ComposedIndex:
 
     def _settle(self, entry: _Entry) -> _Entry:
         """auto mode: convert an accumulation whose observed density crossed
-        the cost model's threshold (densification → packed plane, and back)."""
-        if self.backend != "auto":
+        the cost model's threshold (densification → packed plane, and back).
+        Structured entries never settle — the implicit form beats both."""
+        if self.backend != "auto" or entry.backend == "structured":
             return entry
         want = pick_backend(entry.density, HAVE_SCIPY)
         if want == entry.backend:
@@ -296,9 +409,15 @@ class ComposedIndex:
         return rels[dst]
 
     def relation(self, src: str, dst: str):
-        """The composed ``src`` → ``dst`` relation (scipy CSR or packed
-        bitplane, per the entry's backend), from cache or composed
-        incrementally.
+        """The composed ``src`` → ``dst`` relation, from cache or composed
+        incrementally: scipy CSR or packed bitplane per the entry's backend
+        (see :meth:`relation_backend`); a ``structured`` entry answers a
+        COPY of its int32 destination→source gather array (identity chains
+        materialize the arange) — a copy because the cached gather may BE an
+        op tensor's own capture payload, and handing out the live array
+        would let a caller corrupt the recorded provenance.  Callers that
+        need a uniform matrix regardless of backend use
+        :meth:`relation_csr`.
 
         Accumulates over the op DAG in topological order restricted to ops
         that lie on some ``src`` → ``dst`` path: each op's output relation is
@@ -307,7 +426,10 @@ class ComposedIndex:
         intermediate ``(src, mid)`` accumulation is cached — later queries
         to further datasets reuse the prefix.
         """
-        return self._relation_entry(src, dst).rel
+        entry = self._relation_entry(src, dst)
+        if entry.backend == "structured":
+            return entry.gather().copy()
+        return entry.rel
 
     def relation_backend(self, src: str, dst: str) -> str:
         """Which representation the (composed-on-demand) relation uses."""
@@ -327,6 +449,13 @@ class ComposedIndex:
             # a COPY: handing out the live cached arrays would let a
             # "read-only" BoundaryHandle corrupt the index's private cache
             return entry.rel.copy()
+        if entry.backend == "structured":
+            import scipy.sparse as sp
+
+            src_rows, dst_rows = self._structured_pairs(entry)
+            return sp.csr_matrix(
+                (np.ones(len(dst_rows), dtype=np.float32), (src_rows, dst_rows)),
+                shape=(entry.rows, entry.cols))
         import scipy.sparse as sp
 
         # unpack in row blocks: a large packed plane must not transiently
@@ -385,6 +514,13 @@ class ComposedIndex:
         if entry is None:
             return np.zeros(
                 (masks.shape[0], self.index.datasets[dst].n_rows), dtype=bool)
+        if entry.backend == "structured":
+            # one take along the gather: out[b, d] = masks[b, g[d]]
+            if entry.rel is None:
+                return masks[:, : entry.cols].copy()
+            g = entry.rel
+            valid = g >= 0
+            return masks[:, : entry.rows][:, np.where(valid, g, 0)] & valid[None, :]
         if entry.backend == "csr":
             return np.asarray(masks.astype(np.float32) @ entry.rel) > 0
         if self.use_pallas:
@@ -410,6 +546,16 @@ class ComposedIndex:
         if entry is None:
             return np.zeros(
                 (masks.shape[0], self.index.datasets[src].n_rows), dtype=bool)
+        if entry.backend == "structured":
+            # one scatter through the gather: out[b, g[d]] |= masks[b, d]
+            if entry.rel is None:
+                return masks[:, : entry.rows].copy()
+            g = entry.rel
+            out = np.zeros((masks.shape[0], entry.rows), dtype=bool)
+            sel = masks[:, : entry.cols] & (g >= 0)[None, :]
+            bs, ds = np.nonzero(sel)
+            out[bs, g[ds]] = True
+            return out
         if entry.backend == "csr":
             return (entry.rel @ masks.astype(np.float32).T).T > 0
         relT = self._entry_relT((src, dst), entry)
@@ -468,7 +614,7 @@ class ComposedIndex:
 
     # -- introspection --------------------------------------------------------
     def stats(self) -> Dict[str, int]:
-        per_backend = {"csr": 0, "bitplane": 0}
+        per_backend = {"csr": 0, "bitplane": 0, "structured": 0}
         for entry in self._cache.values():
             per_backend[entry.backend] += 1
         return {
@@ -477,6 +623,7 @@ class ComposedIndex:
             "entries": len(self._cache),
             "entries_csr": per_backend["csr"],
             "entries_bitplane": per_backend["bitplane"],
+            "entries_structured": per_backend["structured"],
             "bytes": self._bytes,
             "budget_bytes": self.memory_budget_bytes,
             "hits": self.hits,

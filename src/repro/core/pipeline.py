@@ -57,6 +57,25 @@ class ProvenanceIndex:
         self.version = 0                            # bumped per recorded op;
         self._composed = None                       # hop-caches key on it
         self._session = None                        # shared QuerySession
+        self._record_hooks: List = []               # capture observers
+
+    # -- capture hooks ---------------------------------------------------------
+    def add_record_hook(self, fn):
+        """Register a capture observer called on every :meth:`record`, after
+        input validation and BEFORE the provenance tensor is built, as
+        ``fn(input_ids, output_id, out_table, info, input_tables)``.
+
+        This is the supported way to mirror the capture stream into a second
+        system (the Chapman baseline in the benches, an audit log, a metrics
+        sink) — replacing the old ``idx.record = wrapper`` monkeypatching,
+        which silently broke whenever ``record`` grew a parameter.  Returns
+        ``fn`` so it can be used as a decorator."""
+        self._record_hooks.append(fn)
+        return fn
+
+    def remove_record_hook(self, fn) -> None:
+        """Unregister a hook added with :meth:`add_record_hook`."""
+        self._record_hooks.remove(fn)
 
     # -- registration ---------------------------------------------------------
     def add_source(self, dataset_id: str, table: Table) -> str:
@@ -99,6 +118,8 @@ class ProvenanceIndex:
                     f"{info.op_name}: input {d} has {self.datasets[d].n_rows} rows, "
                     f"capture says {info.n_in[k]}"
                 )
+        for hook in self._record_hooks:
+            hook(list(input_ids), output_id, out_table, info, input_tables)
         tensor = build_tensor(info)
         op = OpRecord(
             op_id=len(self.ops),

@@ -4,32 +4,46 @@ A :class:`ProvTensor` encodes the why-provenance of ONE data-processing
 operation: an order-(k+1) binary tensor ``T(o, i_1..i_k) = 1`` iff output
 record ``o`` derives from the tuple of input records ``(i_1..i_k)``.
 
-Representations held simultaneously (all index-only — the values list of a
-COO layout is omitted entirely because the tensor is binary, exactly as the
-paper's Section III-C argues):
+Two storage regimes, honoring the paper's "minimal memory" capture claim:
 
-* ``coo`` — ``(nnz, 1+k)`` int32 triples/tuples ``(out, in_1, .., in_k)``.
-  ``-1`` marks "no link" for that input (used by append, whose provenance the
-  paper stores as two block-diagonal 2-D tensors; we fuse them into one COO
-  with a sentinel so the query engine is uniform).
-* bidirectional CSR per input ``k`` — the array-resident realization of the
-  paper's 3-level rooted-DAG (Fig. 1).  A lineage probe is
-  ``row_ptr[q] : row_ptr[q+1]`` then a bounded gather of ``col_idx`` — the
-  paper's "three list accesses", vectorized over a batch of probes.
-* optional bitplanes — ``(rows, ceil(cols/32))`` uint32 bit-packed boolean
-  matrices used by the Einstein-summation composition path
-  (:mod:`repro.core.compose`); 32 boolean entries per lane word.
+* **Structured (implicit) representation** — the default capture output.
+  Most Table-I operations have relations with KNOWN structure: a
+  transformation / vertical op is the identity ``I_n`` (:class:`SlotIdentity`
+  — O(1) bytes, not ``8n``); a horizontal reduction or augmentation maps each
+  output to at most one input (:class:`SlotGather` — ONE int32 array, the
+  op's own ``kept``/``src`` payload, with ``-1`` sentinels); append's two
+  block-diagonal tensors are two offsets (:class:`SlotRange`); a join's two
+  slots are gathers over the pair list.  Nothing else is allocated at
+  capture time.
+* **Explicit COO** — ``(nnz, 1+k)`` int32 tuples ``(out, in_1, .., in_k)``,
+  ``-1`` marking "no link".  The fallback for relations with no usable
+  structure (multi-parent augmentation links), and a lazily-materialized
+  MIRROR of structured tensors for the few consumers that want the raw
+  index list (set-semantics canonicalization, parity baselines).
+
+Derived mirrors — bidirectional CSR per input slot (the array-resident
+realization of the paper's 3-level rooted DAG, Fig. 1) and packed uint32
+relation bitplanes (32 boolean entries per lane word, for the
+Einstein-summation composition path) — are built on demand from WHICHEVER
+regime the tensor holds and are byte-identical between the two (the
+structured parity suite pins this).  Structured slots additionally answer
+the mask-propagation hot path directly — a forward probe is one ``take``,
+a backward probe one scatter — so filter/gather-heavy query walks never
+build a CSR at all.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 __all__ = [
     "CSR",
     "ProvTensor",
+    "SlotIdentity",
+    "SlotGather",
+    "SlotRange",
     "identity_tensor",
     "hreduce_tensor",
     "haugment_tensor",
@@ -51,7 +65,7 @@ __all__ = [
 class CSR:
     """Compressed sparse rows: ``row_ptr`` (n_rows+1,), ``col_idx`` (nnz,).
 
-    ``neighbors(q)`` = ``col_idx[row_ptr[q] : row_ptr[q+1]]``.
+    ``neighbors(q)`` = ``col_idx[row_ptr[q] : row_ptr[q + 1]]``.
     """
 
     n_rows: int
@@ -89,6 +103,23 @@ class CSR:
             d = min(e - s, max_deg)
             out[i, :d] = self.col_idx[s : s + d]
         return out
+
+    def gather_rows(self, qs: np.ndarray) -> np.ndarray:
+        """Sorted-unique neighbors of a query-row set — one ragged gather,
+        no dense (n_cols,) mask allocated (the ``forward_rows`` /
+        ``backward_rows`` fast path).  Out-of-range / negative query rows
+        are ignored; an empty probe answers an empty int64 array."""
+        qs = np.asarray(qs, dtype=np.int64).reshape(-1)
+        qs = qs[(qs >= 0) & (qs < self.n_rows)]
+        if qs.size == 0:
+            return np.zeros(0, dtype=np.int64)
+        starts = self.row_ptr[qs]
+        degs = self.row_ptr[qs + 1] - starts
+        total = int(degs.sum())
+        if total == 0:
+            return np.zeros(0, dtype=np.int64)
+        flat = np.repeat(starts - np.concatenate(([0], np.cumsum(degs)[:-1])), degs) + np.arange(total)
+        return np.unique(self.col_idx[flat]).astype(np.int64)
 
     def neighbor_mask(self, qs: np.ndarray) -> np.ndarray:
         """OR of neighbor indicator rows for a query set -> bool (n_cols,)."""
@@ -201,47 +232,202 @@ def bitplane_popcount(words: np.ndarray) -> int:
 
 
 # ---------------------------------------------------------------------------
+# Structured (implicit) per-slot relation forms
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SlotIdentity:
+    """The relation is ``I_n`` — transformation / vertical ops.  O(1) bytes."""
+
+    n: int
+
+    def n_links(self) -> int:
+        return self.n
+
+    def nbytes(self) -> int:
+        return 0
+
+    def out_to_in(self, n_out: int) -> np.ndarray:
+        return np.arange(n_out, dtype=np.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class SlotGather:
+    """Each output derives from AT MOST one input: ``src[o]`` = input row of
+    output ``o``, ``-1`` = no link.  Horizontal reduction stores its ``kept``
+    list here, horizontal augmentation its ``src`` map, a join one gather per
+    side — the op's own capture payload, nothing re-encoded."""
+
+    src: np.ndarray  # int32 (n_out,)
+
+    def n_links(self) -> int:
+        return int(np.count_nonzero(self.src >= 0))
+
+    def nbytes(self) -> int:
+        return int(self.src.nbytes)
+
+    def out_to_in(self, n_out: int) -> np.ndarray:
+        return self.src
+
+
+@dataclasses.dataclass(frozen=True)
+class SlotRange:
+    """One identity block: outputs ``[start, start+length)`` map to inputs
+    ``[0, length)`` — append's block-diagonal tensors as two offsets."""
+
+    start: int
+    length: int
+
+    def n_links(self) -> int:
+        return self.length
+
+    def nbytes(self) -> int:
+        return 0
+
+    def out_to_in(self, n_out: int) -> np.ndarray:
+        g = np.full(n_out, -1, dtype=np.int32)
+        g[self.start : self.start + self.length] = np.arange(self.length, dtype=np.int32)
+        return g
+
+
+SlotStructure = Union[SlotIdentity, SlotGather, SlotRange]
+
+
+def _identity_csr(n: int) -> CSR:
+    i = np.arange(n, dtype=np.int32)
+    return CSR(n_rows=n, n_cols=n, row_ptr=np.arange(n + 1, dtype=np.int32), col_idx=i)
+
+
+def _gather_bwd_csr(g: np.ndarray, n_in: int) -> CSR:
+    """out→in CSR of a gather: every row has ≤1 entry — a cumsum, no sort.
+    Byte-identical to ``CSR.from_pairs(arange, g, ...)``."""
+    valid = g >= 0
+    row_ptr = np.zeros(len(g) + 1, dtype=np.int32)
+    np.cumsum(valid, out=row_ptr[1:])
+    return CSR(n_rows=len(g), n_cols=n_in, row_ptr=row_ptr,
+               col_idx=g[valid].astype(np.int32))
+
+
+# ---------------------------------------------------------------------------
 # The provenance tensor itself
 # ---------------------------------------------------------------------------
-@dataclasses.dataclass
 class ProvTensor:
-    """Order-(k+1) sparse binary tensor for one data-processing operation."""
+    """Order-(k+1) sparse binary tensor for one data-processing operation.
 
-    n_out: int
-    n_in: tuple  # sizes of each of the k input index spaces
-    coo: np.ndarray  # (nnz, 1+k) int32; col 0 = output index; -1 = no link
+    Construct with EITHER an explicit ``coo`` index list (the legacy
+    representation, still first-class) or implicit per-slot ``slots``
+    structures (the capture fast path).  All derived views — CSR halves,
+    bitplanes, the COO mirror itself — materialize lazily and identically
+    from either regime.
+    """
 
-    _fwd: Optional[list] = dataclasses.field(default=None, repr=False)
-    _bwd: Optional[list] = dataclasses.field(default=None, repr=False)
-    _bpf: Optional[list] = dataclasses.field(default=None, repr=False)
-    _bpb: Optional[list] = dataclasses.field(default=None, repr=False)
-    _slot_nnz: Optional[list] = dataclasses.field(default=None, repr=False)
+    def __init__(
+        self,
+        n_out: int,
+        n_in: tuple,
+        coo: Optional[np.ndarray] = None,
+        *,
+        slots: Optional[Sequence[SlotStructure]] = None,
+    ) -> None:
+        self.n_out = int(n_out)
+        self.n_in = tuple(int(n) for n in n_in)
+        if (coo is None) == (slots is None):
+            raise ValueError("pass exactly one of coo= or slots=")
+        self._slots: Optional[Tuple[SlotStructure, ...]] = None
+        self._coo: Optional[np.ndarray] = None
+        if slots is not None:
+            slots = tuple(slots)
+            if len(slots) != len(self.n_in):
+                raise ValueError(
+                    f"{len(slots)} slot structures inconsistent with "
+                    f"k={len(self.n_in)} inputs"
+                )
+            self._slots = slots
+        else:
+            coo = np.asarray(coo, dtype=np.int32)
+            if coo.ndim != 2 or coo.shape[1] != 1 + len(self.n_in):
+                raise ValueError(
+                    f"coo shape {coo.shape} inconsistent with k={len(self.n_in)} inputs"
+                )
+            self._coo = coo
+        self._fwd: Optional[list] = None
+        self._bwd: Optional[list] = None
+        self._bpf: Optional[list] = None
+        self._bpb: Optional[list] = None
+        self._slot_nnz: Optional[list] = None
+        self._sg: Optional[list] = None  # memoized out→in gather per slot
 
-    # -- construction -------------------------------------------------------
-    def __post_init__(self) -> None:
-        self.coo = np.asarray(self.coo, dtype=np.int32)
-        if self.coo.ndim != 2 or self.coo.shape[1] != 1 + len(self.n_in):
-            raise ValueError(
-                f"coo shape {self.coo.shape} inconsistent with k={len(self.n_in)} inputs"
-            )
+    def __repr__(self) -> str:  # keep the old dataclass-era readability
+        tag = "structured" if self.structured else "coo"
+        return (f"ProvTensor(n_out={self.n_out}, n_in={self.n_in}, "
+                f"nnz={self.nnz}, repr={tag})")
 
     @property
     def k(self) -> int:
         return len(self.n_in)
 
     @property
+    def structured(self) -> bool:
+        """Whether this tensor holds an implicit structured representation
+        (the explicit COO, if ever requested, is only a lazy mirror)."""
+        return self._slots is not None
+
+    @property
     def nnz(self) -> int:
-        return int(self.coo.shape[0])
+        """Rows of the (possibly virtual) COO index list — one per output
+        record carrying at least a sentinel, exactly the legacy count."""
+        if self._slots is not None:
+            return self.n_out
+        return int(self._coo.shape[0])
+
+    # -- representation access ----------------------------------------------
+    def slot_structure(self, inp: int) -> Optional[SlotStructure]:
+        """The implicit structure of the input-``inp`` relation, or None when
+        the tensor is explicit COO."""
+        return self._slots[inp] if self._slots is not None else None
+
+    def slot_gather(self, inp: int) -> Optional[np.ndarray]:
+        """int32 (n_out,) output→input map of a STRUCTURED slot (-1 = no
+        link), memoized; None for explicit-COO tensors.  Gather slots hand
+        back their own payload array — no copy."""
+        s = self.slot_structure(inp)
+        if s is None:
+            return None
+        if isinstance(s, SlotGather):
+            return s.src
+        if self._sg is None:
+            self._sg = [None] * self.k
+        if self._sg[inp] is None:
+            self._sg[inp] = s.out_to_in(self.n_out)
+        return self._sg[inp]
+
+    @property
+    def coo(self) -> np.ndarray:
+        """(nnz, 1+k) int32 explicit index list.  For structured tensors
+        this mirror materializes ON FIRST ACCESS (one row per output record,
+        matching the legacy constructors byte for byte) and is retained."""
+        if self._coo is None:
+            cols = [np.arange(self.n_out, dtype=np.int32)]
+            cols += [self.slot_gather(i) for i in range(self.k)]
+            self._coo = np.stack(cols, axis=1)
+        return self._coo
+
+    def as_coo(self) -> "ProvTensor":
+        """A forced-COO twin of this tensor (parity baselines / benches)."""
+        return ProvTensor(n_out=self.n_out, n_in=self.n_in, coo=self.coo.copy())
 
     # -- per-slot relation statistics (the cost model reads these) -----------
     def slot_nnz(self, inp: int) -> int:
-        """nnz of the input-``inp`` → output relation: COO entries whose slot
-        index is a real link (not the -1 sentinel).  Memoized O(nnz) count —
-        no CSR or bitplane is materialized."""
+        """nnz of the input-``inp`` → output relation: links that are real
+        (not the -1 sentinel).  Memoized; structured slots answer O(1)/O(n)
+        off the implicit form — no COO, CSR, or bitplane is materialized."""
         if self._slot_nnz is None:
             self._slot_nnz = [None] * self.k
         if self._slot_nnz[inp] is None:
-            self._slot_nnz[inp] = int(np.count_nonzero(self.coo[:, 1 + inp] >= 0))
+            s = self.slot_structure(inp)
+            if s is not None:
+                self._slot_nnz[inp] = s.n_links()
+            else:
+                self._slot_nnz[inp] = int(np.count_nonzero(self._coo[:, 1 + inp] >= 0))
         return self._slot_nnz[inp]
 
     def slot_shape(self, inp: int) -> tuple:
@@ -253,15 +439,26 @@ class ProvTensor:
         cells = self.n_in[inp] * self.n_out
         return self.slot_nnz(inp) / cells if cells else 0.0
 
+    def _slot_pairs(self, inp: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Valid (out, in) link pairs of one slot, from whichever regime."""
+        g = self.slot_gather(inp)
+        if g is not None:
+            out = np.flatnonzero(g >= 0).astype(np.int32)
+            return out, g[out]
+        return self._coo[:, 0], self._coo[:, 1 + inp]
+
     # -- the paper's optimized representation (bidirectional CSR) -----------
     def fwd(self, inp: int) -> CSR:
         """input-record -> output-records CSR for input ``inp`` (solid edges)."""
         if self._fwd is None:
             self._fwd = [None] * self.k
         if self._fwd[inp] is None:
-            self._fwd[inp] = CSR.from_pairs(
-                self.coo[:, 1 + inp], self.coo[:, 0], self.n_in[inp], self.n_out
-            )
+            s = self.slot_structure(inp)
+            if isinstance(s, SlotIdentity):
+                self._fwd[inp] = _identity_csr(s.n)
+            else:
+                out, inn = self._slot_pairs(inp)
+                self._fwd[inp] = CSR.from_pairs(inn, out, self.n_in[inp], self.n_out)
         return self._fwd[inp]
 
     def bwd(self, inp: int) -> CSR:
@@ -269,39 +466,113 @@ class ProvTensor:
         if self._bwd is None:
             self._bwd = [None] * self.k
         if self._bwd[inp] is None:
-            self._bwd[inp] = CSR.from_pairs(
-                self.coo[:, 0], self.coo[:, 1 + inp], self.n_out, self.n_in[inp]
-            )
+            s = self.slot_structure(inp)
+            if isinstance(s, SlotIdentity):
+                self._bwd[inp] = _identity_csr(s.n)
+            elif s is not None:
+                self._bwd[inp] = _gather_bwd_csr(self.slot_gather(inp), self.n_in[inp])
+            else:
+                self._bwd[inp] = CSR.from_pairs(
+                    self._coo[:, 0], self._coo[:, 1 + inp], self.n_out, self.n_in[inp]
+                )
         return self._bwd[inp]
 
     # -- paper §IV: slice + project, expressed on masks ---------------------
+    # Structured slots answer WITHOUT building a CSR: a forward probe is one
+    # take along the gather, a backward probe one scatter through it — the
+    # query walkers (repro.core.query) inherit these fast paths per hop.
     def forward_mask(self, inp: int, in_mask: np.ndarray) -> np.ndarray:
         """project(slice(T, p_in, rows), p_out) with rows given as a mask."""
+        s = self.slot_structure(inp)
+        if s is not None:
+            return self._forward_structured(
+                s, np.asarray(in_mask, dtype=bool)[None, :], inp)[0]
         rows = np.flatnonzero(np.asarray(in_mask, dtype=bool))
         return self.fwd(inp).neighbor_mask(rows)
 
     def backward_mask(self, inp: int, out_mask: np.ndarray) -> np.ndarray:
         """project(slice(T, p_out, rows), p_in)."""
+        s = self.slot_structure(inp)
+        if s is not None:
+            return self._backward_structured(
+                s, np.asarray(out_mask, dtype=bool)[None, :], inp)[0]
         rows = np.flatnonzero(np.asarray(out_mask, dtype=bool))
         return self.bwd(inp).neighbor_mask(rows)
 
     def forward_mask_batch(self, inp: int, in_masks: np.ndarray) -> np.ndarray:
         """Batched :meth:`forward_mask`: bool (B, n_in[inp]) -> (B, n_out)."""
+        s = self.slot_structure(inp)
+        if s is not None:
+            return self._forward_structured(
+                s, np.asarray(in_masks, dtype=bool), inp)
         return self.fwd(inp).neighbor_mask_many(in_masks)
 
     def backward_mask_batch(self, inp: int, out_masks: np.ndarray) -> np.ndarray:
         """Batched :meth:`backward_mask`: bool (B, n_out) -> (B, n_in[inp])."""
+        s = self.slot_structure(inp)
+        if s is not None:
+            return self._backward_structured(
+                s, np.asarray(out_masks, dtype=bool), inp)
         return self.bwd(inp).neighbor_mask_many(out_masks)
 
-    def forward_rows(self, inp: int, rows: Sequence[int]) -> np.ndarray:
-        m = np.zeros(self.n_in[inp], dtype=bool)
-        m[np.asarray(list(rows), dtype=np.int64)] = True
-        return np.flatnonzero(self.forward_mask(inp, m))
+    def _forward_structured(self, s: SlotStructure, masks: np.ndarray,
+                            inp: int) -> np.ndarray:
+        n_in = self.n_in[inp]
+        if isinstance(s, SlotIdentity):
+            return masks[:, : s.n].copy()
+        if isinstance(s, SlotRange):
+            out = np.zeros((masks.shape[0], self.n_out), dtype=bool)
+            out[:, s.start : s.start + s.length] = masks[:, : s.length]
+            return out
+        g = s.src
+        valid = g >= 0
+        safe = np.where(valid, g, 0)
+        return masks[:, :n_in][:, safe] & valid[None, :]
 
-    def backward_rows(self, inp: int, rows: Sequence[int]) -> np.ndarray:
-        m = np.zeros(self.n_out, dtype=bool)
-        m[np.asarray(list(rows), dtype=np.int64)] = True
-        return np.flatnonzero(self.backward_mask(inp, m))
+    def _backward_structured(self, s: SlotStructure, masks: np.ndarray,
+                             inp: int) -> np.ndarray:
+        n_in = self.n_in[inp]
+        if isinstance(s, SlotIdentity):
+            return masks[:, : s.n].copy()
+        if isinstance(s, SlotRange):
+            out = np.zeros((masks.shape[0], n_in), dtype=bool)
+            out[:, : s.length] = masks[:, s.start : s.start + s.length]
+            return out
+        g = s.src
+        out = np.zeros((masks.shape[0], n_in), dtype=bool)
+        sel = masks[:, : self.n_out] & (g >= 0)[None, :]
+        bs, os_ = np.nonzero(sel)
+        out[bs, g[os_]] = True
+        return out
+
+    def forward_rows(self, inp: int, rows) -> np.ndarray:
+        """Sorted-unique output rows linked to the given input rows.  Direct
+        CSR row-gather (or the structured fast path) — no ``list()``
+        round-trip, no dense mask; an empty probe answers empty."""
+        rows = _as_row_indices(rows, self.n_in[inp])
+        s = self.slot_structure(inp)
+        if isinstance(s, SlotIdentity):
+            return np.unique(rows)
+        if isinstance(s, SlotRange):
+            rows = rows[rows < s.length]
+            return np.unique(rows) + s.start
+        if isinstance(s, SlotGather):
+            return np.flatnonzero(np.isin(s.src, rows)).astype(np.int64)
+        return self.fwd(inp).gather_rows(rows)
+
+    def backward_rows(self, inp: int, rows) -> np.ndarray:
+        """Sorted-unique input rows the given output rows derive from."""
+        rows = _as_row_indices(rows, self.n_out)
+        s = self.slot_structure(inp)
+        if isinstance(s, SlotIdentity):
+            return np.unique(rows)
+        if isinstance(s, SlotRange):
+            rows = rows[(rows >= s.start) & (rows < s.start + s.length)]
+            return np.unique(rows) - s.start
+        if isinstance(s, SlotGather):
+            vals = s.src[rows]
+            return np.unique(vals[vals >= 0]).astype(np.int64)
+        return self.bwd(inp).gather_rows(rows)
 
     # -- bitplane views (for the einsum composition path) -------------------
     def bitplane_fwd(self, inp: int) -> np.ndarray:
@@ -310,9 +581,10 @@ class ProvTensor:
         if self._bpf is None:
             self._bpf = [None] * self.k
         if self._bpf[inp] is None:
+            out, inn = self._slot_pairs(inp)
+            valid = (out >= 0) & (inn >= 0)
             dense = np.zeros((self.n_in[inp], self.n_out), dtype=bool)
-            valid = self.coo[:, 1 + inp] >= 0
-            dense[self.coo[valid, 1 + inp], self.coo[valid, 0]] = True
+            dense[inn[valid], out[valid]] = True
             self._bpf[inp] = pack_bitplane(dense)
         return self._bpf[inp]
 
@@ -321,9 +593,10 @@ class ProvTensor:
         if self._bpb is None:
             self._bpb = [None] * self.k
         if self._bpb[inp] is None:
+            out, inn = self._slot_pairs(inp)
+            valid = (out >= 0) & (inn >= 0)
             dense = np.zeros((self.n_out, self.n_in[inp]), dtype=bool)
-            valid = self.coo[:, 1 + inp] >= 0
-            dense[self.coo[valid, 0], self.coo[valid, 1 + inp]] = True
+            dense[out[valid], inn[valid]] = True
             self._bpb[inp] = pack_bitplane(dense)
         return self._bpb[inp]
 
@@ -342,10 +615,22 @@ class ProvTensor:
 
     # -- memory accounting (Table IX / XI) -----------------------------------
     def nbytes(self, include_index: bool = True) -> int:
-        """Bytes of the provenance encoding: COO indices (the values list is
-        omitted — binary tensor) plus, when built, the bidirectional CSR and
-        any memoized relation bitplanes."""
-        total = int(self.coo.nbytes)
+        """Bytes of the provenance encoding.  Structured tensors count their
+        implicit payload only (a gather's int32 array; identity and range
+        blocks are free); explicit tensors count the COO index list (the
+        values list is omitted — binary tensor).  ``include_index`` adds any
+        lazily-built mirrors: the COO mirror of a structured tensor, the
+        bidirectional CSR halves, memoized relation bitplanes."""
+        if self._slots is not None:
+            total = sum(s.nbytes() for s in self._slots)
+            if include_index:
+                if self._coo is not None:
+                    total += int(self._coo.nbytes)
+                for g in self._sg or []:
+                    if g is not None:
+                        total += int(g.nbytes)
+        else:
+            total = int(self._coo.nbytes)
         if include_index:
             for half in (self._fwd or []), (self._bwd or []):
                 for csr in half:
@@ -358,53 +643,92 @@ class ProvTensor:
         return total
 
 
+def _as_row_indices(rows, n: int) -> np.ndarray:
+    """Probe rows -> flat int64 index array, without a ``list()`` round-trip.
+    Bounds-checked like the legacy dense-mask scatter (IndexError on
+    out-of-range), so behavior is unchanged for bad probes."""
+    if isinstance(rows, np.ndarray):
+        if rows.dtype == bool:
+            return np.flatnonzero(rows)
+        idx = rows.astype(np.int64, copy=False).reshape(-1)
+    else:
+        idx = np.fromiter(rows, dtype=np.int64)
+    if idx.size and (idx.min() < -n or idx.max() >= n):
+        raise IndexError(f"probe row out of range for axis of size {n}")
+    return np.where(idx < 0, idx + n, idx)  # legacy negative-index wraparound
+
+
 # ---------------------------------------------------------------------------
 # Constructors per operation category (paper §III-A a..g)
 # ---------------------------------------------------------------------------
-def identity_tensor(n: int) -> ProvTensor:
+def identity_tensor(n: int, structured: bool = True) -> ProvTensor:
     """Data transformation / vertical reduction / vertical augmentation:
-    2-D binary identity tensor."""
-    idx = np.arange(n, dtype=np.int32)
-    return ProvTensor(n_out=n, n_in=(n,), coo=np.stack([idx, idx], axis=1))
+    2-D binary identity tensor — stored as a SCALAR (:class:`SlotIdentity`),
+    not ``n`` explicit links."""
+    if not structured:
+        idx = np.arange(n, dtype=np.int32)
+        return ProvTensor(n_out=n, n_in=(n,), coo=np.stack([idx, idx], axis=1))
+    return ProvTensor(n_out=n, n_in=(n,), slots=(SlotIdentity(n),))
 
 
-def hreduce_tensor(kept: np.ndarray, n_in: int) -> ProvTensor:
+def hreduce_tensor(kept: np.ndarray, n_in: int, structured: bool = True) -> ProvTensor:
     """Horizontal reduction: masking tensor.  ``kept[i]`` = input index that
-    became output record i."""
+    became output record i — stored as the ``kept`` array itself."""
     kept = np.asarray(kept, dtype=np.int32)
-    out = np.arange(len(kept), dtype=np.int32)
-    return ProvTensor(n_out=len(kept), n_in=(n_in,), coo=np.stack([out, kept], axis=1))
+    if not structured:
+        out = np.arange(len(kept), dtype=np.int32)
+        return ProvTensor(n_out=len(kept), n_in=(n_in,),
+                          coo=np.stack([out, kept], axis=1))
+    return ProvTensor(n_out=len(kept), n_in=(n_in,), slots=(SlotGather(kept),))
 
 
-def haugment_tensor(src: np.ndarray, n_in: int) -> ProvTensor:
+def haugment_tensor(src: np.ndarray, n_in: int, structured: bool = True) -> ProvTensor:
     """Horizontal augmentation: ``src[o]`` = input index output o derives from,
-    or -1 for synthetic rows with no establishable mapping (paper §III-A e)."""
+    or -1 for synthetic rows with no establishable mapping (paper §III-A e) —
+    stored as the ``src`` gather array itself."""
     src = np.asarray(src, dtype=np.int32)
-    out = np.arange(len(src), dtype=np.int32)
-    coo = np.stack([out, src], axis=1)
-    return ProvTensor(n_out=len(src), n_in=(n_in,), coo=coo)
+    if not structured:
+        out = np.arange(len(src), dtype=np.int32)
+        return ProvTensor(n_out=len(src), n_in=(n_in,),
+                          coo=np.stack([out, src], axis=1))
+    return ProvTensor(n_out=len(src), n_in=(n_in,), slots=(SlotGather(src),))
 
 
-def join_tensor(pairs: np.ndarray, n_left: int, n_right: int, n_out: Optional[int] = None) -> ProvTensor:
+def join_tensor(pairs: np.ndarray, n_left: int, n_right: int,
+                n_out: Optional[int] = None, structured: bool = True) -> ProvTensor:
     """Join: order-3 tensor.  ``pairs`` is (n_out, 2) of (left_idx, right_idx)
-    for each output record, or -1 for the dangling side of outer joins."""
+    for each output record, or -1 for the dangling side of outer joins —
+    each side is one gather over the pair list."""
     pairs = np.asarray(pairs, dtype=np.int32)
     if n_out is None:
         n_out = len(pairs)
-    out = np.arange(len(pairs), dtype=np.int32)
-    coo = np.concatenate([out[:, None], pairs], axis=1)
-    return ProvTensor(n_out=n_out, n_in=(n_left, n_right), coo=coo)
+    if not structured or n_out != len(pairs):
+        out = np.arange(len(pairs), dtype=np.int32)
+        coo = np.concatenate([out[:, None], pairs], axis=1)
+        return ProvTensor(n_out=n_out, n_in=(n_left, n_right), coo=coo)
+    return ProvTensor(
+        n_out=n_out,
+        n_in=(n_left, n_right),
+        slots=(SlotGather(np.ascontiguousarray(pairs[:, 0])),
+               SlotGather(np.ascontiguousarray(pairs[:, 1]))),
+    )
 
 
-def append_tensor(n_left: int, n_right: int) -> ProvTensor:
-    """Append: the paper's two block-diagonal 2-D tensors, fused via the -1
-    sentinel.  Output rows [0, n_left) link to the left input, rows
-    [n_left, n_left+n_right) to the right input."""
-    out = np.arange(n_left + n_right, dtype=np.int32)
-    left = np.where(out < n_left, out, -1).astype(np.int32)
-    right = np.where(out >= n_left, out - n_left, -1).astype(np.int32)
+def append_tensor(n_left: int, n_right: int, structured: bool = True) -> ProvTensor:
+    """Append: the paper's two block-diagonal 2-D tensors — TWO BLOCK OFFSETS
+    (:class:`SlotRange`), no index arrays at all.  Output rows [0, n_left)
+    link to the left input, rows [n_left, n_left+n_right) to the right."""
+    if not structured:
+        out = np.arange(n_left + n_right, dtype=np.int32)
+        left = np.where(out < n_left, out, -1).astype(np.int32)
+        right = np.where(out >= n_left, out - n_left, -1).astype(np.int32)
+        return ProvTensor(
+            n_out=n_left + n_right,
+            n_in=(n_left, n_right),
+            coo=np.stack([out, left, right], axis=1),
+        )
     return ProvTensor(
         n_out=n_left + n_right,
         n_in=(n_left, n_right),
-        coo=np.stack([out, left, right], axis=1),
+        slots=(SlotRange(0, n_left), SlotRange(n_left, n_right)),
     )

@@ -15,6 +15,11 @@ fully array-vectorized:
   per-attribute rank/select dispatch;
 * ``_cells`` materializes the union of (row-set × attr-set) products as a
   broadcasted outer product over packed masks, then one ``argwhere``;
+* record-level hops through STRUCTURED op tensors (identities, selections,
+  gathers, append blocks — the capture default) skip the CSR entirely: the
+  per-op ``forward_mask_batch`` / ``backward_mask_batch`` dispatch to a
+  take/scatter fast path on the implicit form, so a filter/gather-heavy
+  walk allocates no per-op index at all;
 * the batch walkers answer a whole probe batch in one pass — the per-op CSR
   gather covers all batch elements with a single ragged gather
   (:meth:`CSR.neighbor_mask_many`) — and can collect per-probe ``Hop``
@@ -87,10 +92,15 @@ class Hop:
 # Probe normalization: single probe vs batch of probes
 # ---------------------------------------------------------------------------
 def _as_mask(rows, n: int) -> np.ndarray:
-    if isinstance(rows, np.ndarray) and rows.dtype == bool:
-        return rows
+    if isinstance(rows, np.ndarray):
+        if rows.dtype == bool:
+            return rows
+        idx = rows.astype(np.int64, copy=False).reshape(-1)
+    else:
+        # no list() round-trip: consume any iterable of row indices directly
+        idx = np.fromiter(rows, dtype=np.int64)
     m = np.zeros(n, dtype=bool)
-    m[np.asarray(list(rows), dtype=np.int64)] = True
+    m[idx] = True
     return m
 
 

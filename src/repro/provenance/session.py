@@ -184,6 +184,9 @@ class QuerySession:
             "compose_ns": sum(leg["compose_ns"] for leg in legs),
             "demand": min(leg["demand"] for leg in legs),
             "retainable": all(leg["retainable"] for leg in legs),
+            # every leg estimated implicit: the hop-cache would hold this
+            # plan's relations as gather arrays, not CSRs/bitplanes
+            "structured": all(bool(leg.get("structured")) for leg in legs),
             "legs": legs if len(legs) > 1 else None,
         }
 

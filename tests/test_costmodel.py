@@ -414,8 +414,15 @@ def _dense_join_pipeline():
 
 
 def test_auto_mixes_backends_in_one_cache_with_parity():
+    """Pinned to forced-COO capture: with structured tensors the sparse
+    prefixes stay implicit gathers and never touch CSR — this test exercises
+    the explicit csr↔bitplane conversion machinery (densification mid-chain),
+    which must keep working for unstructured relations.  The structured
+    three-way mix is covered in tests/test_structured.py."""
     pytest.importorskip("scipy")
-    idx, sink = _dense_join_pipeline()
+    from repro.core.capture import force_coo_capture
+    with force_coo_capture():
+        idx, sink = _dense_join_pipeline()
     auto = ComposedIndex(idx, backend="auto")
     want = tqp.ref_q1(idx, "src", [0, 5], sink)
     np.testing.assert_array_equal(auto.q1_forward("src", [0, 5], sink), want)

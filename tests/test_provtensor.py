@@ -94,11 +94,30 @@ def test_set_semantics_canonicalize():
 
 
 def test_nbytes_accounting():
-    t = join_tensor(np.array([[1, 0], [3, 1]]), n_left=4, n_right=2)
+    pairs = np.array([[1, 0], [3, 1]])
+    t = join_tensor(pairs, n_left=4, n_right=2)
     base = t.nbytes()
-    assert base == t.coo.nbytes
+    assert base == 2 * 2 * 4          # two implicit int32 gathers, no COO
+    legacy = join_tensor(pairs, n_left=4, n_right=2, structured=False)
+    assert legacy.nbytes() == legacy.coo.nbytes > base
     t.fwd(0); t.bwd(1)
-    assert t.nbytes() > base          # built CSR halves are accounted
+    assert t.nbytes() > base          # built CSR mirrors are accounted
+    assert t.nbytes(include_index=False) == base
+
+
+def test_structured_tensors_store_implicit_forms():
+    # identity and append are O(1) bytes; the COO mirror is lazy and exact
+    ident = identity_tensor(1000)
+    assert ident.structured and ident.nbytes() == 0
+    app = append_tensor(3, 2)
+    assert app.structured and app.nbytes() == 0
+    legacy = append_tensor(3, 2, structured=False)
+    np.testing.assert_array_equal(app.coo, legacy.coo)
+    assert app.nnz == legacy.nnz == 5
+    red = hreduce_tensor(np.array([1, 3, 4]), n_in=6)
+    assert red.structured and red.nbytes() == 3 * 4
+    np.testing.assert_array_equal(
+        red.coo, hreduce_tensor(np.array([1, 3, 4]), 6, structured=False).coo)
 
 
 def test_coo_validation():

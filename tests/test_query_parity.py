@@ -520,7 +520,8 @@ def test_auto_backend_matches_both_forced_backends(seed):
         np.testing.assert_array_equal(a, c)
         np.testing.assert_array_equal(a, b)
     st = auto.stats()
-    assert st["entries"] == st["entries_csr"] + st["entries_bitplane"]
+    assert st["entries"] == (st["entries_csr"] + st["entries_bitplane"]
+                             + st["entries_structured"])
 
 
 @pytest.mark.parametrize("seed", SEEDS[:5])
