@@ -1,7 +1,7 @@
 PY ?= python
 TIMEOUT ?= 900
 
-.PHONY: test test-fast bench-query bench-quick ci
+.PHONY: test test-fast test-sharded bench-query bench-quick ci
 
 # tier-1 verify (ROADMAP.md): the whole suite, stop at first failure
 test:
@@ -15,6 +15,14 @@ test-fast:
 	  tests/test_provtensor.py tests/test_schema.py tests/test_queries.py \
 	  tests/test_query_parity.py tests/test_structured.py \
 	  tests/test_compose.py tests/test_recompute.py
+
+# the CI multi-device lane locally: 8 forced host CPU devices so the
+# shard_map collective walkers and mesh integration paths really execute
+test-sharded:
+	timeout $(TIMEOUT) env PYTHONPATH=src JAX_PLATFORMS=cpu \
+	  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+	  $(PY) -m pytest -x -q tests/test_sharded_parity.py \
+	  tests/test_federation.py tests/test_integration_sharded.py
 
 bench-query:
 	env PYTHONPATH=src $(PY) benchmarks/bench_query.py

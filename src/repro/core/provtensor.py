@@ -44,6 +44,7 @@ __all__ = [
     "SlotIdentity",
     "SlotGather",
     "SlotRange",
+    "shard_ranges",
     "identity_tensor",
     "hreduce_tensor",
     "haugment_tensor",
@@ -439,6 +440,59 @@ class ProvTensor:
         cells = self.n_in[inp] * self.n_out
         return self.slot_nnz(inp) / cells if cells else 0.0
 
+    def slot_nnz_range(self, inp: int, lo: int, hi: int) -> int:
+        """nnz of the input-``inp`` relation restricted to output rows
+        ``[lo, hi)`` — the shard-local statistic the sharded hop-cache's
+        cost model reads.  Structured slots answer without materializing
+        the slice (an identity/range block is interval arithmetic, a
+        gather one ``count_nonzero`` over the window)."""
+        lo = max(int(lo), 0)
+        hi = min(int(hi), self.n_out)
+        if hi <= lo:
+            return 0
+        s = self.slot_structure(inp)
+        if isinstance(s, SlotIdentity):
+            return max(0, min(hi, s.n) - lo)
+        if isinstance(s, SlotRange):
+            return max(0, min(hi, s.start + s.length) - max(lo, s.start))
+        if isinstance(s, SlotGather):
+            return int(np.count_nonzero(s.src[lo:hi] >= 0))
+        out = self._coo[:, 0]
+        inn = self._coo[:, 1 + inp]
+        return int(np.count_nonzero((out >= lo) & (out < hi) & (inn >= 0)))
+
+    def slice_rows(self, lo: int, hi: int) -> "ProvTensor":
+        """The tensor restricted to output rows ``[lo, hi)``: a ProvTensor
+        with ``n_out = hi - lo`` over the SAME (global) input spaces.
+
+        This is the shard-construction primitive: partitioning every op
+        tensor by contiguous output-row range yields per-shard tensors whose
+        derived CSR/bitplane mirrors are the row slices of the full mirrors,
+        so per-shard mask propagation concatenated (forward) or OR-reduced
+        (backward) over shards is byte-identical to the merged walk.
+
+        Structured slots stay structured: an identity/range block becomes a
+        window gather, a gather slot slices its payload (zero-copy view).
+        Explicit COO keeps the rows landing in the window, out-column
+        shifted to shard-local coordinates."""
+        lo = max(int(lo), 0)
+        hi = min(int(hi), self.n_out)
+        if hi < lo:
+            raise ValueError(f"bad row range [{lo}, {hi})")
+        if self._slots is not None:
+            sliced = []
+            for s in self._slots:
+                if isinstance(s, SlotGather):
+                    sliced.append(SlotGather(s.src[lo:hi]))
+                else:
+                    sliced.append(SlotGather(s.out_to_in(self.n_out)[lo:hi]))
+            return ProvTensor(n_out=hi - lo, n_in=self.n_in, slots=sliced)
+        out = self._coo[:, 0]
+        keep = (out >= lo) & (out < hi)
+        sub = self._coo[keep].copy()
+        sub[:, 0] -= lo
+        return ProvTensor(n_out=hi - lo, n_in=self.n_in, coo=sub)
+
     def _slot_pairs(self, inp: int) -> Tuple[np.ndarray, np.ndarray]:
         """Valid (out, in) link pairs of one slot, from whichever regime."""
         g = self.slot_gather(inp)
@@ -656,6 +710,29 @@ def _as_row_indices(rows, n: int) -> np.ndarray:
     if idx.size and (idx.min() < -n or idx.max() >= n):
         raise IndexError(f"probe row out of range for axis of size {n}")
     return np.where(idx < 0, idx + n, idx)  # legacy negative-index wraparound
+
+
+# ---------------------------------------------------------------------------
+# Row-range partitioning (the sharded index's layout contract)
+# ---------------------------------------------------------------------------
+def shard_ranges(n: int, n_shards: int) -> List[Tuple[int, int]]:
+    """Contiguous balanced row ranges ``[(lo, hi), ...]`` partitioning
+    ``[0, n)`` into ``n_shards`` pieces (``np.array_split`` semantics: the
+    first ``n % n_shards`` shards take one extra row).  Shard counts that
+    exceed ``n`` yield empty trailing ranges — a legal, if silly, layout
+    the parity suite exercises (single-row and empty shards)."""
+    n = int(n)
+    n_shards = int(n_shards)
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    base, extra = divmod(n, n_shards)
+    ranges: List[Tuple[int, int]] = []
+    lo = 0
+    for s in range(n_shards):
+        hi = lo + base + (1 if s < extra else 0)
+        ranges.append((lo, hi))
+        lo = hi
+    return ranges
 
 
 # ---------------------------------------------------------------------------

@@ -13,7 +13,14 @@ try:  # jax >= 0.6 names explicit/auto axis types; older releases have neither
 except ImportError:  # pragma: no cover - version-dependent
     AxisType = None
 
-__all__ = ["make_production_mesh", "make_local_mesh", "make_mesh_compat"]
+__all__ = [
+    "make_production_mesh",
+    "make_local_mesh",
+    "make_mesh_compat",
+    "make_shard_mesh",
+    "host_device_count",
+    "request_host_devices",
+]
 
 
 def make_mesh_compat(shape, axes):
@@ -34,3 +41,46 @@ def make_local_mesh():
     """All locally visible devices on ('data',) — tests and examples."""
     n = len(jax.devices())
     return make_mesh_compat((n,), ("data",))
+
+
+def host_device_count() -> int:
+    """Locally visible device count (after any XLA_FLAGS host-platform
+    override — see :func:`request_host_devices`)."""
+    return len(jax.devices())
+
+
+def make_shard_mesh(n_shards: int, axis: str = "shards"):
+    """A 1-D mesh over the first ``n_shards`` local devices for the sharded
+    provenance index's collective walkers, or ``None`` when the host does
+    not expose that many devices (callers fall back to the sequential
+    per-shard engine — identical semantics, no mesh)."""
+    devices = jax.devices()
+    if n_shards < 1 or len(devices) < n_shards:
+        return None
+    import numpy as np
+
+    from jax.sharding import Mesh
+
+    return Mesh(np.asarray(devices[:n_shards]), (axis,))
+
+
+def request_host_devices(n: int) -> bool:
+    """Ask XLA's host platform for ``n`` CPU devices by setting
+    ``--xla_force_host_platform_device_count`` in ``XLA_FLAGS``.
+
+    Only effective BEFORE the jax backend initializes — CI's multi-device
+    lane exports the flag in the job environment; this helper is for
+    launchers that assemble the environment in-process.  Returns whether
+    the request can still take effect (False once jax has initialized with
+    a different count)."""
+    import os
+
+    flag = f"--xla_force_host_platform_device_count={int(n)}"
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (flags + " " + flag).strip()
+    import jax._src.xla_bridge as xb
+
+    if xb._backends:  # backend already up: the flag cannot apply anymore
+        return len(jax.devices()) >= int(n)
+    return True

@@ -37,6 +37,11 @@ from repro.provenance.catalog import (
 from repro.provenance.federation import FederatedSession
 from repro.provenance.plan import AmbiguousProbeWarning, QueryPlan
 from repro.provenance.session import QuerySession
+from repro.provenance.sharded import (
+    ShardedComposedIndex,
+    ShardedProvenanceIndex,
+    ShardedTensor,
+)
 
 __all__ = [
     "prov",
@@ -50,4 +55,7 @@ __all__ = [
     "Link",
     "CapabilityError",
     "FederationError",
+    "ShardedProvenanceIndex",
+    "ShardedComposedIndex",
+    "ShardedTensor",
 ]

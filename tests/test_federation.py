@@ -24,6 +24,7 @@ import warnings
 import numpy as np
 import pytest
 
+import pipegen
 import test_query_parity as tqp
 from repro.core.pipeline import ProvenanceIndex
 from repro.dataprep.table import Table
@@ -43,104 +44,12 @@ from repro.serve.engine import GenerationResult, ServeEngine
 
 
 # ===========================================================================
-# Spec-replay pipelines: ONE op list, built merged and split
+# Spec-replay pipelines — shared generators in tests/pipegen.py
 # ===========================================================================
-def _random_specs(seed):
-    """A replayable op-spec list (every random choice frozen into the spec,
-    so the merged and the federated build apply IDENTICAL ops)."""
-    rng = np.random.default_rng(seed)
-    n = int(rng.integers(15, 40))
-    K = max(3, n // 4)
-    base = {
-        "k": rng.integers(0, K, n).astype(np.float32),
-        "x": rng.normal(size=n).astype(np.float32),
-        "g": rng.integers(0, 4, n).astype(np.float32),
-    }
-    specs = []
-    for i in range(int(rng.integers(4, 8))):
-        code = int(rng.integers(0, 6))
-        if code == 0:
-            specs.append(("filter", float(rng.normal(-1.0, 0.4))))
-        elif code == 1:
-            specs.append(("scale",))
-        elif code == 2:
-            specs.append(("oversample", 0.3, int(rng.integers(1 << 20))))
-        elif code == 3:
-            specs.append(("undersample", 0.7, int(rng.integers(1 << 20))))
-        elif code == 4:
-            ref = {
-                "k": np.arange(K, dtype=np.float32),
-                f"z{i}": rng.normal(size=K).astype(np.float32),
-            }
-            specs.append(("join", ref, str(rng.choice(["inner", "outer"]))))
-        else:
-            m = int(rng.integers(3, 9))
-            ref = {
-                "x": rng.normal(size=m).astype(np.float32),
-                f"w{i}": rng.normal(size=m).astype(np.float32),
-            }
-            specs.append(("append", ref))
-    return base, specs
-
-
-def _apply(cur, spec, idx):
-    kind = spec[0]
-    if kind == "filter":
-        mask = np.asarray(cur.table.col("x")) > spec[1]
-        if not mask.any():
-            mask[0] = True
-        return cur.filter_rows(mask)
-    if kind == "scale":
-        return cur.value_transform("x", "scale", factor=2.0)
-    if kind == "oversample":
-        return cur.oversample(frac=spec[1], seed=spec[2])
-    if kind == "undersample":
-        return cur.undersample(frac=spec[1], seed=spec[2])
-    if kind == "join":
-        r = track(Table.from_columns({c: v.copy() for c, v in spec[1].items()}), idx)
-        return cur.join(r, on="k", how=spec[2])
-    if kind == "append":
-        r = track(Table.from_columns({c: v.copy() for c, v in spec[1].items()}), idx)
-        return cur.append(r)
-    raise ValueError(kind)
-
-
-def _build_merged(base, specs):
-    idx = ProvenanceIndex("merged")
-    cur = track(Table.from_columns({c: v.copy() for c, v in base.items()}),
-                idx, "src")
-    ids = ["src"]
-    for spec in specs:
-        cur = _apply(cur, spec, idx)
-        ids.append(cur.dataset_id)
-    cur.mark_sink()
-    return idx, ids
-
-
-def _build_federated(base, specs, cut):
-    """Split the SAME spec list at ``cut``: prep owns ops [0, cut), serve
-    owns ops [cut, ...) over a source holding the boundary table, glued by
-    an identity link.  Returns the catalog plus the merged-id -> qualified
-    ref mapping aligned with ``_build_merged``'s ``ids``."""
-    prep = ProvenanceIndex("prep")
-    cur = track(Table.from_columns({c: v.copy() for c, v in base.items()}),
-                prep, "src")
-    refs = [qualify("prep", "src")]
-    for spec in specs[:cut]:
-        cur = _apply(cur, spec, prep)
-        refs.append(qualify("prep", cur.dataset_id))
-    boundary = cur.dataset_id
-    serve = ProvenanceIndex("serve")
-    scur = track(cur.table, serve, "ingest")
-    for spec in specs[cut:]:
-        scur = _apply(scur, spec, serve)
-        refs.append(qualify("serve", scur.dataset_id))
-    scur.mark_sink()
-    catalog = ProvCatalog(f"fed-cut{cut}")
-    catalog.register("prep", prep).register("serve", serve)
-    catalog.link(qualify("prep", boundary), "serve/ingest")
-    return catalog, refs, qualify("serve", scur.dataset_id)
-
+_random_specs = pipegen.random_specs
+_apply = pipegen.apply_spec
+_build_merged = pipegen.build_merged
+_build_federated = pipegen.build_federated
 
 SEEDS = list(range(8))
 
@@ -224,38 +133,7 @@ def test_empty_batch_and_no_path():
 # ===========================================================================
 # Diamond ACROSS the boundary: two links carry two branches of one source
 # ===========================================================================
-def _cross_boundary_diamond(seed=0):
-    rng = np.random.default_rng(seed)
-    base = {
-        "k": np.arange(12, dtype=np.float32),
-        "x": rng.normal(size=12).astype(np.float32),
-    }
-    keep = rng.random(12) < 0.75
-    if not keep.any():
-        keep[0] = True
-
-    merged = ProvenanceIndex("merged")
-    s = track(Table.from_columns({c: v.copy() for c, v in base.items()}),
-              merged, "src")
-    a = s.filter_rows(keep)
-    b = s.value_transform("x", "scale", factor=2.0)
-    j = a.join(b, on="k", how="inner").mark_sink()
-
-    prep = ProvenanceIndex("prep")
-    ps = track(Table.from_columns({c: v.copy() for c, v in base.items()}),
-               prep, "src")
-    pa = ps.filter_rows(keep)
-    pb = ps.value_transform("x", "scale", factor=2.0)
-    serve = ProvenanceIndex("serve")
-    sa = track(pa.table, serve, "branch_a")
-    sb = track(pb.table, serve, "branch_b")
-    sj = sa.join(sb, on="k", how="inner").mark_sink()
-
-    catalog = ProvCatalog("diamond")
-    catalog.register("prep", prep).register("serve", serve)
-    catalog.link(qualify("prep", pa.dataset_id), "serve/branch_a")
-    catalog.link(qualify("prep", pb.dataset_id), "serve/branch_b")
-    return merged, j.dataset_id, catalog, qualify("serve", sj.dataset_id)
+_cross_boundary_diamond = pipegen.cross_boundary_diamond
 
 
 @pytest.mark.parametrize("seed", range(4))

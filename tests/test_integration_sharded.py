@@ -1,9 +1,13 @@
 """Integration: the launcher's sharded path end-to-end on the LOCAL mesh.
 
-Uses the host's single device as a 1x1 (data, model) mesh — every sharding
-rule, activation hint and spec resolves through the same code path as the
-production mesh (sizes of 1 make each spec a no-op placement, but structure
-mismatches, bad specs, and hint rank errors all still fail loudly).
+The mesh fixture parametrizes over every (data, model) shape the host's
+device count can fill — a single-device host still runs the 1x1 lane
+(every sharding rule, activation hint and spec resolves through the same
+code path as the production mesh; sizes of 1 make each spec a no-op
+placement, but structure mismatches, bad specs, and hint rank errors all
+still fail loudly), while CI's multi-device lane
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8``) additionally
+executes REAL collective placement at 2- and 4-way data parallelism.
 """
 import functools
 
@@ -12,23 +16,34 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-try:
-    from jax.sharding import AxisType
-except ImportError:  # pragma: no cover - version-dependent
-    pytest.skip("jax.sharding.AxisType unavailable on this JAX",
-                allow_module_level=True)
-
 from repro.configs.registry import get_smoke_config
 from repro.launch import sharding as SD
+from repro.launch.mesh import host_device_count, make_mesh_compat
 from repro.models import pshard as PS
 from repro.train.optimizer import AdamWConfig
 from repro.train.trainer import init_train_state, make_train_step
 
+# (data, model) shapes; the model axis stays 1 so the smoke configs' head
+# and hidden dims never pick up a divisibility constraint, while the data
+# axis carries real multi-device placement (batch of 4 -> up to 4-way).
+MESH_SHAPES = [(1, 1), (2, 1), (4, 1)]
 
-@pytest.fixture(scope="module")
-def mesh():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+
+@pytest.fixture(scope="module", params=MESH_SHAPES,
+                ids=[f"{d}x{m}" for d, m in MESH_SHAPES])
+def mesh(request):
+    shape = request.param
+    need = shape[0] * shape[1]
+    if host_device_count() < need:
+        pytest.skip(f"mesh {shape} needs {need} devices, "
+                    f"have {host_device_count()}")
+    return make_mesh_compat(shape, ("data", "model"))
+
+
+def _active(mesh):
+    """``jax.set_mesh`` where it exists; the Mesh context manager (same
+    activation semantics) on older releases."""
+    return jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh
 
 
 @pytest.mark.parametrize("arch", ["olmo-1b", "qwen3-moe-235b-a22b",
@@ -38,7 +53,7 @@ def test_sharded_train_step_runs(arch, mesh):
     opt = AdamWConfig(lr_peak=1e-3, warmup_steps=1, total_steps=4)
     key = jax.random.PRNGKey(0)
 
-    with jax.set_mesh(mesh), PS.use_policy(
+    with _active(mesh), PS.use_policy(
             {"dp": ("data",), "tp": "model", "moe_groups": 1}):
         state = init_train_state(cfg, key, opt)
         state_shapes = jax.eval_shape(lambda: state)

@@ -20,6 +20,7 @@ import warnings
 import numpy as np
 import pytest
 
+import pipegen
 from repro.core import query as Q
 from repro.core import schema as sc
 from repro.core.hopcache import ComposedIndex
@@ -240,72 +241,13 @@ def ref_q11(index, d2, rows, d1, d3):
 
 
 # ===========================================================================
-# Randomized pipelines over every op category
+# Randomized pipelines over every op category — shared generators in
+# tests/pipegen.py; the module-level aliases keep downstream suites
+# (test_session, test_costmodel, test_structured) importing from here.
 # ===========================================================================
-def _random_pipeline(seed):
-    rng = np.random.default_rng(seed)
-    n = int(rng.integers(15, 50))
-    K = max(3, n // 4)
-    idx = ProvenanceIndex(f"parity{seed}")
-    t = Table.from_columns({
-        "k": rng.integers(0, K, n).astype(np.float32),
-        "x": rng.normal(size=n).astype(np.float32),
-        "g": rng.integers(0, 4, n).astype(np.float32),
-        "y": rng.normal(size=n).astype(np.float32),
-    })
-    cur = track(t, idx, "src")
-    n_ops = int(rng.integers(3, 8))
-    for i in range(n_ops):
-        code = int(rng.integers(0, 9))
-        cols = cur.table.columns
-        if code == 0:
-            mask = np.asarray(cur.table.col("x")) > float(rng.normal(-1.0, 0.4))
-            if not mask.any():
-                mask[0] = True
-            cur = cur.filter_rows(mask)
-        elif code == 1:
-            cur = cur.value_transform("x", "scale", factor=2.0)
-        elif code == 2:
-            cur = cur.oversample(frac=0.3, seed=int(rng.integers(1 << 20)))
-        elif code == 3:
-            cur = cur.undersample(frac=0.7, seed=int(rng.integers(1 << 20)))
-        elif code == 4 and "g" in cols:
-            cur = cur.onehot("g", n_values=4)
-        elif code == 5:
-            # order-changing vreduce: keep k/x/g, shuffle, maybe drop y
-            keep = [c for c in cols if c in ("k", "x", "g")]
-            extra = [c for c in cols if c not in ("k", "x", "g")]
-            rng.shuffle(keep)
-            keep += list(rng.choice(extra, size=len(extra) // 2, replace=False)) \
-                if extra else []
-            cur = cur.select_columns(keep)
-        elif code == 6:
-            r = Table.from_columns({
-                "k": np.arange(K, dtype=np.float32),
-                f"z{i}": rng.normal(size=K).astype(np.float32),
-            })
-            how = str(rng.choice(["inner", "outer"]))
-            cur = cur.join(track(r, idx), on="k", how=how)
-        elif code == 7:
-            m = int(rng.integers(3, 9))
-            r = Table.from_columns({
-                "x": rng.normal(size=m).astype(np.float32),
-                f"w{i}": rng.normal(size=m).astype(np.float32),
-            })
-            cur = cur.append(track(r, idx))
-        elif code == 8 and "y" in cols:
-            cur = cur.drop_columns(["y"])
-        if cur.table.n_rows == 0:
-            break
-    cur.mark_sink()
-    return idx, cur.dataset_id, rng
-
-
-def _row_probes(rng, n):
-    probes = [[], [int(rng.integers(0, n))],
-              sorted(set(rng.integers(0, n, size=min(5, n)).tolist()))]
-    return probes
-
+_random_pipeline = pipegen.random_pipeline
+_row_probes = pipegen.row_probes
+_diamond_pipeline = pipegen.diamond_pipeline
 
 SEEDS = list(range(10))
 
@@ -672,23 +614,6 @@ def test_legacy_shims_match_session_everywhere(seed):
         want = ref_q2(idx, sink, p, "src")
         np.testing.assert_array_equal(w, want)
         np.testing.assert_array_equal(c, want)
-
-
-def _diamond_pipeline(seed=0):
-    """src feeds two branches re-joined downstream — TWO producer paths, the
-    shape the old unique-chain hop-cache could not compose."""
-    rng = np.random.default_rng(seed)
-    idx = ProvenanceIndex(f"diamond{seed}")
-    n = int(rng.integers(8, 20))
-    t = Table.from_columns({
-        "k": np.arange(n, dtype=np.float32),
-        "x": rng.normal(size=n).astype(np.float32),
-    })
-    s = track(t, idx, "src")
-    a = s.filter_rows(rng.random(n) < 0.75)
-    b = s.value_transform("x", "scale", factor=2.0)
-    j = a.join(b, on="k", how="inner").mark_sink()
-    return idx, j.dataset_id
 
 
 @pytest.mark.parametrize("backend", ["csr", "bitplane", "auto"])

@@ -20,6 +20,7 @@ import warnings
 import numpy as np
 import pytest
 
+import pipegen
 import test_query_parity as tqp
 from repro.core import capture
 from repro.core.compose import chain_gather, compose_gather, path_tensors
@@ -47,9 +48,9 @@ def _both_worlds(seed):
     Dataset ids carry a process-global op counter, so the two worlds'
     names differ — ops correspond POSITIONALLY, and each world is queried
     through its own sink id."""
-    s_idx, s_sink, _ = tqp._random_pipeline(seed)
+    s_idx, s_sink, _ = pipegen.random_pipeline(seed)
     with capture.force_coo_capture():
-        c_idx, c_sink, _ = tqp._random_pipeline(seed)
+        c_idx, c_sink, _ = pipegen.random_pipeline(seed)
     return s_idx, c_idx, (s_sink, c_sink)
 
 
@@ -140,14 +141,14 @@ def test_row_gather_bounds_and_negative_wraparound():
 def test_capture_fast_path_never_allocates_coo():
     """build_tensor emits implicit forms straight from CaptureInfo — the
     explicit COO of a structured tensor is only a lazy mirror."""
-    idx, _, _ = tqp._random_pipeline(0)
+    idx, _, _ = pipegen.random_pipeline(0)
     assert any(op.tensor.structured for op in idx.ops)
     for op in idx.ops:
         if op.tensor.structured:
             assert op.tensor._coo is None       # never touched by capture
     # the structured index is strictly smaller than the forced-COO twin
     with capture.force_coo_capture():
-        coo_idx, _, _ = tqp._random_pipeline(0)
+        coo_idx, _, _ = pipegen.random_pipeline(0)
     assert idx.prov_nbytes() < coo_idx.prov_nbytes()
 
 
@@ -333,7 +334,7 @@ def test_append_union_distributes_over_blocks():
 def test_agreeing_diamond_stays_structured():
     """A diamond joined on a UNIQUE key: the two branch gathers agree on
     every output row, so their union is still one gather — no densification."""
-    idx, sink = tqp._diamond_pipeline(0)
+    idx, sink = pipegen.diamond_pipeline(0)
     ci = ComposedIndex(idx)
     want = tqp.ref_q1(idx, "src", [0, 3], sink)
     np.testing.assert_array_equal(ci.q1_forward("src", [0, 3], sink), want)
