@@ -1,7 +1,8 @@
 PY ?= python
 TIMEOUT ?= 900
 
-.PHONY: test test-fast test-sharded bench-query bench-quick ci
+.PHONY: test test-fast test-sharded bench-query bench-quick \
+        bench-serving bench-serving-quick ci
 
 # tier-1 verify (ROADMAP.md): the whole suite, stop at first failure
 test:
@@ -31,6 +32,14 @@ bench-query:
 # exercises every section incl. cost-model routing and writes BENCH_query.json
 bench-quick:
 	env PYTHONPATH=src $(PY) benchmarks/bench_query.py --quick
+
+# serving tier vs sync per-request loop (saturation + Poisson open loop);
+# merges the `serving` section into BENCH_query.json
+bench-serving:
+	env PYTHONPATH=src $(PY) benchmarks/bench_serving.py
+
+bench-serving-quick:
+	env PYTHONPATH=src $(PY) benchmarks/bench_serving.py --quick
 
 # mirrors .github/workflows/ci.yml
 ci:

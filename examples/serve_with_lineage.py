@@ -1,4 +1,4 @@
-"""Batched serving with request-level lineage.
+"""Batched serving with request-level lineage through the serving tier.
 
     PYTHONPATH=src python examples/serve_with_lineage.py
 
@@ -11,6 +11,12 @@ before, and the same catalog is where an upstream data-prep boundary
 attaches (``upstream=prep_index.export(...)`` — see
 ``examples/federated_lineage.py`` for the cross-index trace-to-source
 flow).  The legacy ``prov_index=`` attach is deprecated.
+
+Per-request lineage probes are served through the async micro-batching
+:class:`~repro.serve.tier.ServingTier` (``engine.as_backend()``):
+concurrent tenants submit single-probe plans, the tier coalesces them by
+fuse key into fused ``run_many`` passes, and admission scopes each tenant
+to a capability ref set.
 """
 import numpy as np
 import jax
@@ -19,6 +25,7 @@ import jax.numpy as jnp
 from repro.configs.registry import get_smoke_config
 from repro.models.registry import get_model
 from repro.provenance import prov
+from repro.serve import ServingTier
 from repro.serve.engine import ServeEngine
 
 cfg = get_smoke_config("gemma3-1b")
@@ -50,6 +57,24 @@ print("\nQ2: response row 2 derives from request row:",
 per_request = engine.response_lineage_batch(result, [[i] for i in range(B)])
 print("Q2 batch: response row -> request row:",
       {i: r.tolist() for i, r in enumerate(per_request)})
+
+# --- the same probes, served: the async micro-batching tier --------------------
+# many tenants each trace THEIR response row; same-shape plans coalesce
+# into fused passes (bare serving-local refs are qualified by the backend)
+with ServingTier(engine.as_backend(), max_batch=16, max_wait_ms=2.0) as tier:
+    futs = [
+        tier.submit_nowait(
+            f"tenant-{i % 2}",
+            prov(engine.prov).source(result.response_dataset).rows([i])
+            .backward().to(result.request_dataset).plan())
+        for i in range(B)
+    ]
+    served = [f.result(timeout=60.0) for f in futs]
+assert all(s.tolist() == r.tolist() for s, r in zip(served, per_request))
+stats = tier.stats()
+print("tier: served", stats["tier"]["completed"], "probes in",
+      stats["tier"]["batches"], "fused batch(es), max width",
+      stats["tier"]["max_batch_seen"])
 
 # forward plans run through the same session/composed relations — spelled
 # either against the index or against the catalog with a qualified ref

@@ -32,12 +32,15 @@ from typing import Dict, List, Optional, Sequence, Tuple
 __all__ = [
     "RelStats",
     "DENSITY_THRESHOLD",
+    "CROSS_FALLBACK_MIN_DEMAND",
     "compose_est",
     "spmm_cost",
     "bitplane_cost",
     "structured_cost",
     "pick_backend",
     "plan_chain_stats",
+    "relation_probe_cost",
+    "cross_route_choose",
     "CostModel",
 ]
 
@@ -51,6 +54,12 @@ C_WORD_OP = 3.0               # per uint32 word op in a bitplane compose
 C_PROBE_OVERHEAD = 30_000.0   # per composed-relation probe call
 C_STRUCT_OVERHEAD = 20_000.0  # per closed-form (gather∘gather) compose call
 C_TAKE = 1.0                  # per element of the one np.take it performs
+C_STITCH_OVERHEAD = 15_000.0  # per link alignment stitch of a mask stack
+
+# Legacy demand floor for federated stitched-relation composition, used only
+# when per-segment relation statistics are unavailable (a member that cannot
+# answer relation_stats) — the constant the cost-model gate replaces.
+CROSS_FALLBACK_MIN_DEMAND = 32
 
 # Density above which the packed-bitplane backend out-costs CSR composition:
 # csr flops ≈ 32·d_a·d_b × bitplane word ops, and a sparse flop costs ~8 word
@@ -240,6 +249,78 @@ def plan_chain_stats(stats: Sequence[RelStats], backend: str = "csr",
     return order
 
 
+def relation_probe_cost(rel: Optional[RelStats], n_probes: int,
+                        probe_rows: float = 1.0) -> float:
+    """One batched probe of a composed relation: mask stacks in and out,
+    plus the selected-row gather.  (:meth:`CostModel.probe_cost` and the
+    federated cross-route gate share this one pricing.)"""
+    if rel is None:
+        return C_PROBE_OVERHEAD
+    return (C_PROBE_OVERHEAD
+            + C_MASK_ELEM * n_probes * (rel.rows + rel.cols)
+            + C_GATHER * n_probes * max(probe_rows, 1.0) * rel.out_degree)
+
+
+def cross_route_choose(route_stats: Sequence[Optional[RelStats]],
+                       member_compose_ns: float,
+                       n_probes: int,
+                       demand: int,
+                       budget_bytes: Optional[int] = None) -> Dict[str, object]:
+    """Segment-at-a-time vs stitched-relation execution for one federated
+    route — the cost-model gate that replaces the blind ``cross_min_demand``
+    constant (the carried PR 4 follow-up).
+
+    ``route_stats`` holds oriented :class:`RelStats` for every hop of the
+    route in traversal order: each member's composed relation AND each
+    link's alignment matrix (rows = traversal-from dimension).  Costs:
+
+    * **segments** — every probe batch pays one composed-relation probe per
+      member hop plus one mask stitch per link hop, forever;
+    * **stitched** — one-time composition (each member's relation compose,
+      ``member_compose_ns``, plus the sparse-matmul chain folding the hops
+      into ONE relation) amortized over the route's cumulative probe
+      ``demand``, then one probe of the stitched relation per batch.
+
+    A stitched relation estimated not to fit ``budget_bytes`` is never
+    retained, so its composition cost cannot amortize — the gate then keeps
+    segment execution (mirroring :meth:`CostModel.choose`'s budget guard).
+    Any ``None`` in ``route_stats`` (a member that cannot price its
+    relation) falls back to the legacy demand floor
+    :data:`CROSS_FALLBACK_MIN_DEMAND`.
+    """
+    if not route_stats or any(s is None for s in route_stats):
+        compose = demand >= CROSS_FALLBACK_MIN_DEMAND
+        return {"strategy": "stitched" if compose else "segments",
+                "estimated": False, "demand": demand,
+                "segments_ns": 0.0, "stitched_ns": 0.0, "compose_ns": 0.0,
+                "retainable": True, "est": None}
+    segments_ns = 0.0
+    folded: Optional[RelStats] = None
+    chain_ns = 0.0
+    for s in route_stats:
+        # links price as one stitch of the live mask stack; member hops as a
+        # composed-relation probe (what segment execution actually runs)
+        if s.structured:
+            segments_ns += C_STITCH_OVERHEAD + C_MASK_ELEM * n_probes * (
+                s.rows + s.cols)
+        else:
+            segments_ns += relation_probe_cost(s, n_probes)
+        if folded is None:
+            folded = s
+        else:
+            chain_ns += spmm_cost(folded, s)
+            folded = compose_est(folded, s)
+    compose_ns = member_compose_ns + chain_ns
+    retainable = budget_bytes is None or folded.est_bytes() <= budget_bytes
+    stitched_ns = (relation_probe_cost(folded, n_probes)
+                   + compose_ns * (n_probes / max(demand, 1)))
+    strategy = ("stitched"
+                if retainable and stitched_ns < segments_ns else "segments")
+    return {"strategy": strategy, "estimated": True, "demand": demand,
+            "segments_ns": segments_ns, "stitched_ns": stitched_ns,
+            "compose_ns": compose_ns, "retainable": retainable, "est": folded}
+
+
 # ---------------------------------------------------------------------------
 # The planner model
 # ---------------------------------------------------------------------------
@@ -360,13 +441,9 @@ class CostModel:
 
     def probe_cost(self, rel: Optional[RelStats], n_probes: int,
                    probe_rows: float) -> float:
-        """One batched probe of the composed relation: mask stacks in and
-        out, plus the selected-row gather."""
-        if rel is None:
-            return C_PROBE_OVERHEAD
-        return (C_PROBE_OVERHEAD
-                + C_MASK_ELEM * n_probes * (rel.rows + rel.cols)
-                + C_GATHER * n_probes * max(probe_rows, 1.0) * rel.out_degree)
+        """One batched probe of the composed relation (see
+        :func:`relation_probe_cost`)."""
+        return relation_probe_cost(rel, n_probes, probe_rows)
 
     # -- the decision ---------------------------------------------------------
     def choose(self, src: str, dst: str, n_probes: int,

@@ -4,8 +4,13 @@
   generates real tokens on this host and reports per-token latency.
 * PROD (--mesh single|multi): lower + compile the FULL config's serve_step
   (decode_32k cell) on the production mesh and print the analyses.
+* TIER (--tier): additionally record request/response provenance and drive
+  per-request lineage probes through the async micro-batching
+  :class:`~repro.serve.tier.ServingTier` (fuse-key batching + admission),
+  reporting fused-batch stats and probe throughput.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --tier
     PYTHONPATH=src python -m repro.launch.serve --arch llama3-405b \
         --mesh single --dry-run
 """
@@ -22,6 +27,11 @@ def main() -> None:
     ap.add_argument("--dry-run", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--n-new", type=int, default=16)
+    ap.add_argument("--tier", action="store_true",
+                    help="record provenance and serve per-request lineage "
+                         "probes through the micro-batching ServingTier")
+    ap.add_argument("--probes", type=int, default=64,
+                    help="lineage probes to push through the tier (--tier)")
     args = ap.parse_args()
 
     if args.mesh != "local":
@@ -50,11 +60,38 @@ def main() -> None:
 
     engine = ServeEngine(cfg, params, max_seq=8 + args.n_new, dtype=jnp.float32)
     t0 = time.perf_counter()
-    out = engine.generate(prompts, n_new=args.n_new, frames=frames)
+    out = engine.generate(prompts, n_new=args.n_new, frames=frames,
+                          record_provenance=args.tier)
     dt = time.perf_counter() - t0
     print(f"generated {out.tokens.shape} in {dt:.2f}s "
           f"({dt / args.n_new * 1e3:.1f} ms/token incl. prompt pass)")
     print("first rows:", out.tokens[:2].tolist())
+
+    if args.tier:
+        from repro.provenance import prov
+        from repro.serve.tier import ServingTier
+        req = out.request_dataset
+        resp = out.response_dataset
+        with ServingTier(engine.as_backend(), max_batch=32,
+                         max_wait_ms=2.0) as tier:
+            t0 = time.perf_counter()
+            futs = [
+                tier.submit_nowait(
+                    f"tenant-{i % 4}",
+                    prov(engine.prov).source(resp).rows([i % args.batch])
+                    .backward().to(req).plan())
+                for i in range(args.probes)
+            ]
+            results = [f.result(timeout=60.0) for f in futs]
+            dt = time.perf_counter() - t0
+        stats = tier.stats()
+        fused = stats["tier"]["batches"]
+        print(f"tier: {len(results)} lineage probes in {dt * 1e3:.1f} ms "
+              f"({len(results) / max(dt, 1e-9):.0f}/s) across {fused} fused "
+              f"batches (max width {stats['tier']['max_batch_seen']})")
+        print("tier stats:", {k: stats["tier"][k] for k in
+                              ("submitted", "completed", "batches",
+                               "flush_full", "flush_timer")})
 
 
 if __name__ == "__main__":

@@ -177,6 +177,16 @@ class BoundaryHandle:
         self._check_ref(dst)
         return self.__index.composed().relation_csr(src, dst)
 
+    def relation_stats(self, src: str, dst: str):
+        """``(RelStats | None, estimated one-time compose ns)`` for the
+        composed ``src``→``dst`` relation — statistics only, no composition
+        work (:meth:`repro.core.costmodel.CostModel.composed_estimate`).
+        The cost-model read behind the federation's stitched-relation gate;
+        ancestors only, like every other granted read."""
+        self._check_ref(src)
+        self._check_ref(dst)
+        return self.__index.session().costmodel.composed_estimate(src, dst)
+
     def explain(self, plan) -> Dict[str, object]:
         self._check_plan(plan)
         return self.__index.session().explain(plan)
@@ -249,6 +259,9 @@ class _IndexMember:
 
     def relation_csr(self, src: str, dst: str):
         return self._index.composed().relation_csr(src, dst)
+
+    def relation_stats(self, src: str, dst: str):
+        return self._index.session().costmodel.composed_estimate(src, dst)
 
     def explain(self, plan) -> Dict[str, object]:
         return self._index.session().explain(plan)

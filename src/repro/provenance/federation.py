@@ -35,11 +35,22 @@ relation (read through :meth:`relation_csr`, the same probe capability a
 ``BoundaryHandle`` grants) chained through the link alignment matrices and
 unioned over parallel link paths — so a sustained cross-index workload
 probes ONE relation, exactly like a merged single index would.  The cache
-is FEDERATION-owned (per-member ``ComposedIndex`` caches stay private),
-composes lazily once a route's cumulative probe demand reaches
-``cross_min_demand``, is bounded by ``cross_budget_bytes`` (LRU), and
-invalidates when the link set changes (member indexes are append-only, so
-member-side writes never invalidate an existing route).
+lives in a CATALOG-owned :class:`_CrossStore` (per-member ``ComposedIndex``
+caches stay private; every session over the same catalog — the serving
+tier's, an auditor's, a bench's — shares the stitched relations and the
+accumulated route demand, so a route one session made hot stays hot for
+all), is bounded by ``cross_budget_bytes`` (LRU), and invalidates when the
+link set changes (member indexes are append-only, so member-side writes
+never invalidate an existing route).
+
+*When* a route composes is decided by the cost model
+(:func:`repro.core.costmodel.cross_route_choose`): per-segment relation
+statistics (each member's :meth:`relation_stats` capability read — counts,
+never tensors) price segment-at-a-time execution against the stitched
+relation's one-time composition amortized over the route's cumulative
+probe demand, with the store's byte budget as a retention guard.  Passing
+an explicit ``cross_min_demand=`` integer keeps the legacy fixed demand
+floor for that session instead.
 
 Plan-kind support: ``record`` (fwd/bwd) and the co-queries (explicit
 ``via`` for Q10) route across members; ``cells`` / ``how`` plans are
@@ -56,7 +67,9 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.compose import HAVE_SCIPY
+from repro.core.costmodel import RelStats, cross_route_choose
 from repro.provenance.catalog import (
+    CapabilityError,
     FederationError,
     Link,
     ProvCatalog,
@@ -66,6 +79,59 @@ from repro.provenance.plan import QueryPlan
 from repro.provenance.session import run_many_fused
 
 __all__ = ["FederatedSession"]
+
+DEFAULT_CROSS_BUDGET_BYTES = 64 << 20
+
+
+class _CrossStore:
+    """Catalog-owned stitched cross-relation cache + route demand.
+
+    One store per :class:`ProvCatalog`, shared by every
+    :class:`FederatedSession` over it — the serving tier's sessions, ad-hoc
+    audit sessions, and benches all see the same hot routes (the carried
+    PR 4 follow-up: stitched relations shared ACROSS sessions).  All
+    mutation happens inside session calls, which callers already serialize
+    per catalog (the serving tier's single executor, or single-threaded
+    use)."""
+
+    def __init__(self, budget_bytes: int = DEFAULT_CROSS_BUDGET_BYTES) -> None:
+        self.budget_bytes = int(budget_bytes)
+        # route key (start, end, mode) -> (relT csr, crossed-link signature)
+        self.entries: "OrderedDict[Tuple[str, str, str], tuple]" = OrderedDict()
+        self.nbytes = 0
+        self.failed: set = set()        # routes not worth/able to compose
+        self.demand: Dict[Tuple[str, str, str], int] = {}
+        self.links_version: Optional[int] = None
+
+    @staticmethod
+    def rel_nbytes(rel) -> int:
+        return int(rel.data.nbytes + rel.indices.nbytes + rel.indptr.nbytes)
+
+    def get(self, key):
+        entry = self.entries.get(key)
+        if entry is None:
+            return None
+        self.entries.move_to_end(key)
+        return entry
+
+    def put(self, key, rel, signature: frozenset) -> bool:
+        nbytes = self.rel_nbytes(rel)
+        if nbytes > self.budget_bytes:
+            return False                # larger than the budget: keep segments
+        old = self.entries.pop(key, None)
+        if old is not None:
+            self.nbytes -= self.rel_nbytes(old[0])
+        self.entries[key] = (rel, signature)
+        self.nbytes += nbytes
+        while self.nbytes > self.budget_bytes and len(self.entries) > 1:
+            _, (evicted, _) = self.entries.popitem(last=False)
+            self.nbytes -= self.rel_nbytes(evicted)
+        return True
+
+    def drop(self, key) -> None:
+        entry = self.entries.pop(key, None)
+        if entry is not None:
+            self.nbytes -= self.rel_nbytes(entry[0])
 
 
 @dataclasses.dataclass
@@ -153,17 +219,25 @@ class FederatedSession:
     (``catalog.session()``)."""
 
     def __init__(self, catalog: ProvCatalog, *,
-                 cross_min_demand: int = 32,
-                 cross_budget_bytes: int = 64 << 20) -> None:
+                 cross_min_demand: Optional[int] = None,
+                 cross_budget_bytes: Optional[int] = None) -> None:
         self.catalog = catalog
-        # cross-boundary composed relations: route -> stitched scipy CSR
-        self.cross_min_demand = int(cross_min_demand)
-        self.cross_budget_bytes = int(cross_budget_bytes)
-        self._cross: "OrderedDict[Tuple[str, str, str], object]" = OrderedDict()
-        self._cross_bytes = 0
-        self._cross_failed: set = set()     # routes not worth/able to compose
-        self._route_demand: Dict[Tuple[str, str, str], int] = {}
-        self._links_version = len(catalog.links)
+        # cross-boundary composed relations: route -> stitched scipy CSR,
+        # in the catalog-owned store every session over this catalog shares
+        store = getattr(catalog, "_cross_store", None)
+        if store is None:
+            store = _CrossStore(cross_budget_bytes
+                                if cross_budget_bytes is not None
+                                else DEFAULT_CROSS_BUDGET_BYTES)
+            store.links_version = len(catalog.links)
+            catalog._cross_store = store
+        elif cross_budget_bytes is not None:
+            store.budget_bytes = int(cross_budget_bytes)
+        self._store = store
+        # None = the cost-model gate (cross_route_choose); an explicit int
+        # keeps the legacy fixed demand floor for this session
+        self.cross_min_demand = (None if cross_min_demand is None
+                                 else int(cross_min_demand))
         self.counters: Dict[str, int] = {
             "plans": 0,
             "single_index": 0,
@@ -368,6 +442,27 @@ class FederatedSession:
                                        _DryOps(), True)
         return frozenset((link.up, link.down) for link in crossed)
 
+    # -- back-compat views over the shared store (tests/introspection) ---------
+    @property
+    def _cross(self):
+        return self._store.entries
+
+    @property
+    def _cross_bytes(self) -> int:
+        return self._store.nbytes
+
+    @property
+    def _cross_failed(self) -> set:
+        return self._store.failed
+
+    @property
+    def _route_demand(self) -> Dict[Tuple[str, str, str], int]:
+        return self._store.demand
+
+    @property
+    def cross_budget_bytes(self) -> int:
+        return self._store.budget_bytes
+
     def _cross_sync(self) -> None:
         """Reconcile stitched relations after the LINK set changed.
 
@@ -380,39 +475,76 @@ class FederatedSession:
         ``requests@N`` dataset no cached route can reach — therefore keeps
         its hot stitched relations.  Member-side writes never invalidate
         (append-only DAGs, one producer per dataset)."""
-        if len(self.catalog.links) == self._links_version:
+        store = self._store
+        if len(self.catalog.links) == store.links_version:
             return
-        self._links_version = len(self.catalog.links)
-        self._cross_failed.clear()      # a new link may make a route viable
-        for key in list(self._cross):
-            relT, signature = self._cross[key]
+        store.links_version = len(self.catalog.links)
+        store.failed.clear()        # a new link may make a route viable
+        for key in list(store.entries):
+            _, signature = store.entries[key]
             if self._crossed_signature(key) != signature:
-                del self._cross[key]
-                self._cross_bytes -= self._cross_nbytes(relT)
+                store.drop(key)
 
-    def _cross_nbytes(self, rel) -> int:
-        return int(rel.data.nbytes + rel.indices.nbytes + rel.indptr.nbytes)
+    # -- the cost-model compose gate -------------------------------------------
+    def _route_hop_stats(self, start_ref: str, end_ref: str, mode: str,
+                         order: List[str], links: List[Link]):
+        """Oriented per-hop :class:`RelStats` for a route, in traversal
+        order (member composed relations + link alignment matrices), plus
+        the summed member one-time compose estimate.  Statistics only —
+        the ``relation_stats`` capability read, no tensor work.  A hop that
+        cannot be priced contributes ``None`` (the gate then falls back to
+        the legacy demand floor)."""
+        _, segments, crossed = self._traverse(
+            start_ref, end_ref, mode, order, links, _DryOps(), True)
+        per_member: Dict[str, List] = {}
+        for seg in segments:
+            per_member.setdefault(seg.member, []).append(seg)
+        out_links: Dict[str, List[Link]] = {}
+        reverse = mode == "bwd"
+        for link in crossed:
+            out_links.setdefault(
+                split_ref(link.down if reverse else link.up)[0], []
+            ).append(link)
+        stats: List[Optional[RelStats]] = []
+        compose_ns = 0.0
+        for m in order:
+            member = self.catalog.members[m]
+            for seg in per_member.get(m, []):
+                pair = ((seg.target, seg.source) if seg.direction == "bwd"
+                        else (seg.source, seg.target))
+                try:
+                    rel, ns = member.relation_stats(*pair)
+                except (AttributeError, CapabilityError, KeyError):
+                    rel, ns = None, 0.0
+                if rel is not None and seg.direction == "bwd":
+                    rel = RelStats(rel.cols, rel.rows, rel.nnz, rel.structured)
+                stats.append(rel)
+                compose_ns += ns
+            for link in out_links.get(m, []):
+                up_name, up_ds = split_ref(link.up)
+                down_name, down_ds = split_ref(link.down)
+                n_up = self.catalog.members[up_name].datasets[up_ds].n_rows
+                n_down = self.catalog.members[down_name].datasets[down_ds].n_rows
+                nnz = (n_up if link.alignment is None
+                       else int((link.alignment >= 0).sum()))
+                rows, cols = (n_down, n_up) if reverse else (n_up, n_down)
+                stats.append(RelStats(rows, cols, nnz, structured=True))
+        return stats, compose_ns
 
-    def _cross_get(self, key):
-        entry = self._cross.get(key)
-        if entry is None:
-            return None
-        self._cross.move_to_end(key)
-        return entry
-
-    def _cross_put(self, key, rel, signature: frozenset) -> bool:
-        nbytes = self._cross_nbytes(rel)
-        if nbytes > self.cross_budget_bytes:
-            return False                # larger than the budget: keep segments
-        old = self._cross.pop(key, None)
-        if old is not None:
-            self._cross_bytes -= self._cross_nbytes(old[0])
-        self._cross[key] = (rel, signature)
-        self._cross_bytes += nbytes
-        while self._cross_bytes > self.cross_budget_bytes and len(self._cross) > 1:
-            _, (evicted, _) = self._cross.popitem(last=False)
-            self._cross_bytes -= self._cross_nbytes(evicted)
-        return True
+    def _cross_should_compose(self, key, order: List[str], links: List[Link],
+                              demand: int, n_probes: int) -> bool:
+        """Whether the route should flip from segment execution to the
+        stitched relation NOW.  Legacy sessions (explicit
+        ``cross_min_demand=``) keep the fixed demand floor; otherwise the
+        cost model prices both (:func:`cross_route_choose`)."""
+        if self.cross_min_demand is not None:
+            return demand >= self.cross_min_demand
+        start_ref, end_ref, mode = key
+        stats, compose_ns = self._route_hop_stats(start_ref, end_ref, mode,
+                                                  order, links)
+        verdict = cross_route_choose(stats, compose_ns, n_probes, demand,
+                                     budget_bytes=self._store.budget_bytes)
+        return verdict["strategy"] == "stitched"
 
     def _compose_cross(self, start_ref: str, end_ref: str, mode: str,
                        order: List[str], links: List[Link]):
@@ -474,24 +606,26 @@ class FederatedSession:
             # that failed to compose (no path, or over budget) is memoized
             # as failed so it never re-pays the compose per probe.
             self._cross_sync()
+            store = self._store
             key = (start_ref, end_ref, mode)
-            entry = self._cross_get(key)
-            if entry is None and HAVE_SCIPY and key not in self._cross_failed:
-                demand = self._route_demand.get(key, 0) + masks.shape[0]
-                self._route_demand[key] = demand
-                if demand >= self.cross_min_demand:
+            entry = store.get(key)
+            if entry is None and HAVE_SCIPY and key not in store.failed:
+                demand = store.demand.get(key, 0) + masks.shape[0]
+                store.demand[key] = demand
+                if self._cross_should_compose(key, order, links, demand,
+                                              masks.shape[0]):
                     rel = self._compose_cross(start_ref, end_ref, mode,
                                               order, links)
                     if rel is not None:
                         rel = rel.T.tocsr()     # probe-ready: see _cross_probe
                         self.counters["cross_composes"] += 1
                         signature = self._crossed_signature(key)
-                        if self._cross_put(key, rel, signature):
+                        if store.put(key, rel, signature):
                             entry = (rel, signature)
                         else:
-                            self._cross_failed.add(key)
+                            store.failed.add(key)
                     else:
-                        self._cross_failed.add(key)
+                        store.failed.add(key)
             if entry is not None:
                 relT, signature = entry
                 self.counters["cross_probes"] += 1

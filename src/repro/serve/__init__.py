@@ -1,0 +1,29 @@
+"""Serving: the batched generation engine and the async query tier.
+
+* :class:`~repro.serve.engine.ServeEngine` — prefill/decode generation with
+  request-level provenance capture (one engine, one model);
+* :class:`~repro.serve.tier.ServingTier` — the async micro-batching front
+  door that fuses lineage queries across requests and tenants into single
+  ``run_many`` passes, with bounded admission and per-tenant capability
+  scoping (:mod:`repro.serve.admission`).
+"""
+from repro.serve.admission import (
+    AdmissionError,
+    QueueFullError,
+    TenantOverloadError,
+    TenantScope,
+    TierClosedError,
+)
+from repro.serve.engine import GenerationResult, ServeEngine
+from repro.serve.tier import ServingTier
+
+__all__ = [
+    "ServeEngine",
+    "GenerationResult",
+    "ServingTier",
+    "TenantScope",
+    "AdmissionError",
+    "QueueFullError",
+    "TenantOverloadError",
+    "TierClosedError",
+]

@@ -35,6 +35,7 @@ single-entry catalog, and warns once per process.
 from __future__ import annotations
 
 import dataclasses
+import sys
 import warnings
 from typing import Any, List, Optional, Set, Tuple
 
@@ -60,11 +61,23 @@ _DEPRECATION_WARNED: Set[str] = set()
 
 
 def _warn_once(key: str, message: str) -> None:
-    """Once-per-process deprecation (the q1-q11 shim pattern)."""
+    """Once-per-process deprecation (the q1-q11 shim pattern).
+
+    The stacklevel is computed, not hardcoded: the ``prov_index=`` path
+    reaches here through ``__init__`` → ``_init_provenance`` (level 4)
+    while tests drive ``_init_provenance`` directly (level 3) — a fixed
+    level points one of the two at an engine-internal frame instead of the
+    caller's ``ServeEngine(...)`` line.  Walking out of this module's
+    frames attributes the warning to the first external call site on
+    either path."""
     if key in _DEPRECATION_WARNED:
         return
     _DEPRECATION_WARNED.add(key)
-    warnings.warn(message, DeprecationWarning, stacklevel=3)
+    level, frame = 2, sys._getframe(1)
+    while frame.f_back is not None and frame.f_globals.get("__name__") == __name__:
+        frame = frame.f_back
+        level += 1
+    warnings.warn(message, DeprecationWarning, stacklevel=level)
 
 
 @dataclasses.dataclass
@@ -167,6 +180,7 @@ class ServeEngine:
         n_new: int,
         request_ids: Optional[np.ndarray] = None,
         greedy: bool = True,
+        sample_seed: int = 0,          # greedy=False: PRNG seed (temperature 1)
         frames: Optional[np.ndarray] = None,   # enc-dec: stub frontend output
         record_provenance: bool = False,
         request_source: Optional[str] = None,  # existing dataset the requests
@@ -188,12 +202,26 @@ class ServeEngine:
         for t in range(sp):
             logits, cache = self._decode(self.params, toks[:, t], jnp.int32(t), cache)
 
+        # greedy: argmax.  greedy=False: temperature-1 categorical sampling
+        # with a SEEDED key split per step — deterministic for a given
+        # (params, prompts, sample_seed), the reproducibility contract the
+        # provenance record rests on.
+        key = jax.random.PRNGKey(sample_seed)
+
+        def _next_token(logits, key):
+            if greedy:
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32), key
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(sub, logits.astype(jnp.float32),
+                                         axis=-1)
+            return tok.astype(jnp.int32), key
+
         out = []
-        cur = jnp.argmax(logits, axis=-1).astype(jnp.int32) if greedy else None
+        cur, key = _next_token(logits, key)
         for i in range(n_new):
             out.append(np.asarray(cur))
             logits, cache = self._decode(self.params, cur, jnp.int32(sp + i), cache)
-            cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            cur, key = _next_token(logits, key)
 
         request_ids_given = request_ids is not None
         if request_ids is None:
@@ -343,3 +371,48 @@ class ServeEngine:
         qb, sess = self._lineage_builder(
             result, upstream if upstream is not None else result.request_dataset)
         return qb.rows_batch(rows_batch).run(sess)
+
+    # -- serving-tier integration -------------------------------------------------
+    def as_backend(self) -> "_EngineBackend":
+        """This engine as a :class:`~repro.serve.tier.ServingTier` backend.
+
+        Plans execute through the catalog's shared ``FederatedSession`` —
+        serving-local probes delegate to the engine's own ``QuerySession``
+        (single-member plans always do), upstream targets split and stitch
+        across the boundary, and ``run_many`` fuses either kind across
+        requests.  Bare (unqualified) refs naming serving-index datasets
+        are qualified with the engine's member name in ``prepare`` so
+        tenants can submit ``responses@0 -> requests@0`` probes without
+        knowing the catalog layout — and so capability scopes and fuse
+        buckets see one canonical spelling per dataset.
+        """
+        return _EngineBackend(self)
+
+
+class _EngineBackend:
+    """Tier backend adapter over one engine's federation session."""
+
+    def __init__(self, engine: ServeEngine) -> None:
+        self._engine = engine
+
+    def _qualify_ref(self, ref: Optional[str]) -> Optional[str]:
+        if ref is None or "/" in ref:
+            return ref
+        if ref in self._engine.prov.datasets:
+            return qualify(self._engine._serve_name, ref)
+        return ref      # unknown bare ref: let the session raise its error
+
+    def prepare(self, plan):
+        refs = {r: self._qualify_ref(r) for r in plan.refs()}
+        if all(k == v for k, v in refs.items()):
+            return plan
+        sub = lambda r: refs.get(r, r) if r is not None else None  # noqa: E731
+        return dataclasses.replace(
+            plan, source=sub(plan.source), target=sub(plan.target),
+            via=sub(plan.via), anchor=sub(plan.anchor))
+
+    def run_many(self, plans) -> List:
+        return self._engine.federation.run_many(plans)
+
+    def stats(self):
+        return self._engine.federation.stats()

@@ -701,3 +701,87 @@ def test_split_ref_and_link_repr():
     up[0, 1] = True
     np.testing.assert_array_equal(link.stitch_down(up, 4), up)
     np.testing.assert_array_equal(link.stitch_up(up, 4), up)
+
+
+# ===========================================================================
+# Catalog-owned cross-relation store + the cost-model gate
+# ===========================================================================
+def test_cross_store_shared_across_sessions():
+    """The stitched-relation store lives on the CATALOG: a second session
+    over the same catalog reuses hot relations the first one composed —
+    the serving-tier pattern, where short-lived sessions front one
+    long-lived catalog."""
+    pytest.importorskip("scipy")
+    base, specs = _random_specs(21)
+    catalog, refs, sink_ref = _build_federated(base, specs, 2)
+    a = FederatedSession(catalog, cross_min_demand=0)
+    plan = (prov(catalog).source(sink_ref).rows([0])
+            .backward().to(refs[0]).plan())
+    got = a.run(plan)
+    assert a.counters["cross_composes"] == 1
+    b = FederatedSession(catalog, cross_min_demand=0)
+    assert b._store is a._store is catalog._cross_store
+    assert len(b._cross) == 1           # visible before b ever ran a plan
+    np.testing.assert_array_equal(np.asarray(b.run(plan)), np.asarray(got))
+    assert b.counters["cross_composes"] == 0         # reused, not recomposed
+    assert b.counters["cross_probes"] == 1
+
+
+def test_cost_gate_budget_zero_never_stitches():
+    """Default gate (``cross_min_demand=None``): a stitched relation that
+    cannot be retained under the byte budget never amortizes, so the gate
+    keeps segment execution forever — and the segment answers must equal
+    the stitched ones."""
+    pytest.importorskip("scipy")
+    base, specs = _random_specs(22)
+    catalog, refs, sink_ref = _build_federated(base, specs, 2)
+    sess = FederatedSession(catalog, cross_budget_bytes=0)
+    plan = (prov(catalog).source(sink_ref).rows([0])
+            .backward().to(refs[0]).plan())
+    got = sess.run(plan)
+    for _ in range(40):                  # demand far past any fixed floor
+        np.testing.assert_array_equal(np.asarray(sess.run(plan)),
+                                      np.asarray(got))
+    assert sess.counters["cross_composes"] == 0
+    assert sess.counters["segments"] > 0
+    # demand is still tracked (the gate re-evaluates as budget/stats move)
+    assert any(v > 40 for v in sess._route_demand.values())
+    # identical world, permissive budget: the stitched answer matches
+    base2, specs2 = _random_specs(22)
+    catalog2, _, sink_ref2 = _build_federated(base2, specs2, 2)
+    stitch = FederatedSession(catalog2, cross_min_demand=0)
+    plan2 = (prov(catalog2).source(sink_ref2).rows([0])
+             .backward().to(refs[0]).plan())
+    np.testing.assert_array_equal(np.asarray(stitch.run(plan2)),
+                                  np.asarray(got))
+    assert stitch.counters["cross_composes"] == 1
+
+
+def test_cross_route_choose_stats_fallback_demand_floor():
+    """A route with any unpriceable hop falls back to the legacy demand
+    floor instead of a cost estimate."""
+    from repro.core.costmodel import (
+        CROSS_FALLBACK_MIN_DEMAND,
+        cross_route_choose,
+    )
+
+    v = cross_route_choose([None], 0.0, 1, CROSS_FALLBACK_MIN_DEMAND - 1)
+    assert (v["strategy"], v["estimated"]) == ("segments", False)
+    v = cross_route_choose([None], 0.0, 1, CROSS_FALLBACK_MIN_DEMAND)
+    assert (v["strategy"], v["estimated"]) == ("stitched", False)
+
+
+def test_member_relation_stats_price_the_route():
+    """The gate's inputs: every registered member (index or handle) prices
+    a composed relation for the cost model without materializing it."""
+    base, specs = _random_specs(23)
+    catalog, refs, sink_ref = _build_federated(base, specs, 2)
+    for name, member in catalog.members.items():
+        local = [split_ref(r)[1] for r in (list(refs) + [sink_ref])
+                 if split_ref(r)[0] == name]
+        if len(local) < 2:
+            continue
+        rel, ns = member.relation_stats(local[0], local[-1])
+        assert ns >= 0.0
+        if rel is not None:
+            assert rel.rows > 0 and rel.cols > 0 and rel.nnz >= 0
