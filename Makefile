@@ -2,7 +2,7 @@ PY ?= python
 TIMEOUT ?= 900
 
 .PHONY: test test-fast test-sharded bench-query bench-quick \
-        bench-serving bench-serving-quick ci
+        bench-serving bench-serving-quick bench-stream bench-stream-quick ci
 
 # tier-1 verify (ROADMAP.md): the whole suite, stop at first failure
 test:
@@ -40,6 +40,14 @@ bench-serving:
 
 bench-serving-quick:
 	env PYTHONPATH=src $(PY) benchmarks/bench_serving.py --quick
+
+# streaming capture: incremental extension vs recompose + bounded-residency
+# append stream; merges the `stream` section into BENCH_query.json
+bench-stream:
+	env PYTHONPATH=src $(PY) benchmarks/bench_stream.py
+
+bench-stream-quick:
+	env PYTHONPATH=src $(PY) benchmarks/bench_stream.py --quick
 
 # mirrors .github/workflows/ci.yml
 ci:

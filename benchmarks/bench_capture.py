@@ -44,10 +44,13 @@ def run(quick: bool = False):
         def chap():
             idx = ProvenanceIndex(name)
             ch = ChapmanIndex()
-            idx.add_record_hook(
+            hook = idx.add_record_hook(
                 lambda input_ids, output_id, out_table, info, input_tables:
                 ch.capture(input_ids, input_tables, output_id, out_table, info))
-            runner(idx, mk(0))
+            try:
+                runner(idx, mk(0))
+            finally:
+                idx.remove_record_hook(hook)
 
         t_tens = _time(tens, reps)
         t_coo = _time(tens_coo, reps)

@@ -20,11 +20,16 @@ def _capture_usecase(name: str, mirror_chapman: bool = False):
     mk, runner = USECASES[name]
     idx = ProvenanceIndex(name)
     ch = ChapmanIndex() if mirror_chapman else None
+    hook = None
     if ch is not None:
-        idx.add_record_hook(
+        hook = idx.add_record_hook(
             lambda input_ids, output_id, out_table, info, input_tables:
             ch.capture(input_ids, input_tables, output_id, out_table, info))
-    runner(idx, mk(0))
+    try:
+        runner(idx, mk(0))
+    finally:
+        if hook is not None:
+            idx.remove_record_hook(hook)
     return idx, ch
 
 

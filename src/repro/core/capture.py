@@ -34,7 +34,13 @@ from repro.core.provtensor import (
     join_tensor,
 )
 
-__all__ = ["build_tensor", "force_coo_capture", "structured_capture_enabled"]
+__all__ = [
+    "build_tensor",
+    "force_coo_capture",
+    "structured_capture_enabled",
+    "strip_payload",
+    "restore_payload",
+]
 
 _structured_stack = [True]
 
@@ -88,3 +94,49 @@ def build_tensor(info: CaptureInfo, structured: Optional[bool] = None) -> ProvTe
     if cat is OpCategory.APPEND:
         return append_tensor(info.n_in[0], info.n_in[1], structured=structured)
     raise ValueError(f"unknown category {cat}")
+
+
+# ---------------------------------------------------------------------------
+# Spill-tier payload stripping (repro.core.spill.TensorSpiller)
+# ---------------------------------------------------------------------------
+def _slot_column(tensor: ProvTensor, slot: int) -> np.ndarray:
+    g = tensor.slot_gather(slot)
+    return g if g is not None else tensor.coo[:, 1 + slot]
+
+
+def strip_payload(info: CaptureInfo) -> None:
+    """Drop the capture payload arrays off ``info`` when the op's tensor is
+    spilled.  The structured slots hold these very arrays BY REFERENCE
+    (``kept_rows`` IS the gather slot's payload), so spilling the tensor
+    frees nothing while the info-side alias survives.  Which fields were
+    stripped is remembered on the record so :func:`restore_payload` puts
+    back exactly what existed — a COO HAUGMENT tensor alone cannot tell a
+    stripped ``src_rows`` from stripped multi-parent ``links``."""
+    stripped = []
+    for field in ("kept_rows", "src_rows", "join_pairs", "links"):
+        if getattr(info, field) is not None:
+            setattr(info, field, None)
+            stripped.append(field)
+    info._spill_stripped = tuple(stripped)
+
+
+def restore_payload(info: CaptureInfo, tensor: ProvTensor) -> None:
+    """Inverse of :func:`strip_payload`, reconstructing the payload fields
+    from a rehydrated tensor (memmap-backed arrays are adopted as-is).
+    Round-trips value-identical: the tensor constructors stored these exact
+    arrays per slot at capture time."""
+    stripped = getattr(info, "_spill_stripped", ())
+    for field in stripped:
+        if field == "kept_rows":
+            info.kept_rows = _slot_column(tensor, 0)
+        elif field == "src_rows":
+            info.src_rows = _slot_column(tensor, 0)
+        elif field == "join_pairs":
+            g0 = tensor.slot_gather(0)
+            if g0 is not None:
+                info.join_pairs = np.stack([g0, tensor.slot_gather(1)], axis=1)
+            else:
+                info.join_pairs = tensor.coo[:, 1:3]
+        elif field == "links":
+            info.links = tensor.coo
+    info._spill_stripped = ()

@@ -43,6 +43,9 @@ __all__ = [
     "compose_pair_csr",
     "compose_gather",
     "chain_gather",
+    "extend_tail",
+    "extend_tail_csr",
+    "extend_tail_bitplane",
     "compose_chain",
     "plan_chain",
     "dataset_lineage",
@@ -153,6 +156,79 @@ def chain_gather(chain: Sequence[Tuple[object, int]]) -> Optional[np.ndarray]:
     if acc is None and chain:
         acc = np.arange(chain[-1][0].tensor.n_out, dtype=np.int32)
     return acc
+
+
+def extend_tail_csr(rel, g: np.ndarray):
+    """Closed-form ``prefix ∘ gather-step`` for a CSR prefix: a column
+    gather, NOT a sparse matmul.
+
+    ``rel`` is the composed (n_src × n_mid) forward relation; ``g`` maps
+    dst→mid (int32 (n_dst,), -1 = no link).  Since every dst column of the
+    result is exactly one mid column of the prefix (or empty), the extension
+    is ``out[:, d] = rel[:, g[d]]`` — one ragged gather over the prefix's
+    CSC columns, O(nnz_out), no flops.  This is what makes appending a
+    structured op to a DENSE warm relation cheap: the whole-chain recompose
+    it replaces pays a full spmm per hop.
+    """
+    if _sp is None:
+        raise ImportError("scipy is required for the CSR composition backend")
+    g = np.asarray(g, dtype=np.int64).reshape(-1)
+    csc = rel.tocsc()
+    n_src = rel.shape[0]
+    n_dst = len(g)
+    valid = g >= 0
+    cols = g[valid]
+    starts = csc.indptr[cols].astype(np.int64)
+    degs = (csc.indptr[cols + 1] - csc.indptr[cols]).astype(np.int64)
+    total = int(degs.sum())
+    indptr = np.zeros(n_dst + 1, dtype=np.int64)
+    indptr[1:][valid] = degs
+    np.cumsum(indptr, out=indptr)
+    if total:
+        flat = np.repeat(starts - np.concatenate(([0], np.cumsum(degs)[:-1])),
+                         degs) + np.arange(total)
+        indices = csc.indices[flat]
+        data = csc.data[flat].copy()
+    else:
+        indices = np.zeros(0, dtype=csc.indices.dtype)
+        data = np.zeros(0, dtype=csc.data.dtype)
+    out = _sp.csc_matrix((data, indices, indptr), shape=(n_src, n_dst))
+    return out.tocsr()
+
+
+def extend_tail_bitplane(plane: np.ndarray, g: np.ndarray,
+                         n_mid: int) -> np.ndarray:
+    """Closed-form ``prefix ∘ gather-step`` for a packed-bitplane prefix:
+    a column take through the dst→mid gather, blocked so the transient
+    dense unpack stays ~4 MB regardless of relation size."""
+    g = np.asarray(g, dtype=np.int64).reshape(-1)
+    n_src = plane.shape[0]
+    n_dst = len(g)
+    valid = g >= 0
+    safe = np.where(valid, g, 0)
+    out = np.empty((n_src, (n_dst + 31) // 32), dtype=np.uint32)
+    block = max(1, (4 << 20) // max(n_mid + n_dst, 1))
+    for lo in range(0, max(n_src, 1), block):
+        hi = min(lo + block, n_src)
+        if hi <= lo:
+            break
+        dense = unpack_bitplane(plane[lo:hi], n_mid)
+        out[lo:hi] = pack_bitplane(dense[:, safe] & valid[None, :])
+    return out
+
+
+def extend_tail(rel, g: np.ndarray, backend: str,
+                n_mid: Optional[int] = None):
+    """Dispatch the closed-form one-step extension by prefix backend
+    (``"csr"`` | ``"bitplane"``); structured prefixes use
+    :func:`compose_gather` directly and never come through here."""
+    if backend == "csr":
+        return extend_tail_csr(rel, g)
+    if backend == "bitplane":
+        if n_mid is None:
+            raise ValueError("bitplane extension needs n_mid")
+        return extend_tail_bitplane(rel, g, n_mid)
+    raise ValueError(f"unknown backend {backend!r}")
 
 
 def compose_pair(a_bits: np.ndarray, b_bits: np.ndarray, n_mid: int,

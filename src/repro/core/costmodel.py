@@ -39,6 +39,8 @@ __all__ = [
     "structured_cost",
     "pick_backend",
     "plan_chain_stats",
+    "extend_tail_cost",
+    "extend_vs_recompose",
     "relation_probe_cost",
     "cross_route_choose",
     "CostModel",
@@ -209,9 +211,21 @@ def plan_chain_stats(stats: Sequence[RelStats], backend: str = "csr",
     ``bitplane`` backend prices by dims alone — its word ops are
     nnz-independent — and reduces to the classic DP.)
     """
+    order, _, _ = _chain_dp(stats, backend, have_scipy)
+    return order
+
+
+def _chain_dp(stats: Sequence[RelStats], backend: str,
+              have_scipy: bool) -> Tuple[List[Tuple[int, int]], float,
+                                         Optional[RelStats]]:
+    """The DP behind :func:`plan_chain_stats`, additionally returning the
+    optimal total merge cost and the folded whole-chain estimate (what
+    :func:`extend_vs_recompose` prices a recompose at)."""
     n = len(stats)
-    if n <= 1:
-        return []
+    if n == 0:
+        return [], 0.0, None
+    if n == 1:
+        return [], 0.0, stats[0]
     # Canonical per-segment stats: est[i][j] = left-to-right fold of the
     # segment.  The true relation is associative; compose_est's saturation
     # is not, so fixing one fold order keeps the DP's optimal substructure
@@ -246,7 +260,66 @@ def plan_chain_stats(stats: Sequence[RelStats], backend: str = "csr",
         order.append((i, k))
 
     emit(0, n - 1)
-    return order
+    return order, cost[0][n - 1], est[0][n - 1]
+
+
+def extend_tail_cost(prefix: RelStats, step: RelStats,
+                     have_scipy: bool = True) -> float:
+    """Cost of extending a warm composed ``prefix`` by ONE structured
+    ``step`` via the closed forms in :mod:`repro.core.compose`: a
+    structured prefix pays one take (:func:`structured_cost`); a dense
+    prefix pays the COLUMN GATHER of ``extend_tail`` — O(nnz moved) for
+    CSR, O(dense words) for bitplane — never a matmul."""
+    if not step.structured:
+        return compose_cost_pair(prefix, step, "auto", have_scipy)
+    if prefix.structured:
+        return structured_cost(prefix, step)
+    if pick_backend(prefix.density, have_scipy) == "csr":
+        moved = prefix.nnz * (step.nnz / max(step.rows, 1))
+        return C_SPMM_OVERHEAD + C_TAKE * (moved + step.cols)
+    words = prefix.rows * (max((prefix.cols + 31) // 32, 1)
+                           + max((step.cols + 31) // 32, 1))
+    return C_WORD_OP * words
+
+
+def extend_vs_recompose(prefix: RelStats, tail: Sequence[RelStats],
+                        backend: str = "auto",
+                        have_scipy: bool = True) -> Dict[str, object]:
+    """Gate the hop-cache's streaming maintenance: when ops land on a warm
+    composed ``prefix``, is it cheaper to EXTEND it step by step (the
+    closed-form tail extension, left-to-right) or to RECOMPOSE — fold the
+    ``tail`` by the nnz-aware chain DP in its own best order, then apply it
+    to the prefix with one compose?
+
+    Extension wins almost always for the structured tails streaming capture
+    produces (each step is a take / column gather).  Recompose wins when
+    the tail is DENSE and strongly row-reducing: folding a heavy tail first
+    (where the DP is free to pick the cheap order) makes the single
+    prefix-apply touch far fewer columns than dragging the full-width
+    prefix through every hop.  Returns ``{"strategy", "extend_ns",
+    "recompose_ns", "tail_order", "est"}``; a single-step tail is always
+    "extend" (the two plans are the same plan).
+    """
+    tail = list(tail)
+    if not tail:
+        return {"strategy": "extend", "extend_ns": 0.0, "recompose_ns": 0.0,
+                "tail_order": [], "est": prefix}
+    extend_ns = 0.0
+    acc = prefix
+    for step in tail:
+        extend_ns += extend_tail_cost(acc, step, have_scipy)
+        acc = compose_est(acc, step)
+    if len(tail) == 1:
+        return {"strategy": "extend", "extend_ns": extend_ns,
+                "recompose_ns": extend_ns, "tail_order": [], "est": acc}
+    tail_order, tail_ns, folded = _chain_dp(tail, backend, have_scipy)
+    # the final prefix-apply goes through the same closed forms the executor
+    # uses: a structured folded tail is ONE column gather, not a matmul
+    recompose_ns = tail_ns + extend_tail_cost(prefix, folded, have_scipy)
+    strategy = "extend" if extend_ns <= recompose_ns else "recompose"
+    return {"strategy": strategy, "extend_ns": extend_ns,
+            "recompose_ns": recompose_ns, "tail_order": tail_order,
+            "est": acc}
 
 
 def relation_probe_cost(rel: Optional[RelStats], n_probes: int,

@@ -50,11 +50,29 @@ Design points:
   :func:`bitplane_or_reduce` contraction as forward probes) costing
   O(probe nnz × words) per probe instead of the old scan of every relation
   row per probe.
-* **Append-safe** — the op DAG is append-only (one producer per dataset,
-  enforced by ``ProvenanceIndex.record``), so composed relations between
-  existing datasets stay exact when new ops are recorded and the cache is
-  kept across version bumps — continuous serving reuses its lineage
-  relations instead of recomposing per generation.
+* **Append-safe AND stream-native** — the op DAG is append-only (one
+  producer per dataset, enforced by ``ProvenanceIndex.record``), so
+  composed relations between existing datasets stay exact when new ops are
+  recorded and the cache is kept across version bumps.  Beyond that,
+  ``_sync`` drains newly-recorded ops INCREMENTALLY: for every source
+  dataset the cache has been probed through, a new op with a structured
+  tail (identity / filter / gather / append — the common capture output)
+  EXTENDS the warm composed relation by one closed-form step
+  (:func:`~repro.core.compose.extend_tail` — a take for structured
+  prefixes, a column gather for dense ones) instead of leaving the next
+  probe to recompose the chain; a cold multi-hop miss with a dense prefix
+  is gated by :func:`~repro.core.costmodel.extend_vs_recompose` between
+  stepwise extension and fold-the-tail-first recomposition.  ``extends`` /
+  ``recomposes`` counters in :meth:`stats` expose which maintenance path
+  ran.
+* **Spill-backed eviction** — with a ``spill=`` policy
+  (:mod:`repro.core.spill`), LRU eviction past the byte budget's high
+  watermark serializes entries to the compact on-disk log (structured
+  gathers as one int array, CSR as its index/indptr/data triple, bitplanes
+  as the packed words) instead of dropping them; a probe of a spilled pair
+  FAULTS it back transparently (one memory-mapped read, counted in
+  ``rehydrations``) rather than recomposing the chain.  Without ``spill=``
+  eviction behaves exactly as before (drop at the budget).
 
 When NO path exists, the probe methods answer empty (matching the walking
 engine); ``relation`` itself raises ``KeyError``.
@@ -69,12 +87,20 @@ import numpy as np
 
 from repro.core.compose import (
     HAVE_SCIPY,
+    compose_gather,
     compose_pair,
     compose_pair_csr,
+    extend_tail_bitplane,
+    extend_tail_csr,
     op_bitplane,
     op_csr,
 )
-from repro.core.costmodel import CostModel, pick_backend
+from repro.core.costmodel import (
+    CostModel,
+    RelStats,
+    extend_vs_recompose,
+    pick_backend,
+)
 from repro.core.pipeline import ProvenanceIndex
 from repro.core.provtensor import (
     SlotIdentity,
@@ -83,6 +109,7 @@ from repro.core.provtensor import (
     pack_bitplane,
     unpack_bitplane,
 )
+from repro.core.spill import resolve_spill
 
 __all__ = ["ComposedIndex"]
 
@@ -139,6 +166,8 @@ class ComposedIndex:
         memory_budget_bytes: int = 64 << 20,
         backend: Optional[str] = None,
         use_pallas: bool = False,
+        spill=None,
+        extend_eager: bool = True,
     ) -> None:
         if backend is None:
             backend = "bitplane" if use_pallas else "auto"
@@ -150,39 +179,188 @@ class ComposedIndex:
         self.backend = backend
         self.memory_budget_bytes = int(memory_budget_bytes)
         self.use_pallas = use_pallas
+        self.extend_eager = bool(extend_eager)
         self.costmodel = CostModel(index)
         self._cache: "OrderedDict[Tuple[str, str], _Entry]" = OrderedDict()
         self._bytes = 0
         self._version = index.version
+        self._ops_seen = len(index.ops)
+        # probed-through sources: reach sets maintained incrementally so a
+        # 1M-op stream never re-runs the O(ops) reachability scan per probe
+        self._reach: Dict[str, set] = {}
+        self._spill = resolve_spill(spill)
+        self._spill_store = self._spill.ensure_store() if self._spill else None
+        # keys whose entry is on disk and NOT resident; plus what the disk
+        # copy holds (backend, nnz) so an unchanged re-eviction skips the
+        # write (composed relations are immutable under the append-only DAG)
+        self._spilled: "OrderedDict[Tuple[str, str], bool]" = OrderedDict()
+        self._store_meta: Dict[Tuple[str, str], Tuple[str, int]] = {}
         self.hits = 0
         self.misses = 0
         self.evictions = 0
         self.conversions = 0
+        self.extends = 0
+        self.recomposes = 0
+        self.spills = 0
+        self.rehydrations = 0
 
     # -- cache plumbing -----------------------------------------------------
     def _sync(self) -> None:
-        """Reconcile with the index after writes.
+        """Reconcile with the index after writes — incrementally.
 
         The op DAG is APPEND-ONLY (every dataset has exactly one producer —
         ``ProvenanceIndex.record`` rejects duplicate output ids — and a new
         op can only produce a NEW dataset, never splice a path between two
         existing ones), so composed relations between existing datasets stay
-        exact across version bumps and the cache is KEPT.  Continuous
-        serving (one recorded op per request batch) therefore reuses its
-        composed lineage relations instead of recomposing per generation.
+        exact across version bumps and the cache is KEPT.
+
+        Ops recorded since the last sync are drained ONCE: every tracked
+        source's reach set absorbs them, and (``extend_eager``, auto
+        backend) a new op whose on-path slots are all structured and whose
+        on-path prefixes are all RAM-resident EXTENDS the warm composed
+        relations by one closed-form step right now — the next probe of the
+        new dataset is a pure cache hit instead of a chain recompose.  Ops
+        whose tensors are spilled, or whose prefixes are cold, are left for
+        the lazy path (which faults / rebuilds on demand): eager
+        maintenance must never pull cold state back in.
         """
+        n = len(self.index.ops)
+        if n > self._ops_seen:
+            for op in self.index.ops[self._ops_seen:n]:
+                self._absorb_op(op)
+            self._ops_seen = n
         self._version = self.index.version
 
+    def _absorb_op(self, op) -> None:
+        for src, reach in self._reach.items():
+            slots = [k for k, d in enumerate(op.input_ids) if d in reach]
+            if not slots:
+                continue
+            reach.add(op.output_id)
+            if not (self.extend_eager and self.backend == "auto"):
+                continue
+            if not getattr(op.tensor, "structured", False):
+                continue
+            prefixes = {}
+            for k in slots:
+                d = op.input_ids[k]
+                if d == src:
+                    prefixes[k] = None
+                else:
+                    e = self._cache.get((src, d))
+                    if e is None:
+                        break  # cold/partial prefix: a partial union is wrong
+                    prefixes[k] = e
+            if len(prefixes) != len(slots):
+                continue
+            # the extension reads the gather slot: fault a spilled tensor
+            # back NOW (one ~KB memmap read, LRU-linear during a sync drain)
+            # — skipping instead would leave the relation to a full
+            # recompose over every op appended since the last probe
+            op.tensor.resident()
+            acc: Optional[_Entry] = None
+            for k in slots:
+                contrib = self._extend(prefixes[k], op, k)
+                acc = contrib if acc is None else self._union(acc, contrib)
+            self._insert((src, op.output_id), self._settle(acc))
+            self.extends += 1
+
+    def _reach_set(self, src: str) -> set:
+        """Datasets reachable from ``src`` — computed by ONE full op scan on
+        the first probe through ``src``, then maintained per appended op by
+        ``_sync`` (the O(ops)-per-miss rescan this replaces was the
+        streaming bottleneck)."""
+        reach = self._reach.get(src)
+        if reach is None:
+            reach = {src}
+            for op in self.index.ops:
+                if any(d in reach for d in op.input_ids):
+                    reach.add(op.output_id)
+            self._reach[src] = reach
+        return reach
+
     def _evict_over_budget(self) -> None:
-        while self._bytes > self.memory_budget_bytes and len(self._cache) > 1:
-            _, evicted = self._cache.popitem(last=False)
+        if self._spill is None:
+            while (self._bytes > self.memory_budget_bytes
+                   and len(self._cache) > 1):
+                _, evicted = self._cache.popitem(last=False)
+                self._bytes -= evicted.nbytes()
+                self.evictions += 1
+            return
+        # spill tier: watermark hysteresis — start evicting past high,
+        # spill LRU entries to disk down to low, so an append stream pays
+        # one burst of writes per crossing instead of one per insert
+        high = self.memory_budget_bytes * self._spill.high_watermark
+        low = self.memory_budget_bytes * self._spill.low_watermark
+        if self._bytes <= high:
+            return
+        while self._bytes > low and len(self._cache) > 1:
+            key, evicted = self._cache.popitem(last=False)
             self._bytes -= evicted.nbytes()
             self.evictions += 1
+            self._spill_entry(key, evicted)
+
+    def _spill_entry(self, key: Tuple[str, str], entry: _Entry) -> None:
+        entry.relT = None  # lazily rebuilt after fault; never serialized
+        if self._store_meta.get(key) != (entry.backend, entry.nnz):
+            meta = {"backend": entry.backend, "rows": entry.rows,
+                    "cols": entry.cols, "nnz": entry.nnz,
+                    "identity": entry.backend == "structured"
+                    and entry.rel is None}
+            if entry.backend == "structured":
+                arrays = {} if entry.rel is None else {"gather": entry.rel}
+            elif entry.backend == "csr":
+                arrays = {"data": entry.rel.data, "indices": entry.rel.indices,
+                          "indptr": entry.rel.indptr}
+            else:
+                arrays = {"plane": entry.rel}
+            self._spill_store.put(("rel", self.index.name) + key, arrays, meta)
+            self._store_meta[key] = (entry.backend, entry.nnz)
+        self._spilled[key] = True
+        self.spills += 1
+
+    def _fault(self, key: Tuple[str, str]) -> Optional[_Entry]:
+        """Rehydrate one spilled composed relation: arrays come back as
+        read-only memmap views (page-cache-backed, byte-identical to what
+        was evicted), the entry re-enters the LRU as MRU."""
+        try:
+            meta, arrays = self._spill_store.get(("rel", self.index.name)
+                                                 + key)
+        except KeyError:
+            self._spilled.pop(key, None)
+            self._store_meta.pop(key, None)
+            return None  # dropped by a disk budget: rebuild from scratch
+        backend = meta["backend"]
+        rows, cols, nnz = int(meta["rows"]), int(meta["cols"]), int(meta["nnz"])
+        if backend == "structured":
+            rel = None if meta["identity"] else np.asarray(arrays["gather"])
+            entry = _Entry("structured", rel, rows, cols, nnz)
+        elif backend == "csr":
+            import scipy.sparse as sp
+
+            rel = sp.csr_matrix(
+                (arrays["data"], arrays["indices"], arrays["indptr"]),
+                shape=(rows, cols))
+            entry = _Entry("csr", rel, rows, cols, nnz)
+        else:
+            entry = _Entry("bitplane", np.asarray(arrays["plane"]),
+                           rows, cols, nnz)
+        self._spilled.pop(key, None)
+        self.rehydrations += 1
+        self._insert(key, entry)
+        if key not in self._cache:
+            self._spilled[key] = True  # declined (over budget); disk copy stays
+        return entry
 
     def _insert(self, key: Tuple[str, str], entry: _Entry) -> None:
         nbytes = entry.nbytes()
         if nbytes > self.memory_budget_bytes:
-            return  # larger than the whole budget: serve uncached
+            # larger than the whole budget: with a spill tier, park it on
+            # disk (a memmap fault beats recomposing the chain); without
+            # one, serve uncached — the seed behavior
+            if self._spill_store is not None:
+                self._spill_entry(key, entry)
+            return
         old = self._cache.pop(key, None)
         if old is not None:
             # overwrite releases the old entry's bytes FIRST — re-inserting a
@@ -190,13 +368,22 @@ class ComposedIndex:
             self._bytes -= old.nbytes()
         self._cache[key] = entry
         self._bytes += nbytes
+        self._spilled.pop(key, None)  # resident again; disk copy kept as-is
         self._evict_over_budget()
 
     def _lookup(self, key: Tuple[str, str]) -> Optional[_Entry]:
         entry = self._cache.get(key)
         if entry is not None:
             self._cache.move_to_end(key)
-        return entry
+            return entry
+        if self._spilled and key in self._spilled:
+            return self._fault(key)
+        return None
+
+    def _peek(self, key: Tuple[str, str]) -> bool:
+        """Composed and answerable without recomposition (resident OR
+        spilled) — no LRU touch, no fault, no composition."""
+        return key in self._cache or key in self._spilled
 
     # -- backend primitives ---------------------------------------------------
     def _resolve_backend(self, density: float) -> str:
@@ -318,6 +505,16 @@ class ComposedIndex:
                 return _Entry("structured", g_new, prefix.rows, t.n_out,
                               int(np.count_nonzero(g_new >= 0)))
             prefix = self._densify(prefix)
+        if s is not None:
+            # DENSE prefix ∘ structured step: the closed-form tail extension
+            # (a column gather, no matmul) — the streaming append fast path
+            g_step = t.slot_gather(slot)
+            if prefix.backend == "csr":
+                rel = extend_tail_csr(prefix.rel, g_step)
+                return _Entry("csr", rel, prefix.rows, t.n_out, int(rel.nnz))
+            rel = extend_tail_bitplane(prefix.rel, g_step, prefix.cols)
+            return _Entry("bitplane", rel, prefix.rows, t.n_out,
+                          bitplane_popcount(rel))
         rows = prefix.rows
         step = self._step_rel(op, slot, prefix.backend)
         if prefix.backend == "csr":
@@ -354,6 +551,41 @@ class ComposedIndex:
         rel = np.bitwise_or(a.rel, b.rel)
         return _Entry("bitplane", rel, a.rows, a.cols, bitplane_popcount(rel))
 
+    def _compose_entries(self, a: _Entry, b: _Entry) -> _Entry:
+        """Generic ``a ∘ b`` over already-composed entries (``a`` maps
+        X→Y, ``b`` maps Y→Z) — the recompose path's fold primitive.  The
+        same closed forms as :meth:`_extend` apply: identity elimination
+        (copying, per the no-aliasing budget rule), gather∘gather as one
+        take, dense∘gather as the column-gather tail extension; only
+        dense∘dense pays a matmul."""
+        if a.backend == "structured" and a.rel is None:
+            rel = b.rel
+            if rel is not None:
+                rel = rel.copy()
+            return _Entry(b.backend, rel, a.rows, b.cols, b.nnz)
+        if b.backend == "structured" and b.rel is None:
+            rel = a.rel if a.rel is None else a.rel.copy()
+            return _Entry(a.backend, rel, a.rows, b.cols, a.nnz)
+        if b.backend == "structured":
+            if a.backend == "structured":
+                g = compose_gather(a.rel, b.rel)
+                return _Entry("structured", g, a.rows, b.cols,
+                              int(np.count_nonzero(g >= 0)))
+            if a.backend == "csr":
+                rel = extend_tail_csr(a.rel, b.rel)
+                return _Entry("csr", rel, a.rows, b.cols, int(rel.nnz))
+            rel = extend_tail_bitplane(a.rel, b.rel, a.cols)
+            return _Entry("bitplane", rel, a.rows, b.cols,
+                          bitplane_popcount(rel))
+        a = self._densify(a)
+        if a.backend != b.backend:
+            b = self._to_csr(b) if a.backend == "csr" else self._to_bitplane(b)
+        if a.backend == "csr":
+            rel = compose_pair_csr(a.rel, b.rel)
+            return _Entry("csr", rel, a.rows, b.cols, int(rel.nnz))
+        rel = compose_pair(a.rel, b.rel, b.rows, use_pallas=self.use_pallas)
+        return _Entry("bitplane", rel, a.rows, b.cols, bitplane_popcount(rel))
+
     def _settle(self, entry: _Entry) -> _Entry:
         """auto mode: convert an accumulation whose observed density crossed
         the cost model's threshold (densification → packed plane, and back).
@@ -367,6 +599,61 @@ class ComposedIndex:
             else self._to_csr(entry)
 
     # -- the composed relation ----------------------------------------------
+    def _pending_ops(self, src: str, dst: str, reach: set) -> List[object]:
+        """Ops that must run to compose ``(src, dst)``: backward DFS from
+        ``dst``, stopping at ``src`` and at datasets whose ``(src, ·)``
+        relation is already composed (resident or spilled) — returned in
+        topological (op-id) order.  For a one-op append onto a warm chain
+        this is a SINGLE op, independent of pipeline depth; the seed path
+        rescanned the whole DAG region per miss."""
+        pending: Dict[int, object] = {}
+        visited = set()
+        stack = [dst]
+        while stack:
+            d = stack.pop()
+            if d == src or d in visited:
+                continue
+            visited.add(d)
+            if self._peek((src, d)):
+                continue
+            op = self.index.ops[self.index.producer[d]]
+            pending[op.op_id] = op
+            for in_id in op.input_ids:
+                if in_id in reach:
+                    stack.append(in_id)
+        return [pending[i] for i in sorted(pending)]
+
+    @staticmethod
+    def _linear_tail(pending: List[object], reach: set):
+        """``(base_dataset, [(op, slot), ...])`` when the pending ops form
+        one single-parent chain (each op exactly one on-path input, chained
+        consecutively) — the shape :func:`extend_vs_recompose` prices —
+        else None."""
+        steps = []
+        base = None
+        prev_out = None
+        for op in pending:
+            slots = [k for k, d in enumerate(op.input_ids) if d in reach]
+            if len(slots) != 1:
+                return None
+            in_id = op.input_ids[slots[0]]
+            if prev_out is None:
+                base = in_id
+            elif in_id != prev_out:
+                return None
+            prev_out = op.output_id
+            steps.append((op, slots[0]))
+        return base, steps
+
+    def _step_entry(self, op, slot: int) -> _Entry:
+        """One op slot's own relation as an entry (the tail fold's leaves)."""
+        t = op.tensor
+        if self.backend == "auto" and t.slot_structure(slot) is not None:
+            return self._structured_step_entry(op, slot)
+        backend = self._resolve_backend(t.slot_density(slot))
+        return _Entry(backend, self._step_rel(op, slot, backend),
+                      t.n_in[slot], t.n_out, t.slot_nnz(slot))
+
     def _relation_entry(self, src: str, dst: str) -> _Entry:
         self._sync()
         cached = self._lookup((src, dst))
@@ -378,21 +665,65 @@ class ComposedIndex:
             entry = self._identity_entry(self.index.datasets[src].n_rows)
             self._insert((src, dst), entry)
             return entry
-        # ops on a src ~> dst path: downstream of src AND upstream of dst.
-        # (Reachable-from-src ancestors of any such op are themselves in the
-        # set, so the accumulation below never misses a contribution.)
-        up_ids = {op.op_id for op in self.index.upstream_ops(dst)}
-        chain = [
-            op for op in self.index.downstream_ops(src) if op.op_id in up_ids
-        ]
-        rels: Dict[str, Optional[_Entry]] = {src: None}  # None = identity
-        for op in chain:
-            out = op.output_id
-            hit = self._lookup((src, out))
-            if hit is not None:
-                self.hits += 1
-                rels[out] = hit
-                continue
+        reach = self._reach_set(src)
+        if dst not in reach:
+            raise KeyError(f"no dataflow path {src} -> {dst}")
+        pending = self._pending_ops(src, dst, reach)
+        pending_out = {op.output_id for op in pending}
+        # Resolve every boundary prefix FIRST (cached (src, ·) relations the
+        # pending ops compose onto), before any insert below can evict one.
+        # local holds live references, so cascading evictions during the
+        # build cannot invalidate them.
+        local: Dict[str, Optional[_Entry]] = {src: None}  # None = identity
+        for op in pending:
+            for in_id in op.input_ids:
+                if (in_id in reach and in_id != src
+                        and in_id not in pending_out and in_id not in local):
+                    hit = self._lookup((src, in_id))
+                    if hit is not None:
+                        self.hits += 1
+                    else:
+                        # evicted (no spill tier) between peek and resolve:
+                        # rebuild the prefix recursively
+                        hit = self._relation_entry(src, in_id)
+                    local[in_id] = hit
+        # Cost-model gate (dense warm prefix, multi-step tail): fold the
+        # tail FIRST in the chain DP's order and apply it to the prefix
+        # once, when that beats dragging the full-width prefix through
+        # every hop.  Intermediates are NOT cached on this path — the gate
+        # chose it precisely because they would be expensive dead weight.
+        if len(pending) >= 2:
+            lin = self._linear_tail(pending, reach)
+            if lin is not None and lin[0] in local:
+                base, steps = lin
+                prefix = local[base]
+                if prefix is not None and prefix.backend != "structured":
+                    pstats = RelStats(prefix.rows, prefix.cols, prefix.nnz,
+                                      structured=False)
+                    tstats = [RelStats.from_slot(op.tensor, k)
+                              for op, k in steps]
+                    verdict = extend_vs_recompose(pstats, tstats,
+                                                  have_scipy=HAVE_SCIPY)
+                    if verdict["strategy"] == "recompose":
+                        entries = [self._step_entry(op, k) for op, k in steps]
+                        for (i, _k) in verdict["tail_order"]:
+                            j = i + 1
+                            while entries[j] is None:
+                                j += 1
+                            entries[i] = self._compose_entries(entries[i],
+                                                               entries[j])
+                            entries[j] = None
+                        folded = next(e for e in entries if e is not None)
+                        acc = self._settle(self._compose_entries(prefix,
+                                                                 folded))
+                        self.recomposes += 1
+                        self._insert((src, dst), acc)
+                        return acc
+        # Stepwise accumulation in topo order: UNION over on-path input
+        # slots of (prefix ∘ slot step); every intermediate (src, mid) is
+        # cached so later further-dataset queries reuse the prefix.
+        rels = local
+        for op in pending:
             acc: Optional[_Entry] = None
             for k, in_id in enumerate(op.input_ids):
                 if in_id not in rels:
@@ -402,8 +733,12 @@ class ComposedIndex:
             if acc is None:
                 continue
             acc = self._settle(acc)
-            rels[out] = acc
-            self._insert((src, out), acc)
+            rels[op.output_id] = acc
+            self._insert((src, op.output_id), acc)
+        if len(pending) == 1:
+            self.extends += 1
+        elif len(pending) > 1:
+            self.recomposes += 1
         if dst not in rels or rels[dst] is None:
             raise KeyError(f"no dataflow path {src} -> {dst}")
         return rels[dst]
@@ -566,9 +901,22 @@ class ComposedIndex:
     # -- mask-stack probes (the QuerySession entry points) ---------------------
     def contains(self, src: str, dst: str) -> bool:
         """Whether the ``src`` → ``dst`` relation is already composed (no LRU
-        touch, no composition) — the planner's routing test."""
+        touch, no composition) — the planner's routing test.  A SPILLED
+        entry counts: faulting it back is one mmap read, far cheaper than
+        the walk/recompose the router would otherwise pick."""
         self._sync()
-        return (src, dst) in self._cache
+        return (src, dst) in self._cache or (src, dst) in self._spilled
+
+    def residency(self, src: str, dst: str) -> Optional[str]:
+        """Where the composed ``(src, dst)`` relation lives right now:
+        ``"ram"``, ``"spilled"``, or None (not composed).  No LRU touch, no
+        fault — the EXPLAIN surface reads this."""
+        self._sync()
+        if (src, dst) in self._cache:
+            return "ram"
+        if (src, dst) in self._spilled:
+            return "spilled"
+        return None
 
     def probe_forward(self, masks, src: str, dst: str) -> np.ndarray:
         """(B, |src|) bool mask stack -> (B, |dst|) bool via the composed
@@ -617,7 +965,7 @@ class ComposedIndex:
         per_backend = {"csr": 0, "bitplane": 0, "structured": 0}
         for entry in self._cache.values():
             per_backend[entry.backend] += 1
-        return {
+        out = {
             "index": self.index.name,
             "backend": self.backend,
             "entries": len(self._cache),
@@ -630,4 +978,12 @@ class ComposedIndex:
             "misses": self.misses,
             "evictions": self.evictions,
             "conversions": self.conversions,
+            "extends": self.extends,
+            "recomposes": self.recomposes,
+            "spills": self.spills,
+            "rehydrations": self.rehydrations,
+            "spilled_entries": len(self._spilled),
         }
+        if self._spill_store is not None:
+            out["spill"] = self._spill_store.stats()
+        return out

@@ -48,7 +48,7 @@ class OpRecord:
 class ProvenanceIndex:
     """In-memory (in-HBM when sharded) index of one pipeline's provenance."""
 
-    def __init__(self, name: str = "pipeline") -> None:
+    def __init__(self, name: str = "pipeline", spill=None) -> None:
         self.name = name
         self.datasets: Dict[str, DatasetRecord] = {}
         self.ops: List[OpRecord] = []
@@ -58,6 +58,15 @@ class ProvenanceIndex:
         self._composed = None                       # hop-caches key on it
         self._session = None                        # shared QuerySession
         self._record_hooks: List = []               # capture observers
+        # out-of-core op-tensor residency (None = everything stays in RAM):
+        # accepts True / a path / a SpillStore / a SpillPolicy — cold tensors
+        # serialize to the compact on-disk log and fault back on access
+        if spill is not None and spill is not False:
+            from repro.core.spill import TensorSpiller, resolve_spill
+
+            self._spill = TensorSpiller(self, resolve_spill(spill))
+        else:
+            self._spill = None
 
     # -- capture hooks ---------------------------------------------------------
     def add_record_hook(self, fn):
@@ -129,6 +138,8 @@ class ProvenanceIndex:
             output_id=output_id,
         )
         self.ops.append(op)
+        if self._spill is not None:
+            self._spill.on_record(op)
         self.version += 1
         self.producer[output_id] = op.op_id
         for d in input_ids:
@@ -254,10 +265,13 @@ class ProvenanceIndex:
         return sum(r.table.nbytes() for r in self.datasets.values() if r.table is not None)
 
     def stats(self) -> Dict[str, float]:
-        return {
+        out = {
             "ops": len(self.ops),
             "datasets": len(self.datasets),
             "prov_bytes": self.prov_nbytes(),
             "materialized_bytes": self.materialized_nbytes(),
             "nnz": sum(op.tensor.nnz for op in self.ops),
         }
+        if self._spill is not None:
+            out["spill"] = self._spill.stats()
+        return out

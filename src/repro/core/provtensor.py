@@ -667,6 +667,61 @@ class ProvTensor:
         coo = np.unique(coo, axis=0)
         return ProvTensor(n_out=self.n_out, n_in=self.n_in, coo=coo)
 
+    # -- spill serialization (repro.core.spill) ------------------------------
+    def resident(self) -> "ProvTensor":
+        """This tensor, guaranteed resident.  A real tensor answers itself;
+        a spill-tier :class:`~repro.core.spill._TensorFault` intercepts this
+        to rehydrate — callers about to read capture payload aliases off
+        ``op.info`` (recompute) touch it first."""
+        return self
+
+    def to_payload(self) -> Tuple[dict, dict]:
+        """(meta, arrays) of the CANONICAL regime only — lazily-built
+        mirrors (COO of a structured tensor, CSR halves, bitplanes) are
+        deliberately dropped; they rebuild byte-identically after
+        :meth:`from_payload`.  Structured slots serialize as their int
+        payloads (identity/range as pure meta, gathers as the one int32
+        array), explicit tensors as the COO index list — the compact
+        on-disk relation forms of the spill tier."""
+        meta: dict = {"n_out": self.n_out, "n_in": list(self.n_in)}
+        arrays: dict = {}
+        if self._slots is not None:
+            descs = []
+            for i, s in enumerate(self._slots):
+                if isinstance(s, SlotIdentity):
+                    descs.append({"kind": "identity", "n": s.n})
+                elif isinstance(s, SlotRange):
+                    descs.append({"kind": "range", "start": s.start,
+                                  "length": s.length})
+                else:
+                    descs.append({"kind": "gather"})
+                    arrays[f"slot{i}"] = s.src
+            meta["slots"] = descs
+        else:
+            arrays["coo"] = self._coo
+        return meta, arrays
+
+    @staticmethod
+    def from_payload(meta: dict, arrays: dict) -> "ProvTensor":
+        """Inverse of :meth:`to_payload`.  Arrays may be read-only memmap
+        views (the spill store's read path) — they are adopted as-is, no
+        heap copy, so a faulted tensor's payload stays page-cache-backed."""
+        n_out = int(meta["n_out"])
+        n_in = tuple(int(n) for n in meta["n_in"])
+        if "slots" in meta:
+            slots: List[SlotStructure] = []
+            for i, d in enumerate(meta["slots"]):
+                if d["kind"] == "identity":
+                    slots.append(SlotIdentity(int(d["n"])))
+                elif d["kind"] == "range":
+                    slots.append(SlotRange(int(d["start"]), int(d["length"])))
+                else:
+                    slots.append(SlotGather(np.asarray(arrays[f"slot{i}"],
+                                                       dtype=np.int32)))
+            return ProvTensor(n_out=n_out, n_in=n_in, slots=slots)
+        return ProvTensor(n_out=n_out, n_in=n_in,
+                          coo=np.asarray(arrays["coo"], dtype=np.int32))
+
     # -- memory accounting (Table IX / XI) -----------------------------------
     def nbytes(self, include_index: bool = True) -> int:
         """Bytes of the provenance encoding.  Structured tensors count their

@@ -119,7 +119,8 @@ def recompute_rows(index: ProvenanceIndex, dataset: str, rows: Sequence[int]) ->
         return rec.table.take_rows(rows)
 
     op = index.ops[index.producer[dataset]]
-    info = op.info
+    op.tensor.resident()  # fault a spilled tensor back: the payload reads
+    info = op.info        # below (kept_rows/src_rows/join_pairs) alias it
     cat = info.category
 
     if cat in (OpCategory.TRANSFORM, OpCategory.VREDUCE, OpCategory.VAUGMENT):

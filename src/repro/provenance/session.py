@@ -222,6 +222,17 @@ class QuerySession:
             out["cost"] = cost
         else:
             out["strategy"] = self._strategy(plan, note=False)
+        pairs = None
+        if plan.kind not in ("transformations", "cells"):
+            pairs = self._plan_pairs(plan)
+        if pairs is not None:
+            # spill-tier residency per relation leg: "ram" / "spilled" (one
+            # mmap fault on first probe) / "uncomposed" — no LRU touch
+            out["residency"] = [
+                {"pair": p, "state": self.composed.residency(*p)
+                 or "uncomposed"}
+                for p in pairs
+            ]
         return out
 
     # -- execution -------------------------------------------------------------

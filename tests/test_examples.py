@@ -52,6 +52,14 @@ def test_serve_with_lineage_example():
     assert "federation stats (single-entry catalog)" in out
 
 
+def test_streaming_lineage_example():
+    out = _run_example("streaming_lineage.py")
+    assert "after 40 appended ops: extends=" in out
+    assert "spilled to disk" in out
+    assert "faulted back: rehydrations=" in out
+    assert "bounded: composed-relation residency stayed under" in out
+
+
 @pytest.mark.filterwarnings("ignore::DeprecationWarning")
 def test_federated_lineage_example():
     out = _run_example("federated_lineage.py", timeout=600)
