@@ -2,7 +2,8 @@ PY ?= python
 TIMEOUT ?= 900
 
 .PHONY: test test-fast test-sharded bench-query bench-quick \
-        bench-serving bench-serving-quick bench-stream bench-stream-quick ci
+        bench-serving bench-serving-quick bench-stream bench-stream-quick \
+        bench-impact bench-impact-quick ci
 
 # tier-1 verify (ROADMAP.md): the whole suite, stop at first failure
 test:
@@ -48,6 +49,15 @@ bench-stream:
 
 bench-stream-quick:
 	env PYTHONPATH=src $(PY) benchmarks/bench_stream.py --quick
+
+# impact analysis: erasure closure vs per-row loop, what-if replay vs full
+# re-run (>= 5x at n=100k), federated cells vs merged; merges the `impact`
+# section into BENCH_query.json
+bench-impact:
+	env PYTHONPATH=src $(PY) benchmarks/bench_impact.py
+
+bench-impact-quick:
+	env PYTHONPATH=src $(PY) benchmarks/bench_impact.py --quick
 
 # mirrors .github/workflows/ci.yml
 ci:

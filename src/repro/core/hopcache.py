@@ -960,6 +960,51 @@ class ComposedIndex:
         res = self.q1_forward(d1, back, d3)
         return res if batched else res[0]
 
+    # -- impact invalidation --------------------------------------------------
+    def stale_entries(self, datasets) -> List[Tuple[str, str, str]]:
+        """Composed entries (resident or spilled) whose ``src`` → ``dst``
+        DAG region intersects ``datasets``, as ``(src, dst, residency)``
+        triples — exactly the relations an erasure/rewrite of those
+        datasets' rows leaves stale.  A relation is stale when some
+        affected dataset lies ON a ``src`` → ``dst`` path (endpoints
+        included): the composed product sums over every such path, so a
+        mid-chain rewrite poisons it even when both endpoints survive.
+        Enumeration only — nothing is dropped, no LRU touch, no fault."""
+        self._sync()
+        affected = [d for d in set(datasets) if d in self.index.datasets]
+        if not affected:
+            return []
+        keys = [(k, "ram") for k in self._cache]
+        keys += [(k, "spilled") for k in self._spilled]
+        out = []
+        for (src, dst), residency in keys:
+            if any(self.index.path_exists(src, m)
+                   and self.index.path_exists(m, dst) for m in affected):
+                out.append((src, dst, residency))
+        return out
+
+    def invalidate_datasets(self, datasets) -> List[Tuple[str, str, str]]:
+        """Drop every :meth:`stale_entries` entry: resident entries leave
+        the LRU (their bytes released), on-disk payloads are DELETED from
+        the spill store.  Returns the dropped triples.  The append-only-DAG
+        keep-on-append policy is untouched — this is the escape hatch for
+        REWRITES (erasure, what-if rebuilds), where recorded history itself
+        changes and cached compositions over it must not survive."""
+        dropped = self.stale_entries(datasets)
+        for src, dst, _residency in dropped:
+            key = (src, dst)
+            entry = self._cache.pop(key, None)
+            if entry is not None:
+                self._bytes -= entry.nbytes()
+            self._spilled.pop(key, None)
+            # a resident entry may ALSO hold a stale disk copy (spilled
+            # once, faulted back): _store_meta remembers it — delete both
+            if key in self._store_meta:
+                del self._store_meta[key]
+                if self._spill_store is not None:
+                    self._spill_store.delete(("rel", self.index.name) + key)
+        return dropped
+
     # -- introspection --------------------------------------------------------
     def stats(self) -> Dict[str, int]:
         per_backend = {"csr": 0, "bitplane": 0, "structured": 0}

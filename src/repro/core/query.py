@@ -62,6 +62,8 @@ __all__ = [
     "backward_record_masks",
     "forward_record_masks_batch",
     "backward_record_masks_batch",
+    "record_masks_terms_batch",
+    "attr_propagate_terms_batch",
     "q1_forward",
     "q2_backward",
     "q3_forward_attr",
@@ -417,29 +419,50 @@ def _attr_propagate(
     return terms, hops
 
 
-def _attr_propagate_batch(
-    index: ProvenanceIndex, start: str, rows_batch, attrs_batch, direction: str,
+def _ops_from_entries(index: ProvenanceIndex, entries, direction: str):
+    """Ops reachable from ANY entry dataset, in traversal order.
+
+    Op registration order is topological, so sorting the union by ``op_id``
+    (descending for ``"bwd"``) reproduces the single-entry walk order
+    exactly — a one-entry seed walks the identical op sequence as
+    ``downstream_ops`` / ``reversed(upstream_ops)``.
+    """
+    by_id = {}
+    for ds in entries:
+        ops = (index.downstream_ops(ds) if direction == "fwd"
+               else index.upstream_ops(ds))
+        for op in ops:
+            by_id[op.op_id] = op
+    out = [by_id[i] for i in sorted(by_id)]
+    if direction == "bwd":
+        out.reverse()
+    return out
+
+
+def attr_propagate_terms_batch(
+    index: ProvenanceIndex, entry_terms, direction: str,
     collect_hops: bool = False,
 ):
-    """Batched term propagation: every term is ((B, n_rows) bool, (B, nw) u32).
+    """Term propagation seeded at ARBITRARY datasets (federated segments).
 
-    A term stays alive while ANY batch element is non-empty; per-element
-    emptiness zeroes that element's masks, which contributes nothing to the
-    final outer product — exactly the single-probe pruning, batched.
+    ``entry_terms`` maps dataset id -> list of ``((B, n_rows) bool,
+    (B, nw) uint32)`` already-packed terms (:func:`pack_bitplane` words).
+    The per-op semantics are identical to :func:`_attr_propagate_batch` —
+    a single-entry seed reproduces it term-for-term — but the walk covers
+    every op reachable from ANY entry, so a federation can hand one member
+    all of its boundary entries at once and read terms off every exit in
+    one pass (hop traces then match a merged index's single walk instead
+    of duplicating shared ops per entry/exit pair).
 
-    With ``collect_hops`` the return gains a per-probe :class:`Hop` trace
-    (``hops[b]``): a hop is recorded for probe b iff probe b's term survives
-    the op with non-empty row AND attr masks — matching the single-probe
-    :func:`_attr_propagate` trace exactly.
+    Returns ``(terms, B, hops)`` with ``collect_hops``, else ``(terms, B)``.
     """
-    ds0 = index.datasets[start]
-    rm0 = _as_mask_batch(rows_batch, ds0.n_rows)
-    B = rm0.shape[0]
-    am0 = _as_mask_batch(attrs_batch, ds0.n_cols) if is_probe_batch(attrs_batch) \
-        else np.broadcast_to(_as_mask(attrs_batch, ds0.n_cols), (B, ds0.n_cols))
     terms: Dict[str, List[Tuple[np.ndarray, np.ndarray]]] = {
-        start: [(rm0, pack_bitplane(am0))]
+        ds: list(ts) for ds, ts in entry_terms.items() if ts
     }
+    if not terms:
+        raise ValueError("attr_propagate_terms_batch needs at least one "
+                         "non-empty entry term list")
+    B = next(iter(terms.values()))[0][0].shape[0]
     hops: List[List[Hop]] = [[] for _ in range(B)]
 
     def _trace(op, src_id, dst_id, new_rm, new_aw):
@@ -449,12 +472,7 @@ def _attr_propagate_batch(
             hops[b].append(Hop(op.op_id, op.info.op_name, op.info.category.value,
                                src_id, dst_id, int(counts[b])))
 
-    ops = (
-        index.downstream_ops(start)
-        if direction == "fwd"
-        else list(reversed(index.upstream_ops(start)))
-    )
-    for op in ops:
+    for op in _ops_from_entries(index, list(terms), direction):
         out_ds = index.datasets[op.output_id]
         if direction == "fwd":
             for k, in_id in enumerate(op.input_ids):
@@ -485,6 +503,91 @@ def _attr_propagate_batch(
     if collect_hops:
         return terms, B, hops
     return terms, B
+
+
+def _attr_propagate_batch(
+    index: ProvenanceIndex, start: str, rows_batch, attrs_batch, direction: str,
+    collect_hops: bool = False,
+):
+    """Batched term propagation: every term is ((B, n_rows) bool, (B, nw) u32).
+
+    A term stays alive while ANY batch element is non-empty; per-element
+    emptiness zeroes that element's masks, which contributes nothing to the
+    final outer product — exactly the single-probe pruning, batched.
+
+    With ``collect_hops`` the return gains a per-probe :class:`Hop` trace
+    (``hops[b]``): a hop is recorded for probe b iff probe b's term survives
+    the op with non-empty row AND attr masks — matching the single-probe
+    :func:`_attr_propagate` trace exactly.
+    """
+    ds0 = index.datasets[start]
+    rm0 = _as_mask_batch(rows_batch, ds0.n_rows)
+    B = rm0.shape[0]
+    am0 = _as_mask_batch(attrs_batch, ds0.n_cols) if is_probe_batch(attrs_batch) \
+        else np.broadcast_to(_as_mask(attrs_batch, ds0.n_cols), (B, ds0.n_cols))
+    entry = {start: [(rm0, pack_bitplane(np.ascontiguousarray(am0)))]}
+    return attr_propagate_terms_batch(index, entry, direction,
+                                      collect_hops=collect_hops)
+
+
+def record_masks_terms_batch(
+    index: ProvenanceIndex, entry_masks, direction: str,
+    collect_hops: bool = False,
+):
+    """Record propagation seeded at ARBITRARY datasets (federated segments).
+
+    ``entry_masks`` maps dataset id -> ``(B, n_rows)`` bool probe stacks.
+    The multi-seed twin of :func:`forward_record_masks_batch` /
+    :func:`backward_record_masks_batch`: one pass over every op reachable
+    from any entry (registration order is topological), per-probe hop
+    traces identical to the single-entry walkers.  Returns
+    ``(masks, hops)`` with ``collect_hops``, else ``masks``.
+    """
+    masks: Dict[str, np.ndarray] = {
+        ds: np.asarray(m, dtype=bool) for ds, m in entry_masks.items()
+    }
+    if not masks:
+        raise ValueError("record_masks_terms_batch needs at least one entry")
+    B = next(iter(masks.values())).shape[0]
+    hops: List[List[Hop]] = [[] for _ in range(B)]
+    for op in _ops_from_entries(index, list(masks), direction):
+        if direction == "fwd":
+            out_mask = masks.get(op.output_id,
+                                 np.zeros((B, op.tensor.n_out), dtype=bool))
+            for k, in_id in enumerate(op.input_ids):
+                if in_id in masks and masks[in_id].any():
+                    contrib = op.tensor.forward_mask_batch(k, masks[in_id])
+                    if collect_hops:
+                        counts = contrib.sum(axis=1)
+                        for b in np.flatnonzero(counts):
+                            hops[b].append(
+                                Hop(op.op_id, op.info.op_name,
+                                    op.info.category.value, in_id,
+                                    op.output_id, int(counts[b]))
+                            )
+                    out_mask = out_mask | contrib
+            masks[op.output_id] = out_mask
+        else:
+            if op.output_id not in masks or not masks[op.output_id].any():
+                continue
+            for k, in_id in enumerate(op.input_ids):
+                contrib = op.tensor.backward_mask_batch(k, masks[op.output_id])
+                if collect_hops:
+                    counts = contrib.sum(axis=1)
+                    for b in np.flatnonzero(counts):
+                        hops[b].append(
+                            Hop(op.op_id, op.info.op_name,
+                                op.info.category.value, op.output_id, in_id,
+                                int(counts[b]))
+                        )
+                prev = masks.get(
+                    in_id,
+                    np.zeros((B, index.datasets[in_id].n_rows), dtype=bool),
+                )
+                masks[in_id] = prev | contrib
+    if collect_hops:
+        return masks, hops
+    return masks
 
 
 def _cells(

@@ -165,17 +165,22 @@ def recompute_rows(index: ProvenanceIndex, dataset: str, rows: Sequence[int]) ->
         cols = index.datasets[dataset].columns
         data = np.zeros((len(rows), n_attrs), np.float32)
         null = np.ones((len(rows), n_attrs), bool)
+        # right side fills where the left did not (shared key columns keep
+        # the left value on matched rows) — perm_l[a] is a scalar, so the
+        # per-attr right mask is either all right rows or right-only rows
+        right_only = has_r & ~has_l
         for a in range(n_attrs):
             if perm_l[a] >= 0:
                 data[has_l, a] = left.data[has_l, perm_l[a]]
                 null[has_l, a] = left.null[has_l, perm_l[a]]
             if perm_r[a] >= 0:
-                data[has_r & ~(has_l & (perm_l[a] >= 0)), a] = \
-                    right.data[has_r & ~(has_l & (perm_l[a] >= 0)), perm_r[a]]
-                null[has_r & ~(has_l & (perm_l[a] >= 0)), a] = \
-                    right.null[has_r & ~(has_l & (perm_l[a] >= 0)), perm_r[a]]
+                use_r = right_only if perm_l[a] >= 0 else has_r
+                data[use_r, a] = right.data[use_r, perm_r[a]]
+                null[use_r, a] = right.null[use_r, perm_r[a]]
+        vocab = {c: v for c, v in {**right.vocab, **left.vocab}.items()
+                 if c in set(cols)}
         return Table(columns=list(cols), data=data, null=null,
-                     index=rows.copy(), vocab={})
+                     index=rows.copy(), vocab=vocab)
 
     if cat is OpCategory.APPEND:
         n_l = info.n_in[0]
@@ -185,19 +190,23 @@ def recompute_rows(index: ProvenanceIndex, dataset: str, rows: Sequence[int]) ->
         perm_r = op.info.attr_maps[1].perm
         data = np.zeros((len(rows), len(out_cols)), np.float32)
         null = np.ones((len(rows), len(out_cols)), bool)
-        if is_l.any():
-            lt = fetch_rows(index, op.input_ids[0], rows[is_l])
-            for a in range(len(out_cols)):
-                if perm_l[a] >= 0:
-                    data[is_l, a] = lt.data[:, perm_l[a]]
-                    null[is_l, a] = lt.null[:, perm_l[a]]
+        vocab = {}
         if (~is_l).any():
             rt = fetch_rows(index, op.input_ids[1], rows[~is_l] - n_l)
+            vocab.update(rt.vocab)
             for a in range(len(out_cols)):
                 if perm_r[a] >= 0:
                     data[~is_l, a] = rt.data[:, perm_r[a]]
                     null[~is_l, a] = rt.null[:, perm_r[a]]
+        if is_l.any():
+            lt = fetch_rows(index, op.input_ids[0], rows[is_l])
+            vocab.update(lt.vocab)
+            for a in range(len(out_cols)):
+                if perm_l[a] >= 0:
+                    data[is_l, a] = lt.data[:, perm_l[a]]
+                    null[is_l, a] = lt.null[:, perm_l[a]]
+        vocab = {c: v for c, v in vocab.items() if c in set(out_cols)}
         return Table(columns=list(out_cols), data=data, null=null,
-                     index=rows.copy(), vocab={})
+                     index=rows.copy(), vocab=vocab)
 
     raise NotImplementedError(cat)

@@ -23,6 +23,13 @@ merging index ownership:
   splitting each plan at boundary datasets and stitching ``(B, n)`` mask
   stacks across link row alignments.
 
+The **impact** surface (:mod:`repro.provenance.impact`) turns the same
+closure machinery into deletion-propagation planning and what-if replay:
+:func:`erasure_plan` emits a topologically ordered :class:`RecomputePlan`
+(rebuild targets + stale hop-cache/cross-relation invalidations + cost
+estimates), :func:`whatif_replay` re-executes only the provenance-related
+sink rows under a source perturbation.
+
 The legacy Table-VII free functions (``repro.core.query.q1_forward`` …)
 are thin deprecation shims over this package.
 """
@@ -35,6 +42,15 @@ from repro.provenance.catalog import (
     ProvCatalog,
 )
 from repro.provenance.federation import FederatedSession
+from repro.provenance.impact import (
+    CacheInvalidation,
+    DatasetImpact,
+    RecomputePlan,
+    WhatIfResult,
+    apply_invalidations,
+    erasure_plan,
+    whatif_replay,
+)
 from repro.provenance.plan import AmbiguousProbeWarning, QueryPlan
 from repro.provenance.session import QuerySession
 from repro.provenance.sharded import (
@@ -55,6 +71,13 @@ __all__ = [
     "Link",
     "CapabilityError",
     "FederationError",
+    "RecomputePlan",
+    "DatasetImpact",
+    "CacheInvalidation",
+    "WhatIfResult",
+    "erasure_plan",
+    "apply_invalidations",
+    "whatif_replay",
     "ShardedProvenanceIndex",
     "ShardedComposedIndex",
     "ShardedTensor",

@@ -170,6 +170,44 @@ class BoundaryHandle:
         self._check_plan(plan)
         return self.__index.session().run_masks(plan)
 
+    def run_record_terms(self, entry_masks, direction, collect_hops=False):
+        """Multi-seed record propagation among the granted ancestors.
+
+        Entries must be ancestors, and the returned masks (and hop traces)
+        are FILTERED to the ancestor closure — a walk that escapes the
+        capability's footprint reveals nothing about the rest of the index.
+        """
+        for ds in entry_masks:
+            self._check_ref(ds)
+        out = self.__index.session().run_record_terms(
+            entry_masks, direction, collect_hops=collect_hops)
+        masks, hops = out if collect_hops else (out, None)
+        masks = {d: m for d, m in masks.items() if d in self._ancestors}
+        if not collect_hops:
+            return masks
+        hops = [[h for h in trace
+                 if h.src_dataset in self._ancestors
+                 and h.dst_dataset in self._ancestors]
+                for trace in hops]
+        return masks, hops
+
+    def run_attr_terms(self, entry_terms, direction, collect_hops=False):
+        """Multi-seed attr-term propagation among the granted ancestors
+        (same filtering contract as :meth:`run_record_terms`)."""
+        for ds in entry_terms:
+            self._check_ref(ds)
+        out = self.__index.session().run_attr_terms(
+            entry_terms, direction, collect_hops=collect_hops)
+        terms, B = out[0], out[1]
+        terms = {d: t for d, t in terms.items() if d in self._ancestors}
+        if not collect_hops:
+            return terms, B
+        hops = [[h for h in trace
+                 if h.src_dataset in self._ancestors
+                 and h.dst_dataset in self._ancestors]
+                for trace in out[2]]
+        return terms, B, hops
+
     def relation_csr(self, src: str, dst: str):
         """The composed ``src``→``dst`` relation (scipy CSR) — the probe
         capability the export grants, in relation form; ancestors only."""
@@ -256,6 +294,14 @@ class _IndexMember:
 
     def run_masks(self, plan) -> np.ndarray:
         return self._index.session().run_masks(plan)
+
+    def run_record_terms(self, entry_masks, direction, collect_hops=False):
+        return self._index.session().run_record_terms(
+            entry_masks, direction, collect_hops=collect_hops)
+
+    def run_attr_terms(self, entry_terms, direction, collect_hops=False):
+        return self._index.session().run_attr_terms(
+            entry_terms, direction, collect_hops=collect_hops)
 
     def relation_csr(self, src: str, dst: str):
         return self._index.composed().relation_csr(src, dst)

@@ -52,10 +52,16 @@ probe demand, with the store's byte budget as a retention guard.  Passing
 an explicit ``cross_min_demand=`` integer keeps the legacy fixed demand
 floor for that session instead.
 
-Plan-kind support: ``record`` (fwd/bwd) and the co-queries (explicit
-``via`` for Q10) route across members; ``cells`` / ``how`` plans are
-single-member only (attribute bitplanes and hop traces live on one index's
-walk — a cross-index spelling raises :class:`FederationError`);
+Plan-kind support: every batched kind routes across members.  ``record``
+(fwd/bwd) and the co-queries (explicit ``via`` for Q10) split into
+per-member record segments as above.  ``cells`` / ``how`` plans — whose
+attribute bitplanes and hop traces live on each index's per-op walk — run
+as per-member TERM walks instead (:meth:`QuerySession.run_attr_terms` /
+``run_record_terms``: every boundary entry of a member seeds ONE pass, so
+hop traces match a merged index's single walk): row masks cross each link
+through its row alignment and attribute masks re-align BY COLUMN NAME
+between the two boundary datasets (columns absent on the far side drop).
+Each crossing adds a synthetic ``category="link"`` hop to how-traces.
 ``transformations`` is single-ref and delegates.
 """
 from __future__ import annotations
@@ -68,6 +74,8 @@ import numpy as np
 
 from repro.core.compose import HAVE_SCIPY
 from repro.core.costmodel import RelStats, cross_route_choose
+from repro.core.query import Hop, _cells_batch
+from repro.core.provtensor import pack_bitplane, unpack_bitplane
 from repro.provenance.catalog import (
     CapabilityError,
     FederationError,
@@ -642,18 +650,186 @@ class FederatedSession:
 
     # -- executors -------------------------------------------------------------
     def _check_cross_supported(self, plan: QueryPlan) -> None:
-        if plan.kind == "cells" or plan.how:
-            raise FederationError(
-                f"cross-index {plan.kind}{'/how' if plan.how else ''} plans "
-                "are not supported: attribute bitplanes and hop traces live "
-                "on one index's walk — query up to the boundary, stitch, "
-                "and continue, or record both pipelines into one index"
-            )
         if plan.kind == "co_contributory" and plan.via is None:
             raise FederationError(
                 "cross-index co_contributory needs an explicit via= dataset "
                 "(the per-probe default requires one index's reach map)"
             )
+
+    # -- cross-member attr / how walks -----------------------------------------
+    def _attr_cross_perm(self, link: Link, reverse: bool) -> np.ndarray:
+        """Column alignment across a boundary link, BY COLUMN NAME.
+
+        ``perm[j]`` is the near-side column behind far-side column ``j``
+        (``-1`` = the attribute has no counterpart and drops at the
+        boundary).  Near/far follow traversal direction: forward crosses
+        up→down, backward down→up."""
+        up_name, up_ds = split_ref(link.up)
+        down_name, down_ds = split_ref(link.down)
+        up_cols = list(self.catalog.members[up_name].datasets[up_ds].columns)
+        down_cols = list(
+            self.catalog.members[down_name].datasets[down_ds].columns)
+        near, far = (down_cols, up_cols) if reverse else (up_cols, down_cols)
+        pos = {c: i for i, c in enumerate(near)}
+        return np.asarray([pos.get(c, -1) for c in far], dtype=np.int64)
+
+    def _route_or_none(self, plan: QueryPlan, mode: str):
+        """(order, links, out_links) for the plan's source→target route, or
+        None when no link path exists (the empty answer)."""
+        m0 = split_ref(plan.source)[0]
+        m1 = split_ref(plan.target)[0]
+        reverse = mode == "bwd"
+        route = self._route(m0, m1, reverse=reverse)
+        if route is None:
+            return None
+        order, links = route
+        out_links: Dict[str, List[Link]] = {}
+        for link in links:
+            out_links.setdefault(
+                split_ref(link.down if reverse else link.up)[0], []
+            ).append(link)
+        return order, links, out_links
+
+    def _link_rows(self, link: Link) -> Tuple[int, int]:
+        up_name, up_ds = split_ref(link.up)
+        down_name, down_ds = split_ref(link.down)
+        return (self.catalog.members[up_name].datasets[up_ds].n_rows,
+                self.catalog.members[down_name].datasets[down_ds].n_rows)
+
+    def _execute_record_how(self, plan: QueryPlan) -> List:
+        """Cross-member record+how: per-member multi-seed record walks
+        (ONE pass per member over all its boundary entries, so shared ops
+        are traced once — exactly the merged walk's trace), stitched across
+        links.  Each crossing adds a synthetic ``category="link"`` hop."""
+        from repro.core.query import Hop
+
+        B = plan.n_probes
+        mode = "fwd" if plan.direction == "fwd" else "bwd"
+        reverse = mode == "bwd"
+        hops: List[List] = [[] for _ in range(B)]
+        out = np.zeros((B, self._n_rows(plan.target)), dtype=bool)
+        routed = self._route_or_none(plan, mode)
+        if routed is None:
+            return [(np.zeros(0, dtype=np.int64), hops[b]) for b in range(B)]
+        order, _, out_links = routed
+        m0, d0 = split_ref(plan.source)
+        m1, d1 = split_ref(plan.target)
+        entries: Dict[str, Dict[str, np.ndarray]] = {
+            m0: {d0: plan.rows.astype(bool)}}
+        for m in order:
+            ent = entries.pop(m, None)
+            if not ent:
+                continue
+            member = self.catalog.members[m]
+            self.counters["segments"] += len(ent)
+            masks, mhops = member.run_record_terms(ent, mode,
+                                                   collect_hops=True)
+            for b in range(B):
+                hops[b].extend(mhops[b])
+            if m == m1 and d1 in masks:
+                out = out | masks[d1]
+            for link in out_links.get(m, []):
+                near_ref, far_ref = (
+                    (link.down, link.up) if reverse else (link.up, link.down))
+                near_ds = split_ref(near_ref)[1]
+                far_m, far_ds = split_ref(far_ref)
+                val = masks.get(near_ds)
+                if val is None or not val.any():
+                    continue
+                self.counters["links_crossed"] += 1
+                n_up, n_down = self._link_rows(link)
+                stitched = (link.stitch_up(val, n_up) if reverse
+                            else link.stitch_down(val, n_down))
+                counts = stitched.sum(axis=1)
+                for b in np.flatnonzero(counts):
+                    hops[b].append(Hop(-1, "boundary", "link", near_ref,
+                                       far_ref, int(counts[b])))
+                dest = entries.setdefault(far_m, {})
+                prev = dest.get(far_ds)
+                dest[far_ds] = stitched if prev is None else prev | stitched
+        return [(np.flatnonzero(out[b]), hops[b]) for b in range(B)]
+
+    def _execute_cells(self, plan: QueryPlan) -> List:
+        """Cross-member cells / cells+how: per-member attr-TERM walks
+        joined by link stitches.  Row masks cross through the link's row
+        alignment; packed attribute words unpack, re-align by column name
+        (:meth:`_attr_cross_perm`), and repack.  The final outer product
+        (:func:`repro.core.query._cells_batch`) runs once at the target."""
+        from repro.core import query as Q
+        from repro.core.provtensor import pack_bitplane, unpack_bitplane
+
+        B = plan.n_probes
+        mode = "fwd" if plan.direction == "fwd" else "bwd"
+        reverse = mode == "bwd"
+        tgt = self.catalog.datasets[plan.target]
+        hops: List[List] = [[] for _ in range(B)]
+        target_terms: List = []
+        routed = self._route_or_none(plan, mode)
+        if routed is not None:
+            order, _, out_links = routed
+            m0, d0 = split_ref(plan.source)
+            m1, d1 = split_ref(plan.target)
+            seed = (plan.rows.astype(bool),
+                    pack_bitplane(np.ascontiguousarray(
+                        plan.attrs.astype(bool))))
+            entries: Dict[str, Dict[str, List]] = {m0: {d0: [seed]}}
+            for m in order:
+                ent = entries.pop(m, None)
+                if not ent:
+                    continue
+                member = self.catalog.members[m]
+                self.counters["segments"] += len(ent)
+                if plan.how:
+                    terms, _, mhops = member.run_attr_terms(
+                        ent, mode, collect_hops=True)
+                    for b in range(B):
+                        hops[b].extend(mhops[b])
+                else:
+                    terms, _ = member.run_attr_terms(ent, mode)
+                if m == m1:
+                    target_terms = terms.get(d1, [])
+                for link in out_links.get(m, []):
+                    near_ref, far_ref = (
+                        (link.down, link.up) if reverse
+                        else (link.up, link.down))
+                    near_ds = split_ref(near_ref)[1]
+                    far_m, far_ds = split_ref(far_ref)
+                    near_terms = terms.get(near_ds, [])
+                    if not near_terms:
+                        continue
+                    self.counters["links_crossed"] += 1
+                    n_up, n_down = self._link_rows(link)
+                    n_far = n_up if reverse else n_down
+                    n_near_cols = self.catalog.datasets[near_ref].n_cols
+                    n_far_cols = self.catalog.datasets[far_ref].n_cols
+                    perm = self._attr_cross_perm(link, reverse)
+                    sel = perm >= 0
+                    dest = entries.setdefault(far_m, {}).setdefault(
+                        far_ds, [])
+                    crossed = np.zeros((B, n_far), dtype=bool)
+                    for rm, aw in near_terms:
+                        new_rm = (link.stitch_up(rm, n_up) if reverse
+                                  else link.stitch_down(rm, n_down))
+                        am = unpack_bitplane(aw, n_near_cols)
+                        new_am = np.zeros((B, n_far_cols), dtype=bool)
+                        if sel.any():
+                            new_am[:, sel] = am[:, perm[sel]]
+                        if new_rm.any() and new_am.any():
+                            new_aw = pack_bitplane(new_am)
+                            dest.append((new_rm, new_aw))
+                            live = (new_rm.any(axis=1)
+                                    & new_am.any(axis=1))
+                            crossed |= new_rm & live[:, None]
+                    if plan.how:
+                        counts = crossed.sum(axis=1)
+                        for b in np.flatnonzero(counts):
+                            hops[b].append(Hop(-1, "boundary", "link",
+                                               near_ref, far_ref,
+                                               int(counts[b])))
+        cells = _cells_batch(target_terms, B, tgt.n_rows, tgt.n_cols)
+        if plan.how:
+            return list(zip(cells, hops))
+        return cells
 
     def _execute(self, plan: QueryPlan) -> List[np.ndarray]:
         """One payload per probe for a CROSS-member plan."""
@@ -662,6 +838,10 @@ class FederatedSession:
         B = plan.n_probes
         if B == 0:
             return []
+        if plan.kind == "cells":
+            return self._execute_cells(plan)
+        if plan.kind == "record" and plan.how:
+            return self._execute_record_how(plan)
         if plan.kind == "record":
             out = self._propagate(plan.source, plan.target, plan.rows,
                                   mode="fwd" if plan.direction == "fwd"
@@ -730,7 +910,7 @@ class FederatedSession:
         out["federated"] = True
         out["strategy"] = "federated"
         legs: List[Tuple[str, str, str]] = []
-        if plan.kind == "record":
+        if plan.kind in ("record", "cells"):
             legs = [(plan.source, plan.target,
                      "fwd" if plan.direction == "fwd" else "bwd")]
         elif plan.kind == "co_contributory":
@@ -750,6 +930,16 @@ class FederatedSession:
             segs, crossed = dry
             links.extend(f"{l.up} => {l.down}" for l in crossed)
             for seg in segs:
+                if plan.kind == "cells" or plan.how:
+                    # attr bitplanes / hop traces live on the per-op walk:
+                    # every member segment of such a plan walks
+                    segments.append({
+                        "index": seg.member,
+                        "segment": f"{seg.source}->{seg.target}",
+                        "direction": seg.direction,
+                        "strategy": "walk",
+                    })
+                    continue
                 member = self.catalog.members[seg.member]
                 n = member.datasets[seg.source].n_rows
                 probe = np.zeros((B, n), dtype=bool)

@@ -1,0 +1,525 @@
+"""Impact analysis over recorded provenance: erasure planning and what-if
+replay on ONE shared closure engine.
+
+Three workloads, all driven by the same batched forward record walk
+(:func:`repro.core.query.record_masks_terms_batch` per index, stitched
+across :class:`~repro.provenance.catalog.Link` alignments per catalog):
+
+* **Deletion propagation / GDPR erasure** — :func:`erasure_plan`: given
+  rows of a source dataset (possibly an upstream member of a
+  :class:`~repro.provenance.catalog.ProvCatalog`), compute the full
+  downstream closure and emit a minimal, topologically ordered
+  :class:`RecomputePlan`: which datasets the erasure touches and which
+  must be rebuilt, which composed hop-cache entries / spill payloads /
+  stitched cross-relations go stale, and an estimated rebuild cost from
+  :mod:`repro.core.costmodel`.  The plan is a VALUE — nothing is dropped
+  until :func:`apply_invalidations` executes its invalidation list.
+* **What-if replay** — :func:`whatif_replay`: perturb source rows and
+  re-execute ONLY the provenance-related downstream rows through
+  :func:`repro.core.recompute.recompute_rows`, returning exact
+  before/after values per affected sink row.  Contextual ops replay with
+  their FITTED statistics (the §III-E recompute contract), so the deltas
+  equal a full pipeline re-run exactly whenever the perturbation leaves
+  fitted statistics unchanged — and rows outside the closure never move.
+* **Federated attribute lineage** rides the same multi-seed walkers
+  through :class:`~repro.provenance.federation.FederatedSession`
+  (cross-index ``cells``/``how`` plans stitch attr-maps across links).
+
+Every closure runs as ONE batched walk per member — never a per-row loop —
+so erasure planning costs the same as a single lineage query.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import query as Q
+from repro.core.costmodel import relation_probe_cost
+from repro.core.pipeline import ProvenanceIndex
+from repro.core.recompute import fetch_rows
+from repro.dataprep.table import Table
+from repro.provenance.catalog import (
+    FederationError,
+    ProvCatalog,
+    qualify,
+    split_ref,
+)
+
+__all__ = [
+    "DatasetImpact",
+    "CacheInvalidation",
+    "RecomputePlan",
+    "WhatIfResult",
+    "erasure_plan",
+    "apply_invalidations",
+    "whatif_replay",
+]
+
+
+# ---------------------------------------------------------------------------
+# Plan values
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class DatasetImpact:
+    """One dataset the erasure closure reaches."""
+
+    ref: str                  # qualified "member/dataset" (bare over an index)
+    rows: np.ndarray          # affected row ids, sorted ascending
+    n_rows: int               # dataset row count
+    materialized: bool        # §III-E policy keeps a stored table for it
+    is_sink: bool
+    est_ns: float = 0.0       # estimated provenance-guided rebuild cost
+
+    @property
+    def n_affected(self) -> int:
+        return int(len(self.rows))
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheInvalidation:
+    """One cached derived artifact the erasure leaves stale.
+
+    ``kind="composed"`` names a hop-cache entry of member/index ``scope``
+    (``residency`` ``"ram"`` or ``"spilled"`` — spilled payloads are
+    deleted from the on-disk store on apply); ``kind="cross"`` names a
+    catalog-owned stitched cross-relation (``residency`` is the route
+    mode, ``"fwd"``/``"bwd"``)."""
+
+    scope: str                # member/index name (catalog name for "cross")
+    kind: str                 # "composed" | "cross"
+    src: str
+    dst: str
+    residency: str
+
+
+@dataclasses.dataclass(frozen=True)
+class RecomputePlan:
+    """Minimal, topologically ordered erasure/rewrite plan.
+
+    ``impacts`` lists every dataset the closure reaches, member-topological
+    then registration (= dataflow) order, so executing deletions/rebuilds
+    front-to-back never visits a dataset before its affected ancestors.
+    ``invalidations`` lists every cached composed relation the rewrite
+    poisons — nothing is dropped until :func:`apply_invalidations`."""
+
+    sources: Tuple[Tuple[str, np.ndarray], ...]   # (ref, erased rows)
+    impacts: Tuple[DatasetImpact, ...]
+    invalidations: Tuple[CacheInvalidation, ...]
+    est_total_ns: float
+
+    @property
+    def affected(self) -> Tuple[str, ...]:
+        return tuple(i.ref for i in self.impacts)
+
+    @property
+    def rebuild(self) -> Tuple[str, ...]:
+        """Materialized datasets that must be rebuilt, in execution order.
+        The erasure sources themselves are excluded — their rows are
+        deleted, not recomputed."""
+        src_refs = {ref for ref, _ in self.sources}
+        return tuple(i.ref for i in self.impacts
+                     if i.materialized and i.ref not in src_refs)
+
+    def impact(self, ref: str) -> Optional[DatasetImpact]:
+        for i in self.impacts:
+            if i.ref == ref:
+                return i
+        return None
+
+    def describe(self) -> str:
+        lines = ["RecomputePlan"]
+        for ref, rows in self.sources:
+            lines.append(f"  erase {ref}: {len(rows)} rows")
+        for i in self.impacts:
+            tag = " [rebuild]" if i.materialized and i.ref not in {
+                r for r, _ in self.sources} else ""
+            lines.append(f"  -> {i.ref}: {i.n_affected}/{i.n_rows} rows{tag}")
+        for inv in self.invalidations:
+            lines.append(f"  drop {inv.kind} {inv.scope}: "
+                         f"{inv.src}->{inv.dst} ({inv.residency})")
+        lines.append(f"  est rebuild cost ~{self.est_total_ns / 1e6:.2f} ms")
+        return "\n".join(lines)
+
+
+@dataclasses.dataclass(frozen=True)
+class WhatIfResult:
+    """Exact before/after values of the sink rows a perturbation reaches."""
+
+    source: str
+    sink: str
+    source_rows: np.ndarray   # perturbed source rows (sorted, unique)
+    sink_rows: np.ndarray     # provenance-related sink rows (sorted)
+    before: Table             # sink_rows under the recorded run, aligned 1:1
+    after: Table              # sink_rows under the perturbed replay
+
+    @property
+    def changed(self) -> np.ndarray:
+        """(len(sink_rows),) bool — rows whose value or nullity moved."""
+        d = (self.before.data != self.after.data) & ~(
+            np.isnan(self.before.data) & np.isnan(self.after.data))
+        return (d | (self.before.null != self.after.null)).any(axis=1)
+
+    def row_deltas(self) -> List[Dict[str, Tuple[float, float]]]:
+        """Per affected sink row, ``{column: (before, after)}`` for exactly
+        the cells that changed (empty dict = row reached but unmoved)."""
+        d = (self.before.data != self.after.data) & ~(
+            np.isnan(self.before.data) & np.isnan(self.after.data))
+        d |= self.before.null != self.after.null
+        out: List[Dict[str, Tuple[float, float]]] = []
+        for i in range(len(self.sink_rows)):
+            out.append({
+                self.before.columns[j]: (float(self.before.data[i, j]),
+                                         float(self.after.data[i, j]))
+                for j in np.flatnonzero(d[i])
+            })
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Closure engine
+# ---------------------------------------------------------------------------
+def _as_rows(rows) -> np.ndarray:
+    arr = np.unique(np.asarray(list(rows) if not isinstance(
+        rows, np.ndarray) else rows, dtype=np.int64))
+    return arr
+
+
+def _seed_mask(rows: np.ndarray, n: int) -> np.ndarray:
+    if rows.size and (rows.min() < 0 or rows.max() >= n):
+        raise IndexError(f"rows out of range for dataset of {n} rows")
+    mask = np.zeros((1, n), dtype=bool)
+    mask[0, rows] = True
+    return mask
+
+
+def _closure_index(index: ProvenanceIndex, source: str, rows: np.ndarray
+                   ) -> "OrderedDict[str, np.ndarray]":
+    """Downstream closure within one index: dataset -> affected row ids,
+    in registration (= topological) order.  ONE batched walk."""
+    masks = Q.record_masks_terms_batch(
+        index, {source: _seed_mask(rows, index.datasets[source].n_rows)},
+        "fwd")
+    out: "OrderedDict[str, np.ndarray]" = OrderedDict()
+    for ds in index.datasets:
+        m = masks.get(ds)
+        if m is not None and m.any():
+            out[ds] = np.flatnonzero(m[0])
+    return out
+
+
+def _member_topo(catalog: ProvCatalog) -> List[str]:
+    """All members in link-topological order (Kahn over the link graph)."""
+    indeg = {name: 0 for name in catalog.members}
+    adj: Dict[str, List] = {}
+    for link in catalog.links:
+        up = split_ref(link.up)[0]
+        adj.setdefault(up, []).append(link)
+        indeg[split_ref(link.down)[0]] += 1
+    order: List[str] = []
+    ready = sorted(m for m, d in indeg.items() if d == 0)
+    while ready:
+        m = ready.pop(0)
+        order.append(m)
+        for link in adj.get(m, []):
+            down = split_ref(link.down)[0]
+            indeg[down] -= 1
+            if indeg[down] == 0:
+                ready.append(down)
+    if len(order) != len(catalog.members):
+        raise FederationError(
+            "link graph has a cycle; impact closure needs an acyclic "
+            "member graph")
+    return order
+
+
+def _closure_catalog(catalog: ProvCatalog, sources: Dict[str, np.ndarray]):
+    """Downstream closure across the catalog.
+
+    Returns ``(affected, member_seeds)``: affected maps qualified ref ->
+    row ids in member-topological then per-member registration order;
+    member_seeds maps member name -> {entry dataset: seed row count} (the
+    cost model's probe anchors).  One batched multi-seed walk per member —
+    a member reached through several links is walked ONCE, seeded with
+    every stitched entry at the same time."""
+    entries: Dict[str, Dict[str, np.ndarray]] = {}
+    for ref, rows in sources.items():
+        member_name, ds = split_ref(ref)
+        if member_name not in catalog.members:
+            raise FederationError(
+                f"unknown index {member_name!r} in ref {ref!r} "
+                f"(registered: {sorted(catalog.members)})")
+        n = catalog.datasets[ref].n_rows
+        ent = entries.setdefault(member_name, {})
+        mask = _seed_mask(rows, n)
+        ent[ds] = mask if ds not in ent else ent[ds] | mask
+    out_links: Dict[str, List] = {}
+    for link in catalog.links:
+        out_links.setdefault(split_ref(link.up)[0], []).append(link)
+
+    affected: "OrderedDict[str, np.ndarray]" = OrderedDict()
+    member_seeds: Dict[str, Dict[str, int]] = {}
+    for name in _member_topo(catalog):
+        ent = {ds: m for ds, m in entries.get(name, {}).items() if m.any()}
+        if not ent:
+            continue
+        member = catalog.members[name]
+        member_seeds[name] = {ds: int(m.sum()) for ds, m in ent.items()}
+        masks = member.run_record_terms(ent, "fwd")
+        for ds in member.datasets:
+            m = masks.get(ds)
+            if m is not None and m.any():
+                affected[qualify(name, ds)] = np.flatnonzero(m[0])
+        for link in out_links.get(name, []):
+            up_ds = split_ref(link.up)[1]
+            m = masks.get(up_ds)
+            if m is None or not m.any():
+                continue
+            down_name, down_ds = split_ref(link.down)
+            stitched = link.stitch_down(
+                m, catalog.datasets[link.down].n_rows)
+            if stitched.any():
+                d_ent = entries.setdefault(down_name, {})
+                d_ent[down_ds] = stitched if down_ds not in d_ent \
+                    else d_ent[down_ds] | stitched
+    return affected, member_seeds
+
+
+# ---------------------------------------------------------------------------
+# Cache-invalidation enumeration
+# ---------------------------------------------------------------------------
+def _composed_invalidations(index: ProvenanceIndex, datasets, scope: str,
+                            prefix: str = "") -> List[CacheInvalidation]:
+    """Stale hop-cache entries of one index — enumeration only (the cache
+    is read, never created: an index that was never probed has nothing to
+    invalidate)."""
+    composed = index._composed
+    if composed is None:
+        return []
+    return [
+        CacheInvalidation(scope, "composed", prefix + src, prefix + dst,
+                          residency)
+        for src, dst, residency in composed.stale_entries(datasets)
+    ]
+
+
+def _cross_invalidations(catalog: ProvCatalog,
+                         affected_members) -> List[CacheInvalidation]:
+    """Stale catalog-owned stitched cross-relations: an entry is stale
+    when its endpoints OR any link it stitched through touch an affected
+    member (a mid-route rewrite poisons the composed product even when
+    both endpoints survive)."""
+    store = getattr(catalog, "_cross_store", None)
+    if store is None:
+        return []
+    out = []
+    for (start, end, mode), (_rel, signature) in store.entries.items():
+        touched = {split_ref(start)[0], split_ref(end)[0]}
+        for up, down in signature:
+            touched.add(split_ref(up)[0])
+            touched.add(split_ref(down)[0])
+        if touched & affected_members:
+            out.append(CacheInvalidation(catalog.name, "cross", start, end,
+                                         mode))
+    return out
+
+
+def apply_invalidations(target, plan: RecomputePlan) -> int:
+    """Execute a plan's invalidation list: drop stale hop-cache entries
+    (deleting spilled payloads) and stale stitched cross-relations.
+    Returns how many artifacts were dropped.  Idempotent — re-applying a
+    plan whose entries are already gone drops nothing.  BoundaryHandle
+    members are read-only capabilities: their owners' caches are never
+    touched (the plan carries no invalidations for them)."""
+    dropped = 0
+    by_scope: Dict[str, set] = {}
+    cross = False
+    for inv in plan.invalidations:
+        if inv.kind == "cross":
+            cross = True
+        else:
+            by_scope.setdefault(inv.scope, set())
+    if isinstance(target, ProvCatalog):
+        for name in by_scope:
+            member = target.members.get(name)
+            index = getattr(member, "_index", None)
+            if index is None or index._composed is None:
+                continue
+            affected = [split_ref(i.ref)[1] for i in plan.impacts
+                        if split_ref(i.ref)[0] == name]
+            dropped += len(index._composed.invalidate_datasets(affected))
+        if cross:
+            store = getattr(target, "_cross_store", None)
+            if store is not None:
+                for inv in plan.invalidations:
+                    if inv.kind == "cross" and (
+                            inv.src, inv.dst, inv.residency) in store.entries:
+                        store.drop((inv.src, inv.dst, inv.residency))
+                        dropped += 1
+    else:
+        if target._composed is not None and by_scope:
+            dropped += len(target._composed.invalidate_datasets(
+                [i.ref for i in plan.impacts]))
+    return dropped
+
+
+# ---------------------------------------------------------------------------
+# Erasure planning
+# ---------------------------------------------------------------------------
+def _estimate(member, seeds: Dict[str, int], ds: str,
+              ) -> float:
+    """Estimated cost of a provenance-guided rebuild of ``ds``'s affected
+    rows from the nearest seed, via the member's cost model (compose the
+    seed→ds relation once, probe it with the seed rows)."""
+    for seed, n_rows in seeds.items():
+        if seed == ds or not member.path_exists(seed, ds):
+            continue
+        try:
+            rel, compose_ns = member.relation_stats(seed, ds)
+        except Exception:
+            return 0.0          # capability-filtered member: owner's concern
+        if rel is not None:
+            return float(compose_ns) + relation_probe_cost(rel, 1,
+                                                           float(n_rows))
+    return 0.0
+
+
+def erasure_plan(target, source, rows) -> RecomputePlan:
+    """Deletion-propagation plan for erasing ``rows`` of ``source``.
+
+    ``target`` is a :class:`ProvenanceIndex` (``source`` a dataset id) or a
+    :class:`ProvCatalog` (``source`` a qualified ``"member/dataset"`` ref —
+    the closure crosses boundary links downstream).  The closure runs as
+    one batched forward walk per index, so planning costs the same as a
+    single lineage query regardless of how many rows are erased."""
+    rows = _as_rows(rows)
+    if isinstance(target, ProvCatalog):
+        affected, member_seeds = _closure_catalog(target, {source: rows})
+        impacts = []
+        total = 0.0
+        src_refs = {source}
+        for ref, rws in affected.items():
+            name, ds = split_ref(ref)
+            rec = target.datasets[ref]
+            est = 0.0
+            if rec.materialized and ref not in src_refs:
+                est = _estimate(target.members[name],
+                                member_seeds.get(name, {}), ds)
+            total += est
+            impacts.append(DatasetImpact(
+                ref=ref, rows=rws, n_rows=rec.n_rows,
+                materialized=bool(rec.materialized),
+                is_sink=bool(getattr(rec, "is_sink", False)), est_ns=est))
+        affected_members = {split_ref(r)[0] for r in affected}
+        invalidations: List[CacheInvalidation] = []
+        for name in affected_members:
+            index = getattr(target.members[name], "_index", None)
+            if index is not None:
+                local = [split_ref(r)[1] for r in affected
+                         if split_ref(r)[0] == name]
+                invalidations.extend(
+                    _composed_invalidations(index, local, name))
+        invalidations.extend(_cross_invalidations(target, affected_members))
+        return RecomputePlan(
+            sources=((source, rows),), impacts=tuple(impacts),
+            invalidations=tuple(invalidations), est_total_ns=total)
+
+    index: ProvenanceIndex = target
+    if source not in index.datasets:
+        raise KeyError(source)
+    affected = _closure_index(index, source, rows)
+    seeds = {source: int(len(rows))}
+    impacts = []
+    total = 0.0
+    for ds, rws in affected.items():
+        rec = index.datasets[ds]
+        est = 0.0
+        if rec.materialized and ds != source:
+            session = index.session()
+            rel, compose_ns = session.costmodel.composed_estimate(source, ds)
+            if rel is not None:
+                est = float(compose_ns) + relation_probe_cost(
+                    rel, 1, float(len(rows)))
+        total += est
+        impacts.append(DatasetImpact(
+            ref=ds, rows=rws, n_rows=rec.n_rows,
+            materialized=rec.materialized, is_sink=rec.is_sink, est_ns=est))
+    invalidations = tuple(_composed_invalidations(
+        index, list(affected), index.name))
+    return RecomputePlan(
+        sources=((source, rows),), impacts=tuple(impacts),
+        invalidations=invalidations, est_total_ns=total)
+
+
+# ---------------------------------------------------------------------------
+# What-if replay
+# ---------------------------------------------------------------------------
+def whatif_replay(target, source, rows, patch: Dict[str, Sequence],
+                  sink: str) -> WhatIfResult:
+    """Perturb ``rows`` of ``source`` (``patch`` maps column -> replacement
+    values aligned with ``rows``) and replay ONLY the provenance-related
+    rows of ``sink``, returning exact before/after values.
+
+    The replay temporarily installs the patched source table and demotes
+    every materialized dataset inside the closure, so
+    :func:`~repro.core.recompute.recompute_rows` re-derives exactly the
+    affected rows from the perturbed values; everything is restored on
+    exit, recorded provenance untouched.  Contextual ops re-apply their
+    FITTED statistics (the §III-E recompute contract): the result equals a
+    full pipeline re-run whenever the perturbation leaves fitted
+    statistics unchanged.
+
+    Over a :class:`ProvCatalog`, ``source`` and ``sink`` must be qualified
+    refs inside the SAME full-access member — value recomputation never
+    leaves an index."""
+    if isinstance(target, ProvCatalog):
+        src_member, src_ds = split_ref(source)
+        sink_member, sink_ds = split_ref(sink)
+        if src_member != sink_member:
+            raise FederationError(
+                "what-if replay recomputes values, which never leave a "
+                f"member: source is in {src_member!r}, sink in "
+                f"{sink_member!r}")
+        index = getattr(target.members[src_member], "_index", None)
+        if index is None:
+            raise FederationError(
+                f"member {src_member!r} is a read-only boundary capability; "
+                "what-if replay needs the full index")
+        res = whatif_replay(index, src_ds, rows, patch, sink_ds)
+        return dataclasses.replace(res, source=source, sink=sink)
+
+    index = target
+    rows = _as_rows(rows)
+    rec = index.datasets[source]
+    if not rec.materialized:
+        raise ValueError(f"source {source!r} is not materialized")
+    if sink not in index.datasets:
+        raise KeyError(sink)
+
+    closure = _closure_index(index, source, rows)
+    sink_rows = closure.get(sink, np.empty(0, dtype=np.int64))
+    before = fetch_rows(index, sink, sink_rows)
+
+    patched = rec.table.copy()
+    for col, vals in patch.items():
+        j = patched.cid(col)
+        vals = np.asarray(vals, dtype=np.float32)
+        patched.data[rows, j] = vals
+        patched.null[rows, j] = False
+
+    demote = [ds for ds in closure
+              if ds != source and index.datasets[ds].materialized]
+    saved = [(rec, rec.table)]
+    saved += [(index.datasets[d], index.datasets[d].table) for d in demote]
+    rec.table = patched
+    for d in demote:
+        index.datasets[d].table = None
+    try:
+        after = fetch_rows(index, sink, sink_rows)
+    finally:
+        for r, t in saved:
+            r.table = t
+    return WhatIfResult(source=source, sink=sink, source_rows=rows,
+                        sink_rows=sink_rows, before=before, after=after)

@@ -269,6 +269,42 @@ class QuerySession:
         self.counters[strategy] += 1
         return self._record_masks(plan, strategy)
 
+    def run_record_terms(self, entry_masks: Dict[str, np.ndarray],
+                         direction: str, collect_hops: bool = False):
+        """Record propagation from MULTIPLE seed datasets in one pass.
+
+        The federation's how-provenance segment hook: ``entry_masks`` maps
+        dataset id -> ``(B, n_rows)`` bool probe stacks, and the return is
+        the full reachable ``{dataset: (B, n) bool}`` dict (plus per-probe
+        :class:`~repro.core.query.Hop` traces with ``collect_hops``).
+        Seeding every boundary entry at once keeps the hop trace identical
+        to a merged index's single walk — per entry/exit passes would
+        re-record shared ops.  Always walks (hop traces live on the
+        per-op pass).
+        """
+        self.counters["plans"] += 1
+        self.counters["walk"] += 1
+        return Q.record_masks_terms_batch(self.index, entry_masks, direction,
+                                          collect_hops=collect_hops)
+
+    def run_attr_terms(self, entry_terms, direction: str,
+                       collect_hops: bool = False):
+        """Attr-term propagation from MULTIPLE seed datasets in one pass.
+
+        The federation's cells/how segment hook (the attribute-level
+        analogue of :meth:`run_masks`): ``entry_terms`` maps dataset id ->
+        lists of ``((B, n_rows) bool, (B, nw) uint32)`` packed terms, and
+        the return is the full reachable terms dict plus per-probe hop
+        traces (``(terms, B, hops)`` with ``collect_hops``, else
+        ``(terms, B)``).  Attr bitplanes live on the per-op walk, so this
+        never routes through the hop-cache.
+        """
+        self.counters["plans"] += 1
+        self.counters["walk"] += 1
+        return Q.attr_propagate_terms_batch(self.index, entry_terms,
+                                            direction,
+                                            collect_hops=collect_hops)
+
     # -- executors (each returns one payload per probe) -------------------------
     def _execute(self, plan: QueryPlan) -> List:
         strategy = self._strategy(plan)

@@ -372,6 +372,37 @@ class ServeEngine:
             result, upstream if upstream is not None else result.request_dataset)
         return qb.rows_batch(rows_batch).run(sess)
 
+    def erasure_impact(self, rows, source: Optional[str] = None,
+                       apply: bool = False):
+        """Deletion-propagation plan for erasing ``rows`` of ``source`` —
+        the serving tier's GDPR entry point.
+
+        ``source`` defaults to the attached upstream boundary dataset;
+        bare names are resolved like lineage targets (serving dataset
+        first, then the upstream member).  The closure crosses every
+        boundary link downstream — an upstream erasure reaches through
+        request batches into recorded responses — and the returned
+        :class:`~repro.provenance.impact.RecomputePlan` lists affected
+        datasets in execution order plus the stale composed relations
+        (member hop-caches AND the catalog's stitched cross-relations).
+        ``apply=True`` drops those stale entries before returning."""
+        from repro.provenance.impact import apply_invalidations, erasure_plan
+
+        if source is None:
+            upstream = getattr(self, "_upstream", None)
+            if upstream is None:
+                raise ValueError(
+                    "no upstream provenance attached; pass source=")
+            ref = qualify(*upstream)
+        else:
+            _, ref = self._lineage_target(source)
+            if "/" not in ref:
+                ref = qualify(self._serve_name, ref)
+        plan = erasure_plan(self.catalog, ref, rows)
+        if apply:
+            apply_invalidations(self.catalog, plan)
+        return plan
+
     # -- serving-tier integration -------------------------------------------------
     def as_backend(self) -> "_EngineBackend":
         """This engine as a :class:`~repro.serve.tier.ServingTier` backend.

@@ -42,6 +42,16 @@ def test_quickstart_example():
 def test_fairness_audit_example():
     out = _run_example("fairness_audit.py")
     assert "all three methods agree" in out
+    assert "impact closure matches the composed relation" in out
+
+
+def test_erasure_audit_example():
+    out = _run_example("erasure_audit.py")
+    assert "RecomputePlan" in out
+    assert "rebuild order:" in out
+    assert "stale cached relations dropped:" in out
+    assert "what-if: zero ingest row 0's income" in out
+    assert "without rerunning the pipeline" in out
 
 
 @pytest.mark.filterwarnings("ignore::DeprecationWarning")

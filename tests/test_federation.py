@@ -233,17 +233,100 @@ def test_cyclic_link_graph_raises():
 
 
 # ===========================================================================
-# Unsupported cross-index plan kinds are LOUD, single-index kinds delegate
+# Cross-index cells / how parity (the PR 9 lift), via-less Q10 stays loud
 # ===========================================================================
-def test_cross_index_unsupported_kinds_raise():
+@pytest.mark.parametrize("seed", SEEDS)
+def test_federated_cells_parity_vs_merged(seed):
+    """Cross-boundary attribute lineage: byte-identical to the merged
+    single-index walk — forward and backward, every dataset, empty probes."""
+    base, specs = _random_specs(seed)
+    merged, ids = _build_merged(base, specs)
+    rng = np.random.default_rng(seed + 3000)
+    cut = int(rng.integers(1, len(specs)))
+    catalog, refs, sink_ref = _build_federated(base, specs, cut)
+    src_ref = refs[0]
+    n_src = merged.datasets["src"].n_rows
+    c_src = merged.datasets["src"].n_cols
+    n_sink = merged.datasets[ids[-1]].n_rows
+    c_sink = merged.datasets[ids[-1]].n_cols
+
+    for rows in tqp._row_probes(rng, n_src):
+        attrs = sorted(set(rng.integers(0, c_src, 2).tolist()))
+        want = tqp.ref_q3(merged, "src", rows, attrs, ids[-1])
+        got = (prov(catalog).source(src_ref).rows(rows).attrs(attrs)
+               .forward().to(sink_ref).run())
+        np.testing.assert_array_equal(got, want)
+    rows = [int(rng.integers(0, n_sink))]
+    attrs = list(range(c_sink))
+    for j, ref in enumerate(refs):
+        want = tqp.ref_q4(merged, ids[-1], rows, attrs, ids[j])
+        got = (prov(catalog).source(sink_ref).rows(rows).attrs(attrs)
+               .backward().to(ref).run())
+        np.testing.assert_array_equal(got, want)
+
+
+def _strip_links(hops):
+    return [(h.op_name, h.category, h.n_records) for h in hops
+            if h.category != "link"]
+
+
+@pytest.mark.parametrize("seed", SEEDS[:4])
+def test_federated_how_parity_vs_merged(seed):
+    """Record+how and cells+how across the boundary: answers byte-identical
+    to merged; hop traces match the merged walk op-for-op (op name,
+    category, contribution count) once the synthetic boundary-crossing
+    ``category="link"`` hop is dropped."""
+    base, specs = _random_specs(seed)
+    merged, ids = _build_merged(base, specs)
+    rng = np.random.default_rng(seed + 4000)
+    cut = int(rng.integers(1, len(specs)))
+    catalog, refs, sink_ref = _build_federated(base, specs, cut)
+    n_src = merged.datasets["src"].n_rows
+    n_sink = merged.datasets[ids[-1]].n_rows
+
+    rows = sorted(set(rng.integers(0, n_sink, 3).tolist()))
+    want_recs, want_hops = (prov(merged).source(ids[-1]).rows(rows)
+                            .backward().to("src").how().run())
+    got_recs, got_hops = (prov(catalog).source(sink_ref).rows(rows)
+                          .backward().to(refs[0]).how().run())
+    np.testing.assert_array_equal(got_recs, want_recs)
+    assert _strip_links(got_hops) == _strip_links(want_hops)
+    assert sum(1 for h in got_hops if h.category == "link") == 1
+
+    rows = [int(rng.integers(0, n_src))]
+    want_recs, want_hops = (prov(merged).source("src").rows(rows)
+                            .forward().to(ids[-1]).how().run())
+    got_recs, got_hops = (prov(catalog).source(refs[0]).rows(rows)
+                          .forward().to(sink_ref).how().run())
+    np.testing.assert_array_equal(got_recs, want_recs)
+    assert _strip_links(got_hops) == _strip_links(want_hops)
+
+    # cells + how: batched, empty probes interleaved
+    c_src = merged.datasets["src"].n_cols
+    probes = [[], [0], sorted(set(rng.integers(0, n_src, 3).tolist()))]
+    want = (prov(merged).source("src").rows_batch(probes)
+            .attrs(list(range(c_src))).forward().to(ids[-1]).how().run())
+    got = (prov(catalog).source(refs[0]).rows_batch(probes)
+           .attrs(list(range(c_src))).forward().to(sink_ref).how().run())
+    for (wc, wh), (gc, gh) in zip(want, got):
+        np.testing.assert_array_equal(gc, wc)
+        assert _strip_links(gh) == _strip_links(wh)
+
+
+def test_federated_cells_diamond_both_links_contribute():
+    merged, sink_id, catalog, sink_ref = _cross_boundary_diamond(1)
+    c_src = merged.datasets["src"].n_cols
+    for rows in ([0], [2, 5]):
+        want = tqp.ref_q3(merged, "src", rows, [0, 1], sink_id)
+        got = (prov(catalog).source("prep/src").rows(rows).attrs([0, 1])
+               .forward().to(sink_ref).run())
+        np.testing.assert_array_equal(got, want)
+    assert c_src == 2
+
+
+def test_cross_index_co_contributory_needs_via():
     base, specs = _random_specs(5)
     catalog, refs, sink_ref = _build_federated(base, specs, 1)
-    with pytest.raises(FederationError, match="cross-index"):
-        (prov(catalog).source(refs[0]).rows([0]).attrs([0])
-         .forward().to(sink_ref).run())
-    with pytest.raises(FederationError, match="cross-index"):
-        (prov(catalog).source(refs[0]).rows([0]).forward().to(sink_ref)
-         .how().run())
     with pytest.raises(FederationError, match="via"):
         (prov(catalog).source(refs[0]).rows([0])
          .co_contributory(sink_ref).run())

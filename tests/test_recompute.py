@@ -2,8 +2,10 @@
 import numpy as np
 import pytest
 
+import pipegen
 from repro.core.pipeline import ProvenanceIndex
-from repro.core.recompute import materialized_frontier, recompute_rows
+from repro.core.recompute import fetch_rows, materialized_frontier, \
+    recompute_rows
 from repro.dataprep.table import Table
 from repro.dataprep.tracked import track
 
@@ -53,3 +55,95 @@ def test_recompute_matches_eager_values(which):
     assert sub.n_rows == len(rows)
     np.testing.assert_allclose(sub.data, truth.data[rows], rtol=1e-6)
     np.testing.assert_array_equal(sub.null, truth.null[rows])
+
+
+# ---------------------------------------------------------------------------
+# Randomized parity: recompute vs a fully materialized build of the SAME
+# spec list (ground truth captured via a record hook at build time)
+# ---------------------------------------------------------------------------
+def _build_with_truth(seed):
+    """pipegen specs applied under a record hook that snapshots EVERY
+    intermediate table — the fully materialized twin recompute must match."""
+    base, specs = pipegen.random_specs(seed)
+    idx = ProvenanceIndex(f"rcpar{seed}")
+    truth = {}
+    idx.add_record_hook(
+        lambda input_ids, output_id, out_table, info, input_tables:
+        truth.__setitem__(output_id, out_table.copy()))
+    cur = track(Table.from_columns({c: v.copy() for c, v in base.items()}),
+                idx, "src")
+    for spec in specs:
+        cur = pipegen.apply_spec(cur, spec, idx)
+    cur.mark_sink()
+    for ds, rec in idx.datasets.items():
+        if rec.is_source:       # add_source fires no hook; tables are kept
+            truth[ds] = rec.table.copy()
+    return idx, truth
+
+
+def _assert_rows_match(sub: Table, truth: Table, rows):
+    assert sub.n_rows == len(rows)
+    assert sub.columns == truth.columns
+    np.testing.assert_array_equal(sub.null, truth.null[rows])
+    ok = ~sub.null
+    np.testing.assert_allclose(sub.data[ok], truth.data[rows][ok],
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_recompute_parity_randomized(seed):
+    idx, truth = _build_with_truth(seed)
+    rng = np.random.default_rng(seed + 1000)
+    for ds, rec in idx.datasets.items():
+        n = rec.n_rows
+        if n == 0:
+            continue
+        rows = sorted(set(rng.integers(0, n, size=min(6, n)).tolist()))
+        # sorted unique probes through recompute_rows
+        _assert_rows_match(recompute_rows(idx, ds, rows), truth[ds], rows)
+        # duplicate + unordered probes through fetch_rows (aligned 1:1)
+        dup = rng.permutation(np.asarray(rows + rows, dtype=np.int64))
+        _assert_rows_match(fetch_rows(idx, ds, dup), truth[ds], dup)
+
+
+def test_recompute_outer_join_right_only_rows():
+    """Outer-join rows with NO left parent (-1 sentinel) assemble entirely
+    from the right side, key column included."""
+    rng = np.random.default_rng(7)
+    idx = ProvenanceIndex("rc-outer")
+    left = track(Table.from_columns({
+        "k": np.array([0, 1, 2], dtype=np.float32),
+        "x": rng.normal(size=3).astype(np.float32)}), idx, "left")
+    right = track(Table.from_columns({
+        "k": np.array([1, 2, 3, 4], dtype=np.float32),
+        "z": rng.normal(size=4).astype(np.float32)}), idx)
+    j = left.join(right, on="k", how="outer")
+    truth = j.table.copy()
+    j.value_transform("x", "scale", factor=1.0).mark_sink()  # j recomputable
+    assert not idx.datasets[j.dataset_id].materialized
+    pairs = np.asarray(idx.ops[idx.producer[j.dataset_id]].info.join_pairs)
+    right_only = np.flatnonzero(pairs[:, 0] < 0)
+    assert right_only.size > 0  # keys 3 and 4 have no left match
+    _assert_rows_match(recompute_rows(idx, j.dataset_id, right_only.tolist()),
+                       truth, right_only.tolist())
+    # vocab survives recompute (was dropped to {} before the JOIN fix)
+    sub = recompute_rows(idx, j.dataset_id, [0, 1])
+    assert set(sub.vocab) == {c for c in truth.vocab if c in truth.columns}
+
+
+def test_recompute_oversample_jitter_regenerated():
+    """Synthetic oversample rows regenerate their jitter from the stored
+    seed — recomputed values equal the captured run bit-for-bit."""
+    rng = np.random.default_rng(11)
+    idx = ProvenanceIndex("rc-jitter")
+    t = track(Table.from_columns({
+        "k": np.arange(20, dtype=np.float32),
+        "x": rng.normal(size=20).astype(np.float32)}), idx, "src")
+    ov = t.oversample(frac=0.5, seed=42, noise=0.2)
+    truth = ov.table.copy()
+    ov.value_transform("x", "scale", factor=1.0).mark_sink()
+    assert not idx.datasets[ov.dataset_id].materialized
+    synth = list(range(20, truth.n_rows))   # rows past n_in are synthetic
+    assert synth
+    sub = recompute_rows(idx, ov.dataset_id, synth)
+    np.testing.assert_array_equal(sub.data, truth.data[synth])
