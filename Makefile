@@ -1,9 +1,9 @@
 PY ?= python
 TIMEOUT ?= 900
 
-.PHONY: test test-fast test-sharded bench-query bench-quick \
+.PHONY: test test-fast test-sharded test-kernels bench-query bench-quick \
         bench-serving bench-serving-quick bench-stream bench-stream-quick \
-        bench-impact bench-impact-quick ci
+        bench-impact bench-impact-quick bench-roofline bench-roofline-quick ci
 
 # tier-1 verify (ROADMAP.md): the whole suite, stop at first failure
 test:
@@ -17,6 +17,12 @@ test-fast:
 	  tests/test_provtensor.py tests/test_schema.py tests/test_queries.py \
 	  tests/test_query_parity.py tests/test_structured.py \
 	  tests/test_compose.py tests/test_recompute.py
+
+# kernel lane: Pallas-vs-oracle parity (interpret mode), the fused
+# batched-walk grid, launch accounting, and calibration round-trips
+test-kernels:
+	timeout $(TIMEOUT) env PYTHONPATH=src $(PY) -m pytest -x -q \
+	  tests/test_kernels.py tests/test_backend_parity.py
 
 # the CI multi-device lane locally: 8 forced host CPU devices so the
 # shard_map collective walkers and mesh integration paths really execute
@@ -58,6 +64,15 @@ bench-impact:
 
 bench-impact-quick:
 	env PYTHONPATH=src $(PY) benchmarks/bench_impact.py --quick
+
+# pod-scale roofline (512 forced host devices) + the MEASURED fused-walk
+# kernels section; --quick skips the mesh lowering and merges only the
+# `kernels` section into BENCH_query.json
+bench-roofline:
+	env PYTHONPATH=src $(PY) -m benchmarks.bench_compose_roofline
+
+bench-roofline-quick:
+	env PYTHONPATH=src $(PY) -m benchmarks.bench_compose_roofline --quick
 
 # mirrors .github/workflows/ci.yml
 ci:

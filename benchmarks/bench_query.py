@@ -811,11 +811,25 @@ def run_backward_probe_microbench(idx, src, sink, quick: bool = False):
 
 
 def _write_trajectory(results: dict) -> None:
-    path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
-                        os.pardir, "BENCH_query.json")
-    with open(os.path.abspath(path), "w") as f:
-        json.dump(results, f, indent=1, default=float)
-    print(f"wrote {os.path.abspath(path)}")
+    """``BENCH_query.json`` is shared: sibling benches (serving / stream /
+    impact / kernels) merge their own sections into it, so carry over any
+    section this bench does not produce instead of overwriting the file
+    wholesale (which silently dropped ``serving`` whenever this bench ran
+    last)."""
+    path = os.path.abspath(os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), os.pardir,
+        "BENCH_query.json"))
+    merged: dict = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                merged = json.load(f)
+        except ValueError:
+            merged = {}
+    merged.update(results)
+    with open(path, "w") as f:
+        json.dump(merged, f, indent=1, default=float)
+    print(f"wrote {path}")
 
 
 if __name__ == "__main__":

@@ -22,6 +22,8 @@ classic matrix-chain dynamic program on the (rows, cols/32-word) dims.
 """
 from __future__ import annotations
 
+import sys
+import warnings
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -39,6 +41,7 @@ __all__ = [
     "op_bitplane",
     "op_csr",
     "op_gather",
+    "resolve_use_pallas",
     "compose_pair",
     "compose_pair_csr",
     "compose_gather",
@@ -53,6 +56,37 @@ __all__ = [
 ]
 
 HAVE_SCIPY = _sp is not None
+
+
+def resolve_use_pallas(use_pallas: Optional[bool]) -> bool:
+    """Resolve the tri-state kernel flag without forcing a jax import.
+
+    ``None`` — the default everywhere above the kernel layer — means
+    "Pallas iff this process already runs on TPU": hosts resolve ``False``
+    without ever importing jax, so numpy-only paths stay jax-free.
+    Explicit ``True`` off-TPU still works (interpret-mode emulation, the
+    parity-test path) but is deprecated as a routing choice — emulation is
+    never the faster backend — and warns.
+    """
+    if use_pallas is None:
+        if "jax" not in sys.modules:
+            return False
+        from repro.kernels import ops as K
+
+        return K.on_tpu()
+    if use_pallas:
+        # the caller wants Pallas kernels, so importing jax costs nothing new
+        from repro.kernels import ops as K
+
+        if not K.on_tpu():
+            warnings.warn(
+                "use_pallas=True off-TPU runs kernels in interpret mode; "
+                "pass use_pallas=None to let the kernel-launch guard pick "
+                "the backend (Pallas on TPU, the jnp oracle elsewhere)",
+                DeprecationWarning,
+                stacklevel=3,
+            )
+    return bool(use_pallas)
 
 
 def path_tensors(index: ProvenanceIndex, src: str, dst: str) -> List[Tuple[OpRecord, int]]:
@@ -232,7 +266,7 @@ def extend_tail(rel, g: np.ndarray, backend: str,
 
 
 def compose_pair(a_bits: np.ndarray, b_bits: np.ndarray, n_mid: int,
-                 use_pallas: Optional[bool] = True) -> np.ndarray:
+                 use_pallas: Optional[bool] = None) -> np.ndarray:
     """(OR,AND)-compose packed relations A (R×mid) · B (mid×C) -> (R×C) packed.
 
     ``a_bits`` packs its columns (mid dim); ``b_bits`` is (mid, C/32).
@@ -287,13 +321,16 @@ def compose_chain(
     index: ProvenanceIndex,
     src: str,
     dst: str,
-    use_pallas: bool = True,
+    use_pallas: Optional[bool] = None,
     optimize: bool = True,
 ) -> np.ndarray:
     """Packed (|src| × |dst|/32) relation bitplane for the whole path.
 
-    ``optimize=True`` applies the matrix-chain DP (associativity); otherwise
-    left-to-right accumulation (the paper's literal chain)."""
+    ``use_pallas=None`` (default) applies the kernel-launch guard — see
+    :func:`resolve_use_pallas`.  ``optimize=True`` applies the matrix-chain
+    DP (associativity); otherwise left-to-right accumulation (the paper's
+    literal chain)."""
+    use_pallas = resolve_use_pallas(use_pallas)
     chain = path_tensors(index, src, dst)
     if not chain:
         n = index.datasets[src].n_rows
@@ -347,7 +384,7 @@ def compose_chain(
 
 
 def dataset_lineage(
-    index: ProvenanceIndex, src: str, dst: str, use_pallas: bool = True
+    index: ProvenanceIndex, src: str, dst: str, use_pallas: Optional[bool] = None
 ) -> np.ndarray:
     """Dense bool (|src|, |dst|) lineage relation for the whole dataset —
     the paper's einsum use case (fairness / consent audits)."""

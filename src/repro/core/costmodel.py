@@ -27,10 +27,17 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import os
 from typing import Dict, List, Optional, Sequence, Tuple
 
 __all__ = [
     "RelStats",
+    "Constants",
+    "active_constants",
+    "set_constants",
+    "reset_constants",
+    "constants_provenance",
+    "maybe_load_calibration",
     "DENSITY_THRESHOLD",
     "CROSS_FALLBACK_MIN_DEMAND",
     "compose_est",
@@ -68,6 +75,120 @@ CROSS_FALLBACK_MIN_DEMAND = 32
 # ops of indexing — the crossover sits near sqrt(1/(32·8)) ≈ 0.06 geometric-
 # mean operand density.  Kept as one named constant so tests/docs can pin it.
 DENSITY_THRESHOLD = 0.06
+
+# Per-device-dispatch overhead (one jit'd oracle call / Pallas launch) — the
+# term the fused batched-walk kernel pays ONCE instead of K×3 times.
+C_LAUNCH_OVERHEAD = 50_000.0
+
+# Machine roofline terms (TPU v5e defaults): shared with
+# benchmarks/bench_compose_roofline.py via Constants so the roofline and the
+# cost model can never disagree about the machine.
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+# VPU: 8 cores x (8,128) lanes x ~940 MHz ~= 1e12 lane-ops/s; each uint32
+# lane-op retires 32 boolean MACs in the bitplane kernel.
+VPU_WORD_OPS = 0.96e12
+
+
+@dataclasses.dataclass(frozen=True)
+class Constants:
+    """One coherent set of cost/roofline constants, with provenance.
+
+    The module-level ``C_*`` literals above stay the uncalibrated defaults
+    (``Constants()`` reproduces them bit-for-bit); ``repro.core.calibrate``
+    fits a measured set on the actual backend and installs it via
+    :func:`set_constants`.  Every cost function in this module reads the
+    ACTIVE set, so one install re-prices the whole router — CostModel,
+    ``ComposedIndex(backend="auto")`` and ``QuerySession._strategy`` all
+    consume it implicitly.
+    """
+
+    c_hop_overhead: float = C_HOP_OVERHEAD
+    c_mask_elem: float = C_MASK_ELEM
+    c_gather: float = C_GATHER
+    c_spmm_overhead: float = C_SPMM_OVERHEAD
+    c_spmm_flop: float = C_SPMM_FLOP
+    c_word_op: float = C_WORD_OP
+    c_probe_overhead: float = C_PROBE_OVERHEAD
+    c_struct_overhead: float = C_STRUCT_OVERHEAD
+    c_take: float = C_TAKE
+    c_stitch_overhead: float = C_STITCH_OVERHEAD
+    c_launch_overhead: float = C_LAUNCH_OVERHEAD
+    density_threshold: float = DENSITY_THRESHOLD
+    # machine roofline terms (satellite of the calibration file)
+    peak_flops: float = PEAK_FLOPS
+    hbm_bw: float = HBM_BW
+    link_bw: float = LINK_BW
+    vpu_word_ops: float = VPU_WORD_OPS
+    # provenance: where these numbers came from
+    source: str = "default"       # "default" | "calibrated"
+    device: str = ""              # device kind the calibration ran on
+    path: str = ""                # calibration file, when source=="calibrated"
+
+    def provenance(self) -> Dict[str, object]:
+        """What ``explain()`` surfaces: which constants decided the routing."""
+        return {
+            "source": self.source,
+            "device": self.device or None,
+            "path": self.path or None,
+            "density_threshold": self.density_threshold,
+            "c_word_op": self.c_word_op,
+            "c_spmm_flop": self.c_spmm_flop,
+            "c_launch_overhead": self.c_launch_overhead,
+        }
+
+
+_ACTIVE = Constants()
+_AUTOLOAD_DONE = False
+
+
+def active_constants() -> Constants:
+    """The constant set every cost function in this module currently reads."""
+    return _ACTIVE
+
+
+def set_constants(constants: Constants) -> None:
+    """Install a constant set (e.g. a calibrated one) module-wide."""
+    global _ACTIVE
+    _ACTIVE = constants
+
+
+def reset_constants() -> None:
+    """Back to the uncalibrated defaults (and re-arm autoload)."""
+    global _ACTIVE, _AUTOLOAD_DONE
+    _ACTIVE = Constants()
+    _AUTOLOAD_DONE = False
+
+
+def constants_provenance() -> Dict[str, object]:
+    return _ACTIVE.provenance()
+
+
+def maybe_load_calibration() -> Constants:
+    """Install constants from the calibration file, if one is present.
+
+    The file path comes from ``$REPRO_CALIBRATION`` (else
+    ``~/.cache/repro/calibration.json``); entries are keyed by device kind
+    (see :mod:`repro.core.calibrate`).  Checked once per process (re-armed
+    by :func:`reset_constants`); with no file, the defaults stay active —
+    routing is bit-for-bit today's.  Never imports jax: host-only sessions
+    stay jax-free.
+    """
+    global _AUTOLOAD_DONE
+    if _AUTOLOAD_DONE or _ACTIVE.source != "default":
+        return _ACTIVE
+    _AUTOLOAD_DONE = True
+    path = os.environ.get("REPRO_CALIBRATION") or os.path.join(
+        os.path.expanduser("~"), ".cache", "repro", "calibration.json")
+    if not os.path.exists(path):
+        return _ACTIVE
+    from repro.core.calibrate import load_constants  # lazy: json/numpy only
+
+    loaded = load_constants(path)
+    if loaded is not None:
+        set_constants(loaded)
+    return _ACTIVE
 
 
 @dataclasses.dataclass(frozen=True)
@@ -151,19 +272,19 @@ def compose_est(a: RelStats, b: RelStats) -> RelStats:
 
 def spmm_cost(a: RelStats, b: RelStats) -> float:
     """CSR (OR,AND) matmul cost: scales with nnz, not dims."""
-    return C_SPMM_OVERHEAD + C_SPMM_FLOP * a.nnz * b.out_degree
+    return _ACTIVE.c_spmm_overhead + _ACTIVE.c_spmm_flop * a.nnz * b.out_degree
 
 
 def bitplane_cost(a: RelStats, b: RelStats) -> float:
     """Packed-bitplane compose cost: dense word ops over (rows, mid, cols/32)."""
     words = a.rows * b.rows * max((b.cols + 31) // 32, 1)
-    return C_WORD_OP * words
+    return _ACTIVE.c_word_op * words
 
 
 def structured_cost(a: RelStats, b: RelStats) -> float:
     """Closed-form gather∘gather compose cost: ONE ``np.take`` over the
     destination dimension — nnz- and density-independent."""
-    return C_STRUCT_OVERHEAD + C_TAKE * b.cols
+    return _ACTIVE.c_struct_overhead + _ACTIVE.c_take * b.cols
 
 
 def union_est(a: RelStats, b: RelStats) -> RelStats:
@@ -194,7 +315,7 @@ def pick_backend(density: float, have_scipy: bool = True) -> str:
     :data:`DENSITY_THRESHOLD`, packed bitplane above it."""
     if not have_scipy:
         return "bitplane"
-    return "bitplane" if density >= DENSITY_THRESHOLD else "csr"
+    return "bitplane" if density >= _ACTIVE.density_threshold else "csr"
 
 
 def plan_chain_stats(stats: Sequence[RelStats], backend: str = "csr",
@@ -276,10 +397,10 @@ def extend_tail_cost(prefix: RelStats, step: RelStats,
         return structured_cost(prefix, step)
     if pick_backend(prefix.density, have_scipy) == "csr":
         moved = prefix.nnz * (step.nnz / max(step.rows, 1))
-        return C_SPMM_OVERHEAD + C_TAKE * (moved + step.cols)
+        return _ACTIVE.c_spmm_overhead + _ACTIVE.c_take * (moved + step.cols)
     words = prefix.rows * (max((prefix.cols + 31) // 32, 1)
                            + max((step.cols + 31) // 32, 1))
-    return C_WORD_OP * words
+    return _ACTIVE.c_word_op * words
 
 
 def extend_vs_recompose(prefix: RelStats, tail: Sequence[RelStats],
@@ -328,10 +449,10 @@ def relation_probe_cost(rel: Optional[RelStats], n_probes: int,
     plus the selected-row gather.  (:meth:`CostModel.probe_cost` and the
     federated cross-route gate share this one pricing.)"""
     if rel is None:
-        return C_PROBE_OVERHEAD
-    return (C_PROBE_OVERHEAD
-            + C_MASK_ELEM * n_probes * (rel.rows + rel.cols)
-            + C_GATHER * n_probes * max(probe_rows, 1.0) * rel.out_degree)
+        return _ACTIVE.c_probe_overhead
+    return (_ACTIVE.c_probe_overhead
+            + _ACTIVE.c_mask_elem * n_probes * (rel.rows + rel.cols)
+            + _ACTIVE.c_gather * n_probes * max(probe_rows, 1.0) * rel.out_degree)
 
 
 def cross_route_choose(route_stats: Sequence[Optional[RelStats]],
@@ -374,7 +495,7 @@ def cross_route_choose(route_stats: Sequence[Optional[RelStats]],
         # links price as one stitch of the live mask stack; member hops as a
         # composed-relation probe (what segment execution actually runs)
         if s.structured:
-            segments_ns += C_STITCH_OVERHEAD + C_MASK_ELEM * n_probes * (
+            segments_ns += _ACTIVE.c_stitch_overhead + _ACTIVE.c_mask_elem * n_probes * (
                 s.rows + s.cols)
         else:
             segments_ns += relation_probe_cost(s, n_probes)
@@ -412,6 +533,9 @@ class CostModel:
     def __init__(self, index, have_scipy: Optional[bool] = None) -> None:
         from repro.core.compose import HAVE_SCIPY
 
+        # first model in the process installs calibrated constants when a
+        # calibration file exists; a no-op (bit-for-bit defaults) otherwise
+        maybe_load_calibration()
         self.index = index
         self.have_scipy = HAVE_SCIPY if have_scipy is None else have_scipy
         self._chains: Dict[Tuple[str, str], Optional[List[RelStats]]] = {}
@@ -466,9 +590,9 @@ class CostModel:
         frontier = max(probe_rows, 1.0)
         cost = 0.0
         for s in chain:
-            cost += (C_HOP_OVERHEAD
-                     + C_MASK_ELEM * n_probes * s.cols
-                     + C_GATHER * n_probes * frontier * s.out_degree)
+            cost += (_ACTIVE.c_hop_overhead
+                     + _ACTIVE.c_mask_elem * n_probes * s.cols
+                     + _ACTIVE.c_gather * n_probes * frontier * s.out_degree)
             frontier = min(float(s.cols), frontier * max(s.out_degree, 1e-9))
             frontier = max(frontier, 1.0)
         return cost

@@ -94,6 +94,7 @@ from repro.core.compose import (
     extend_tail_csr,
     op_bitplane,
     op_csr,
+    resolve_use_pallas,
 )
 from repro.core.costmodel import (
     CostModel,
@@ -165,10 +166,14 @@ class ComposedIndex:
         index: ProvenanceIndex,
         memory_budget_bytes: int = 64 << 20,
         backend: Optional[str] = None,
-        use_pallas: bool = False,
+        use_pallas: Optional[bool] = None,
         spill=None,
         extend_eager: bool = True,
     ) -> None:
+        # tri-state kernel flag: None -> Pallas iff on TPU (jax-free on
+        # hosts), so the default backend stays "auto" off-TPU bit-for-bit
+        # and becomes all-bitplane where the kernels actually pay off
+        use_pallas = resolve_use_pallas(use_pallas)
         if backend is None:
             backend = "bitplane" if use_pallas else "auto"
         if backend not in ("auto", "csr", "bitplane"):

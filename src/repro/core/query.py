@@ -62,6 +62,7 @@ __all__ = [
     "backward_record_masks",
     "forward_record_masks_batch",
     "backward_record_masks_batch",
+    "fused_walk_record_masks_batch",
     "record_masks_terms_batch",
     "attr_propagate_terms_batch",
     "q1_forward",
@@ -233,6 +234,90 @@ def backward_record_masks_batch(
     if collect_hops:
         return masks, hops
     return masks
+
+
+# ---------------------------------------------------------------------------
+# Fused-kernel record walk (ROADMAP item 4)
+# ---------------------------------------------------------------------------
+def fused_walk_record_masks_batch(
+    index: ProvenanceIndex,
+    src: str,
+    dst: str,
+    rows_batch,
+    direction: str = "fwd",
+    use_pallas: Optional[bool] = None,
+    max_plane_bytes: int = 256 << 20,
+) -> Optional[np.ndarray]:
+    """``(B, n_dst)`` bool answered in ONE kernel launch, or None to fall back.
+
+    The fused :func:`repro.kernels.ops.batched_walk` replaces the per-op
+    pass only when the ``src``→``dst`` dataflow is ONE linear chain: every
+    op-slot that both receives mass from the upstream end and can pass it
+    on to the downstream end must lie on the
+    :func:`~repro.core.compose.path_tensors` chain.  Diamonds, self-joins
+    and side entrances fail that audit and return None — the caller falls
+    back to the full per-op walker (which sums over all paths).  None is
+    also returned when the square-padded plane stack the fused kernel
+    streams would exceed ``max_plane_bytes``.
+
+    ``direction="bwd"`` probes ``src`` (the downstream end) and answers at
+    ``dst`` through the transposed planes of the reversed chain; forward
+    and backward both return exactly the target dataset's mask stack of
+    the corresponding full walker.  ``use_pallas=None`` is the
+    kernel-launch guard: the fused Pallas kernel on TPU, the one-dispatch
+    jnp oracle elsewhere.
+    """
+    from repro.core.compose import path_tensors
+
+    up, down = (src, dst) if direction == "fwd" else (dst, src)
+    if up not in index.datasets or down not in index.datasets:
+        return None
+    try:
+        chain = path_tensors(index, up, down)
+    except KeyError:
+        return None
+    stack = _as_mask_batch(rows_batch, index.datasets[src].n_rows)
+    if not chain:  # src == dst: the seed is the answer
+        return stack.astype(bool, copy=True)
+
+    # linearity audit: one forward and one backward closure over the
+    # (topologically ordered) op list find every op-slot carrying mass from
+    # `up` toward `down`; the chain is exact iff it covers all of them
+    reach = {up}
+    for op in index.ops:
+        if any(d in reach for d in op.input_ids):
+            reach.add(op.output_id)
+    feeds = {down}
+    for op in reversed(index.ops):
+        if op.output_id in feeds:
+            feeds.update(op.input_ids)
+    relevant = {
+        (op.op_id, k)
+        for op in index.ops
+        for k, in_id in enumerate(op.input_ids)
+        if in_id in reach and op.output_id in feeds
+    }
+    if relevant != {(op.op_id, slot) for op, slot in chain}:
+        return None
+
+    # the fused kernel square-pads every hop to one common dim — cap the
+    # streamed plane stack before materializing any bitplane
+    n_max = max(
+        max(op.tensor.n_in[slot], op.tensor.n_out) for op, slot in chain
+    )
+    if len(chain) * n_max * n_max // 8 > max_plane_bytes:
+        return None
+
+    if direction == "fwd":
+        planes = [op.tensor.bitplane_fwd(slot) for op, slot in chain]
+    else:
+        planes = [op.tensor.bitplane_bwd(slot) for op, slot in reversed(chain)]
+
+    from repro.kernels import ops as K
+
+    mask_bits = pack_bitplane(np.ascontiguousarray(stack))
+    out_bits, _counts = K.batched_walk(mask_bits, planes, use_pallas=use_pallas)
+    return unpack_bitplane(np.asarray(out_bits), index.datasets[dst].n_rows)
 
 
 # ---------------------------------------------------------------------------

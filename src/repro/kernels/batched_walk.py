@@ -1,0 +1,137 @@
+"""Fused K-hop batched-walk Pallas kernel (ROADMAP item 4).
+
+A batched Q1/Q2 record probe over a linear op chain used to cost K×3 kernel
+launches: per hop one select-OR bitplane contraction (``bitmatmul``), one
+``bitset_rank`` for the per-probe frontier sizes, and one ``lineage_gather``
+to materialize the frontier — with the mask stack bouncing through HBM (and
+host memory, off-TPU) between every launch.  This kernel fuses the whole
+chain into ONE launch:
+
+* the probe mask lives in a VMEM scratch tile (``cur``) for the entire walk
+  — it is read from HBM once and written once, never in between;
+* the K relation bitplanes are zero-padded to one common square dim and
+  stacked into a single ``(K, N, N/32)`` operand whose ``(1, bk, Nw)``
+  blocks stream through the grid's innermost dimension — Pallas
+  double-buffers the next plane block behind the current contraction;
+* each hop's select-OR + contraction accumulates into a second scratch tile
+  (``nxt``); at the hop's last contraction block the per-probe popcount
+  (the fused ``bitset_rank``) is recorded and the frontier swaps into
+  ``cur`` for the next hop.
+
+Zero padding is inert under the (OR, AND) semiring — a padded row/column
+can never set a bit — so one common padded dim is exact.  Index
+materialization (the gather role) is a host-side ``flatnonzero`` over the
+returned packed frontier, identical for the fused and unfused paths.
+
+Grid ``(B/bb, K, N/bk)``: batch blocks are independent ("parallel"); hops
+and contraction blocks carry the scratch accumulator ("arbitrary").
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# jax renamed TPUCompilerParams -> CompilerParams; support both installs.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+__all__ = ["batched_walk_kernel", "batched_walk_pallas"]
+
+
+def batched_walk_kernel(mask_ref, planes_ref, out_ref, counts_ref,
+                        cur_ref, nxt_ref, *, block_k: int):
+    """One (bb,) batch block × one hop × one bk-slice of the contraction."""
+    hop = pl.program_id(1)
+    ks = pl.program_id(2)
+    n_hops = pl.num_programs(1)
+    nks = pl.num_programs(2)
+
+    @pl.when((hop == 0) & (ks == 0))
+    def _load_mask():
+        # one HBM read per batch block; the mask then stays VMEM-resident
+        cur_ref[...] = mask_ref[...]
+
+    @pl.when(ks == 0)
+    def _clear_frontier():
+        nxt_ref[...] = jnp.zeros_like(nxt_ref)
+
+    kw = block_k // 32
+    a_words = cur_ref[:, pl.dslice(ks * kw, kw)]  # (bb, bk/32) uint32
+    bb = a_words.shape[0]
+    # Unpack this slice of the resident mask: (bb, bk/32, 32) -> (bb, bk).
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, 1, 32), 2)
+    bits = (a_words[:, :, None] >> shifts) & jnp.uint32(1)
+    bits = bits.reshape(bb, block_k)
+    # 0 -> 0x00000000, 1 -> 0xFFFFFFFF lane masks (the select-OR).
+    sel = jnp.uint32(0) - bits  # (bb, bk)
+
+    b_words = planes_ref[0]  # (bk, Nw) uint32 — streamed, double-buffered
+    tmp = sel[:, :, None] & b_words[None, :, :]  # (bb, bk, Nw)
+    partial = jax.lax.reduce(tmp, jnp.uint32(0), jax.lax.bitwise_or, (1,))
+    nxt_ref[...] = nxt_ref[...] | partial
+
+    @pl.when(ks == nks - 1)
+    def _hop_done():
+        frontier = nxt_ref[...]
+        # fused bitset_rank: per-probe frontier size for this hop
+        pops = jax.lax.population_count(frontier).astype(jnp.int32)
+        counts_ref[0, :] = jnp.sum(pops, axis=1)
+        # the frontier becomes the next hop's resident mask
+        cur_ref[...] = frontier
+
+        @pl.when(hop == n_hops - 1)
+        def _final():
+            out_ref[...] = frontier
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_b", "block_k", "interpret")
+)
+def batched_walk_pallas(
+    mask_bits: jax.Array,
+    planes: jax.Array,
+    *,
+    block_b: int = 8,
+    block_k: int = 256,
+    interpret: bool = False,
+) -> tuple:
+    """Fused walk over pre-padded operands.
+
+    ``mask_bits`` is (B, N/32); ``planes`` is (K, N, N/32) — every hop
+    padded to the one square dim N.  B % block_b == 0, N % block_k == 0.
+    Returns ``(out_bits (B, N/32) uint32, counts (K, B) int32)``.
+    ``repro.kernels.ops.batched_walk`` handles padding/stacking/unpadding.
+    """
+    b, nw = mask_bits.shape
+    k, n, nw2 = planes.shape
+    assert nw == nw2 and nw * 32 == n, (nw, nw2, n)
+    assert b % block_b == 0 and n % block_k == 0
+
+    grid = (b // block_b, k, n // block_k)
+    return pl.pallas_call(
+        functools.partial(batched_walk_kernel, block_k=block_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, nw), lambda i, j, ks: (i, 0)),
+            pl.BlockSpec((1, block_k, nw), lambda i, j, ks: (j, ks, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, nw), lambda i, j, ks: (i, 0)),
+            pl.BlockSpec((1, block_b), lambda i, j, ks: (j, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nw), jnp.uint32),
+            jax.ShapeDtypeStruct((k, b), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_b, nw), jnp.uint32),  # cur: resident mask
+            pltpu.VMEM((block_b, nw), jnp.uint32),  # nxt: hop accumulator
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")
+        ),
+        interpret=interpret,
+    )(mask_bits, planes)

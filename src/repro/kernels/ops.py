@@ -15,13 +15,44 @@ import numpy as np
 from repro.kernels.bitmatmul import bitmatmul_pallas
 from repro.kernels.lineage_gather import lineage_gather_pallas
 from repro.kernels.bitset_rank import bitset_rank_pallas
+from repro.kernels.batched_walk import batched_walk_pallas
 from repro.kernels import ref
 
-__all__ = ["bitmatmul", "bitplane_probe", "lineage_gather", "bitset_rank", "on_tpu"]
+__all__ = [
+    "bitmatmul",
+    "bitplane_probe",
+    "lineage_gather",
+    "bitset_rank",
+    "batched_walk",
+    "batched_walk_unfused",
+    "on_tpu",
+    "launch_counts",
+    "reset_launch_counts",
+]
 
 
 def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+# -- launch accounting --------------------------------------------------------
+# Every public kernel entry counts ONE device dispatch (the Pallas launch on
+# TPU, the equivalent jit'd oracle call elsewhere).  bench_compose_roofline
+# asserts the fused walk's K×3 -> 1 launch reduction off these counters.
+_LAUNCHES: dict = {}
+
+
+def _note_launch(name: str) -> None:
+    _LAUNCHES[name] = _LAUNCHES.get(name, 0) + 1
+
+
+def launch_counts() -> dict:
+    """{kernel entry: dispatch count} since the last reset."""
+    return dict(_LAUNCHES)
+
+
+def reset_launch_counts() -> None:
+    _LAUNCHES.clear()
 
 
 def _pad_to(x: jax.Array, axis: int, multiple: int, value=0) -> jax.Array:
@@ -53,6 +84,7 @@ def bitmatmul(
     kernel-launch guard: the Pallas kernel on TPU, the oracle elsewhere
     (interpret-mode emulation is never the cheaper backend on host).
     """
+    _note_launch("bitmatmul")
     a_bits = jnp.asarray(a_bits, dtype=jnp.uint32)
     b_bits = jnp.asarray(b_bits, dtype=jnp.uint32)
     m, kw = a_bits.shape
@@ -101,12 +133,19 @@ def lineage_gather(
     max_deg: int,
     block_q: int = 128,
     interpret: bool | None = None,
-    use_pallas: bool = True,
+    use_pallas: bool | None = True,
 ):
-    """Batched CSR probe -> (Q, max_deg) padded neighbor table."""
+    """Batched CSR probe -> (Q, max_deg) padded neighbor table.
+
+    ``use_pallas=None`` applies the same kernel-launch guard as
+    :func:`bitmatmul`: Pallas on TPU, the jnp oracle elsewhere.
+    """
+    _note_launch("lineage_gather")
     row_ptr = jnp.asarray(row_ptr, dtype=jnp.int32)
     col_idx = jnp.asarray(col_idx, dtype=jnp.int32)
     queries = jnp.asarray(queries, dtype=jnp.int32)
+    if use_pallas is None:
+        use_pallas = on_tpu()
     if interpret is None:
         interpret = not on_tpu()
     q = queries.shape[0]
@@ -130,11 +169,18 @@ def bitset_rank(
     *,
     block_q: int = 128,
     interpret: bool | None = None,
-    use_pallas: bool = True,
+    use_pallas: bool | None = True,
 ):
-    """Batched inclusive rank over one packed bitset."""
+    """Batched inclusive rank over one packed bitset.
+
+    ``use_pallas=None`` applies the same kernel-launch guard as
+    :func:`bitmatmul`: Pallas on TPU, the jnp oracle elsewhere.
+    """
+    _note_launch("bitset_rank")
     words = jnp.asarray(words, dtype=jnp.uint32)
     positions = jnp.asarray(positions, dtype=jnp.int32)
+    if use_pallas is None:
+        use_pallas = on_tpu()
     if interpret is None:
         interpret = not on_tpu()
     if not use_pallas:
@@ -144,3 +190,129 @@ def bitset_rank(
     p_p = _pad_to(positions, 0, block_q, value=0)
     out = bitset_rank_pallas(words, p_p, block_q=block_q, interpret=interpret)
     return out[:q]
+
+
+# ---------------------------------------------------------------------------
+# Fused K-hop batched walk (ROADMAP item 4)
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("n_hops",))
+def _batched_walk_oracle(mask_bits, *planes, n_hops: int):
+    # one jit'd fold over the whole chain == one device dispatch
+    return ref.batched_walk_ref(mask_bits, planes)
+
+
+def _check_walk_chain(mask_bits, planes) -> None:
+    kw = mask_bits.shape[1]
+    for j, plane in enumerate(planes):
+        rows = plane.shape[0]
+        if not ((kw - 1) * 32 < rows <= kw * 32):
+            raise ValueError(
+                f"hop {j}: frontier packs {kw * 32} cols, plane has {rows} rows"
+            )
+        kw = plane.shape[1]
+
+
+def batched_walk(
+    mask_bits,
+    planes,
+    *,
+    block_b: int = 8,
+    block_k: int = 256,
+    interpret: bool | None = None,
+    use_pallas: bool | None = None,
+):
+    """K-hop batched record probe in ONE kernel launch.
+
+    ``mask_bits`` (B, ⌈n_0/32⌉) packs B probe sets over the chain's entry
+    dim; ``planes[j]`` is hop j's packed (n_j, ⌈n_{j+1}/32⌉) relation
+    bitplane.  Returns ``(out_bits (B, ⌈n_K/32⌉) uint32, counts (K, B)
+    int32)`` — the final frontier plus each hop's per-probe frontier size
+    (the rank term the per-hop path pays a separate ``bitset_rank`` for).
+
+    ``use_pallas=None`` (the default) applies the kernel-launch guard: the
+    fused Pallas kernel on TPU, the jit'd jnp oracle (still one dispatch)
+    elsewhere.  For the Pallas path every hop dim is zero-padded to one
+    common square dim (inert under (OR, AND)) and the planes stack into a
+    single streamed operand; see :mod:`repro.kernels.batched_walk`.
+    """
+    _note_launch("batched_walk")
+    mask_bits = jnp.asarray(mask_bits, dtype=jnp.uint32)
+    planes = [jnp.asarray(p, dtype=jnp.uint32) for p in planes]
+    if not planes:
+        raise ValueError("batched_walk needs at least one hop")
+    _check_walk_chain(mask_bits, planes)
+    if use_pallas is None:
+        use_pallas = on_tpu()
+    if interpret is None:
+        interpret = not on_tpu()
+    b = mask_bits.shape[0]
+    k = len(planes)
+    out_w = planes[-1].shape[1]
+    if not use_pallas:
+        out, counts = _batched_walk_oracle(mask_bits, *planes, n_hops=k)
+        return out, counts
+
+    # One common padded dim: every hop's rows AND packed cols fit inside it.
+    n_pad = 32  # at least one word
+    for p in planes:
+        n_pad = max(n_pad, p.shape[0], p.shape[1] * 32)
+    n_pad = max(n_pad, mask_bits.shape[1] * 32)
+    n_pad = -(-n_pad // block_k) * block_k
+    nw = n_pad // 32
+    mask_p = _pad_to(_pad_to(mask_bits, 0, block_b), 1, nw)
+    stacked = jnp.zeros((k, n_pad, nw), dtype=jnp.uint32)
+    for j, p in enumerate(planes):
+        stacked = stacked.at[j, : p.shape[0], : p.shape[1]].set(p)
+    out_p, counts_p = batched_walk_pallas(
+        mask_p, stacked, block_b=block_b, block_k=block_k, interpret=interpret
+    )
+    return out_p[:b, :out_w], counts_p[:, :b]
+
+
+def batched_walk_unfused(
+    mask_bits,
+    planes,
+    *,
+    max_deg: int | None = None,
+    interpret: bool | None = None,
+    use_pallas: bool | None = None,
+):
+    """The per-hop baseline the fused kernel replaces: K×3 launches.
+
+    Per hop: :func:`bitplane_probe` (select-OR contraction),
+    :func:`bitset_rank` over the flattened frontier bitset (per-probe
+    frontier sizes as rank differences at row boundaries), and
+    :func:`lineage_gather` materializing the frontier's padded neighbor
+    table from a host-rebuilt CSR — with the mask stack round-tripping
+    through the host between every launch, which is exactly the traffic
+    the fused kernel keeps resident in VMEM.  Returns the same
+    ``(out_bits, counts)`` as :func:`batched_walk` (byte-identical).
+    """
+    cur = np.asarray(jnp.asarray(mask_bits, dtype=jnp.uint32))
+    b = cur.shape[0]
+    all_counts = []
+    for plane in planes:
+        cur = np.asarray(
+            bitplane_probe(cur, plane, use_pallas=use_pallas,
+                           interpret=interpret)
+        )
+        w = cur.shape[1]
+        ends = np.arange(1, b + 1, dtype=np.int32) * (w * 32) - 1
+        ranks = np.asarray(
+            bitset_rank(cur.reshape(-1), ends, use_pallas=use_pallas,
+                        interpret=interpret)
+        )
+        counts = np.diff(np.concatenate([[0], ranks])).astype(np.int32)
+        all_counts.append(counts)
+        # host-side CSR rebuild of the frontier — the per-hop tax the fused
+        # kernel's resident mask avoids entirely
+        row_ptr = np.zeros(b + 1, dtype=np.int32)
+        np.cumsum(counts, out=row_ptr[1:])
+        col_idx = np.concatenate(
+            [np.flatnonzero(ref.unpack_bits(cur[i : i + 1], w * 32)[0])
+             for i in range(b)]
+        ).astype(np.int32) if row_ptr[-1] else np.zeros(0, dtype=np.int32)
+        md = max_deg if max_deg is not None else max(int(counts.max()), 1)
+        lineage_gather(row_ptr, col_idx, np.arange(b, dtype=np.int32),
+                       max_deg=md, use_pallas=use_pallas, interpret=interpret)
+    return jnp.asarray(cur), jnp.asarray(np.stack(all_counts, axis=0))

@@ -15,6 +15,7 @@ __all__ = [
     "bitmatmul_ref",
     "lineage_gather_ref",
     "bitset_rank_ref",
+    "batched_walk_ref",
 ]
 
 
@@ -57,6 +58,24 @@ def lineage_gather_ref(
     gather_idx = starts[:, None] + lane
     seg = col_idx[gather_idx]
     return jnp.where(lane < (ends - starts)[:, None], seg, jnp.int32(-1))
+
+
+def batched_walk_ref(mask_bits: jax.Array, planes) -> tuple:
+    """K-hop fused-walk oracle: fold :func:`bitmatmul_ref` over the chain.
+
+    ``mask_bits`` (B, ⌈n_0/32⌉) packs B probe sets; ``planes[j]`` is the
+    packed (n_j, ⌈n_{j+1}/32⌉) relation of hop j.  Returns the final packed
+    frontier (B, ⌈n_K/32⌉) and the per-hop frontier sizes (K, B) int32 —
+    the rank term of the per-hop rank/gather the fused kernel subsumes.
+    """
+    cur = mask_bits
+    counts = []
+    for plane in planes:
+        cur = bitmatmul_ref(cur, plane)
+        counts.append(
+            jax.lax.population_count(cur).astype(jnp.int32).sum(axis=1)
+        )
+    return cur, jnp.stack(counts, axis=0)
 
 
 def bitset_rank_ref(words: jax.Array, positions: jax.Array) -> jax.Array:

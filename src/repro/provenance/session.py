@@ -108,11 +108,16 @@ class QuerySession:
         composed=None,
         *,
         use_hopcache: bool = True,
+        fused_walk: Optional[bool] = None,
         hopcache_min_batch: Optional[int] = None,
     ) -> None:
         self.index = index
         self.composed = composed if composed is not None else index.composed()
         self.use_hopcache = use_hopcache
+        # tri-state like use_pallas: None -> fused kernel walk iff on TPU
+        # (keeps host routing bit-for-bit and numpy-only paths jax-free);
+        # True forces it everywhere (the parity-test path), False disables
+        self.fused_walk = fused_walk
         if hopcache_min_batch is not None:
             warnings.warn(
                 "hopcache_min_batch is deprecated: the QuerySession now "
@@ -130,6 +135,7 @@ class QuerySession:
             "plans": 0,
             "walk": 0,
             "hopcache": 0,
+            "fused_walk": 0,
             "meta": 0,
             "fused_groups": 0,
             "fused_plans": 0,
@@ -233,7 +239,24 @@ class QuerySession:
                  or "uncomposed"}
                 for p in pairs
             ]
+        # where the routing constants came from (default vs calibration file)
+        from repro.core.costmodel import constants_provenance
+
+        out["constants"] = constants_provenance()
         return out
+
+    def _fused_walk_on(self) -> bool:
+        """Resolve the tri-state ``fused_walk`` flag; the None default means
+        "fused kernel iff on TPU" and never imports jax on hosts."""
+        if self.fused_walk is not None:
+            return bool(self.fused_walk)
+        import sys
+
+        if "jax" not in sys.modules:
+            return False
+        from repro.kernels import ops as K
+
+        return K.on_tpu()
 
     # -- execution -------------------------------------------------------------
     def run(self, plan: QueryPlan):
@@ -330,6 +353,14 @@ class QuerySession:
                     plan.rows, plan.source, plan.target)
             return self.composed.probe_backward(
                 plan.rows, plan.source, plan.target)
+        if self._fused_walk_on():
+            fused = Q.fused_walk_record_masks_batch(
+                self.index, plan.source, plan.target, plan.rows,
+                plan.direction,
+            )
+            if fused is not None:  # non-linear chains fall through to the walk
+                self.counters["fused_walk"] += 1
+                return fused
         walker = (
             Q.forward_record_masks_batch
             if plan.direction == "fwd"

@@ -1,14 +1,26 @@
 """Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracle.
 
-All three kernels are integer/boolean — assertions are EXACT equality.
+All kernels are integer/boolean — assertions are EXACT equality.
 """
 import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
 
-pytest.importorskip("hypothesis", reason="property tests need hypothesis")
-from hypothesis import given, settings, strategies as st
+try:  # hypothesis is a dev extra: only the property tests skip without it
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - environment-dependent
+    def given(*_a, **_k):
+        return lambda f: pytest.mark.skip(reason="hypothesis not installed")(f)
+
+    def settings(*_a, **_k):
+        return lambda f: f
+
+    class _NullStrategies:
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _NullStrategies()
 
 from repro.kernels import ops as K
 from repro.kernels import ref as R
@@ -127,3 +139,248 @@ def test_bitset_rank_property(bits, seed):
     cum = np.concatenate([[0], np.cumsum(np.asarray(bits, int))])
     want = np.where(pos >= 0, cum[np.clip(pos, -1, len(bits) - 1) + 1], 0)
     np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# batched_walk: fused K-hop record probe (ROADMAP item 4)
+# ---------------------------------------------------------------------------
+def _random_chain(rng, n0, hops, density=0.1):
+    """Packed planes for a K-hop chain with NON-multiple-of-32 random dims."""
+    dims = [n0] + [int(rng.integers(5, 90)) for _ in range(hops)]
+    planes = [R.pack_bits(jnp.asarray(
+        rng.random((dims[j], dims[j + 1])) < density)) for j in range(hops)]
+    return dims, planes
+
+
+@pytest.mark.parametrize("hops", [1, 2, 3, 4, 5, 6])
+@pytest.mark.parametrize("density", [0.02, 0.25])
+def test_batched_walk_pallas_parity(hops, density):
+    rng = np.random.default_rng(hops * 100 + int(density * 100))
+    n0 = int(rng.integers(5, 90))  # deliberately not a multiple of 32
+    dims, planes = _random_chain(rng, n0, hops, density)
+    B = 7
+    mask = R.pack_bits(jnp.asarray(rng.random((B, n0)) < 0.3))
+    got_out, got_cnt = K.batched_walk(mask, planes, use_pallas=True,
+                                      interpret=True, block_b=4, block_k=64)
+    want_out, want_cnt = R.batched_walk_ref(mask, planes)
+    np.testing.assert_array_equal(np.asarray(got_out), np.asarray(want_out))
+    np.testing.assert_array_equal(np.asarray(got_cnt), np.asarray(want_cnt))
+    # counts really are the per-hop frontier sizes
+    assert np.asarray(got_cnt).shape == (hops, B)
+
+
+def test_batched_walk_empty_mask():
+    rng = np.random.default_rng(3)
+    _, planes = _random_chain(rng, 40, 3)
+    mask = jnp.zeros((5, 2), dtype=jnp.uint32)  # 40 cols -> 2 words, all zero
+    out, cnt = K.batched_walk(mask, planes, use_pallas=True, interpret=True,
+                              block_b=4, block_k=64)
+    assert not np.asarray(out).any()
+    assert not np.asarray(cnt).any()
+
+
+def test_batched_walk_oracle_guard_matches_pallas():
+    """use_pallas=None resolves to the oracle off-TPU and must answer
+    byte-identically to the interpret-mode Pallas kernel."""
+    rng = np.random.default_rng(11)
+    _, planes = _random_chain(rng, 33, 4)
+    mask = R.pack_bits(jnp.asarray(rng.random((6, 33)) < 0.3))
+    o_out, o_cnt = K.batched_walk(mask, planes, use_pallas=None)
+    p_out, p_cnt = K.batched_walk(mask, planes, use_pallas=True,
+                                  interpret=True, block_b=2, block_k=32)
+    np.testing.assert_array_equal(np.asarray(o_out), np.asarray(p_out))
+    np.testing.assert_array_equal(np.asarray(o_cnt), np.asarray(p_cnt))
+
+
+def test_batched_walk_chain_mismatch_raises():
+    rng = np.random.default_rng(0)
+    a = R.pack_bits(jnp.asarray(rng.random((4, 40)) < 0.2))
+    bad = R.pack_bits(jnp.asarray(rng.random((90, 10)) < 0.2))  # 90 != 40
+    with pytest.raises(ValueError):
+        K.batched_walk(a, [bad])
+    with pytest.raises(ValueError):
+        K.batched_walk(a, [])
+
+
+def test_batched_walk_launch_reduction():
+    """The tentpole contract: a K-hop batched probe is ONE dispatch fused
+    vs exactly 3 per hop unfused, with byte-identical results."""
+    rng = np.random.default_rng(21)
+    hops = 5
+    _, planes = _random_chain(rng, 50, hops)
+    mask = R.pack_bits(jnp.asarray(rng.random((8, 50)) < 0.2))
+    K.reset_launch_counts()
+    f_out, f_cnt = K.batched_walk(mask, planes, use_pallas=None)
+    assert K.launch_counts() == {"batched_walk": 1}
+    K.reset_launch_counts()
+    u_out, u_cnt = K.batched_walk_unfused(mask, planes, use_pallas=None)
+    lc = K.launch_counts()
+    assert sum(lc.values()) == 3 * hops, lc
+    assert lc == {"bitmatmul": hops, "bitset_rank": hops,
+                  "lineage_gather": hops}
+    np.testing.assert_array_equal(np.asarray(f_out), np.asarray(u_out))
+    np.testing.assert_array_equal(np.asarray(f_cnt), np.asarray(u_cnt))
+    K.reset_launch_counts()
+
+
+@given(st.integers(1, 4), st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_batched_walk_property(hops, seed):
+    rng = np.random.default_rng(seed)
+    n0 = int(rng.integers(1, 70))
+    dims, planes = _random_chain(rng, n0, hops)
+    B = int(rng.integers(1, 9))
+    mask = R.pack_bits(jnp.asarray(rng.random((B, n0)) < 0.3))
+    got_out, got_cnt = K.batched_walk(mask, planes, use_pallas=True,
+                                      interpret=True, block_b=2, block_k=32)
+    want_out, want_cnt = R.batched_walk_ref(mask, planes)
+    np.testing.assert_array_equal(np.asarray(got_out), np.asarray(want_out))
+    np.testing.assert_array_equal(np.asarray(got_cnt), np.asarray(want_cnt))
+
+
+# ---------------------------------------------------------------------------
+# fused walk over real pipelines: query-layer + session routing parity
+# ---------------------------------------------------------------------------
+def test_fused_walk_record_masks_parity_pipegen():
+    """Fused walker vs the full per-op walkers on randomized pipelines
+    (outer joins / appends with -1 sentinels included), both directions.
+    None (non-linear subgraph) is a legal answer; a mask is not allowed to
+    disagree."""
+    import pipegen
+    from repro.core import query as Q
+
+    fused_hits = 0
+    for seed in range(12):
+        idx, sink, rng = pipegen.random_pipeline(seed)
+        n_src = idx.datasets["src"].n_rows
+        n_dst = idx.datasets[sink].n_rows
+        B = 4
+        rows_b = rng.random((B, n_src)) < 0.3
+        ref_m = Q.forward_record_masks_batch(idx, "src", rows_b).get(
+            sink, np.zeros((B, n_dst), bool))
+        got = Q.fused_walk_record_masks_batch(idx, "src", sink, rows_b, "fwd")
+        if got is not None:
+            fused_hits += 1
+            np.testing.assert_array_equal(got, ref_m)
+        rows_d = rng.random((B, n_dst)) < 0.3
+        refb = Q.backward_record_masks_batch(idx, sink, rows_d).get(
+            "src", np.zeros((B, n_src), bool))
+        gotb = Q.fused_walk_record_masks_batch(idx, sink, "src", rows_d, "bwd")
+        if gotb is not None:
+            np.testing.assert_array_equal(gotb, refb)
+    assert fused_hits > 0  # the linearity audit must accept real chains
+
+
+def test_fused_walk_rejects_diamond():
+    """path_tensors picks ONE path through a diamond; the linearity audit
+    must refuse to fuse it (the full walker sums both branches)."""
+    import pipegen
+    from repro.core import query as Q
+
+    idx, sink = pipegen.diamond_pipeline(0)
+    n = idx.datasets["src"].n_rows
+    rows = np.zeros((2, n), dtype=bool)
+    rows[:, 0] = True
+    assert Q.fused_walk_record_masks_batch(idx, "src", sink, rows, "fwd") is None
+
+
+def test_fused_walk_identity_pair():
+    import pipegen
+    from repro.core import query as Q
+
+    idx, sink, rng = pipegen.random_pipeline(1)
+    n = idx.datasets["src"].n_rows
+    rows = rng.random((3, n)) < 0.4
+    got = Q.fused_walk_record_masks_batch(idx, "src", "src", rows, "fwd")
+    np.testing.assert_array_equal(got, rows)
+
+
+def test_session_fused_walk_routing_parity():
+    """QuerySession(fused_walk=True) answers byte-identically to the plain
+    walk and bumps the fused_walk counter when the chain fuses."""
+    import pipegen
+    from repro.provenance import prov
+    from repro.provenance.session import QuerySession
+
+    for seed in (0, 5, 9):
+        idx, sink, rng = pipegen.random_pipeline(seed)
+        n = idx.datasets["src"].n_rows
+        rows_b = rng.random((4, n)) < 0.3
+        s_on = QuerySession(idx, fused_walk=True, use_hopcache=False)
+        s_off = QuerySession(idx, fused_walk=False, use_hopcache=False)
+        plan = prov(idx).source("src").rows_batch(rows_b).forward().to(sink).plan()
+        got = s_on.run(plan)
+        want = s_off.run(plan)
+        assert len(got) == len(want)
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(g, w)
+        assert s_off.counters["fused_walk"] == 0
+
+
+# ---------------------------------------------------------------------------
+# calibration: measure -> fit -> persist -> load round-trip
+# ---------------------------------------------------------------------------
+def test_calibration_round_trip(tmp_path):
+    from repro.core import calibrate, costmodel
+
+    path = str(tmp_path / "calibration.json")
+    try:
+        fitted = calibrate.calibrate(path=path, quick=True, install=False)
+        assert fitted.source == "calibrated"
+        assert fitted.c_word_op > 0 and fitted.c_spmm_flop > 0
+        assert 1e-4 <= fitted.density_threshold <= 0.5
+        loaded = calibrate.load_constants(path)
+        assert loaded is not None
+        assert loaded.device == fitted.device
+        assert loaded.c_word_op == pytest.approx(fitted.c_word_op)
+        assert loaded.density_threshold == pytest.approx(fitted.density_threshold)
+        prov = loaded.provenance()
+        assert prov["source"] == "calibrated"
+        assert prov["path"] == str(tmp_path / "calibration.json")
+
+        # installing calibrated constants moves the router's crossover
+        costmodel.set_constants(loaded)
+        assert costmodel.active_constants().density_threshold == \
+            pytest.approx(fitted.density_threshold)
+        assert costmodel.pick_backend(loaded.density_threshold * 2) == "bitplane"
+        assert costmodel.pick_backend(loaded.density_threshold / 2) == "csr"
+    finally:
+        costmodel.reset_constants()
+
+
+def test_calibration_absent_file_keeps_defaults(tmp_path, monkeypatch):
+    """No calibration file -> bit-for-bit default constants and routing."""
+    from repro.core import calibrate, costmodel
+
+    monkeypatch.setenv("REPRO_CALIBRATION", str(tmp_path / "nope.json"))
+    try:
+        costmodel.reset_constants()
+        costmodel.maybe_load_calibration()
+        c = costmodel.active_constants()
+        assert c.source == "default"
+        assert c.density_threshold == costmodel.DENSITY_THRESHOLD
+        assert c.c_word_op == costmodel.C_WORD_OP
+        assert costmodel.constants_provenance()["source"] == "default"
+        assert calibrate.load_constants(str(tmp_path / "nope.json")) is None
+    finally:
+        costmodel.reset_constants()
+
+
+def test_calibration_autoload_via_costmodel(tmp_path, monkeypatch):
+    """CostModel.__init__ autoloads $REPRO_CALIBRATION once per process."""
+    import pipegen
+    from repro.core import calibrate, costmodel
+    from repro.core.costmodel import CostModel
+
+    path = str(tmp_path / "calibration.json")
+    monkeypatch.setenv("REPRO_CALIBRATION", path)
+    try:
+        fitted = calibrate.calibrate(path=path, quick=True, install=False)
+        costmodel.reset_constants()  # re-arm the once-per-process autoload
+        idx, sink, rng = pipegen.random_pipeline(2)
+        CostModel(idx)
+        act = costmodel.active_constants()
+        assert act.source == "calibrated"
+        assert act.c_word_op == pytest.approx(fitted.c_word_op)
+    finally:
+        costmodel.reset_constants()
